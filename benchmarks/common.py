@@ -1,0 +1,69 @@
+"""Shared benchmark utilities.
+
+Scale knobs come from env so CI/smoke runs stay fast:
+  BENCH_ROWS      lineorder rows (default 2_000_000 ~ 150 MB columnar)
+  BENCH_REPEATS   timing repeats (default 3, best-of)
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Callable, Dict, List
+
+import numpy as np
+
+from repro.core import OptimizedEngine, OptimizeOptions, OrdinaryEngine
+from repro.etl import BUILDERS, KettleEngine
+from repro.etl.ssb import generate
+
+BENCH_ROWS = int(os.environ.get("BENCH_ROWS", 2_000_000))
+BENCH_REPEATS = int(os.environ.get("BENCH_REPEATS", 3))
+
+_DATA_CACHE: Dict[int, object] = {}
+
+
+def ssb_data(rows: int = BENCH_ROWS):
+    if rows not in _DATA_CACHE:
+        _DATA_CACHE[rows] = generate(lineorder_rows=rows)
+    return _DATA_CACHE[rows]
+
+
+def best_of(fn: Callable[[], float], repeats: int = BENCH_REPEATS) -> float:
+    return min(fn() for _ in range(max(1, repeats)))
+
+
+def run_ordinary(qname: str, data, chunk_rows: int = 262_144):
+    qf = BUILDERS[qname](data)
+    run = OrdinaryEngine(qf.flow, chunk_rows=chunk_rows).run()
+    return run, qf
+
+
+def run_optimized(qname: str, data, **opts):
+    qf = BUILDERS[qname](data)
+    run = OptimizedEngine(qf.flow, OptimizeOptions(**opts)).run()
+    return run, qf
+
+
+def run_kettle(qname: str, data, chunk_rows: int = 262_144, mt_threads=None):
+    qf = BUILDERS[qname](data)
+    run = KettleEngine(qf.flow, chunk_rows=chunk_rows,
+                       mt_threads=mt_threads).run()
+    return run, qf
+
+
+def activity_costs_from_sequential(qname: str, data, num_splits: int = 8):
+    """Algorithm 3 line 2: run the partitioned dataflow in non-pipeline
+    fashion and return per-activity busy time of the MAIN execution tree
+    (the source tree carries the lookups/filter — the paper's T1)."""
+    qf = BUILDERS[qname](data)
+    run = OptimizedEngine(qf.flow, OptimizeOptions(
+        num_splits=num_splits, pipelined=False,
+        concurrent_trees=False)).run()
+    t1 = run.trees[0]
+    costs = {name: run.activity_times[name] for name in t1}
+    return costs, run
+
+
+def emit(rows: List[str]) -> None:
+    for r in rows:
+        print(r)

@@ -1,0 +1,53 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline markdown tables from
+the dry-run artifacts.
+
+  PYTHONPATH=src python -m benchmarks.experiments_tables > /tmp/tables.md
+"""
+from __future__ import annotations
+
+from .roofline import load
+
+
+def dryrun_table(mesh: str) -> list:
+    out = [f"### Mesh {mesh}",
+           "",
+           "| arch | shape | kind | compile s | args GiB | peak GiB (CPU-reported) | peak GiB (TPU-corrected lower bound) | collectives (count by kind) |",
+           "|---|---|---|---|---|---|---|---|"]
+    for rec in load(mesh):
+        m = rec["memory"]
+        r = rec["roofline"]
+        cc = r.get("collective_count_by_kind", {})
+        ccs = " ".join(f"{k.split('-')[-1][:4] if '-' in k else k[:4]}:"
+                       f"{int(v)}" for k, v in sorted(cc.items()))
+        out.append(
+            f"| {rec['arch']} | {rec['shape']} | {rec['kind']} "
+            f"| {rec['compile_s']:.0f} "
+            f"| {m['argument_bytes']/2**30:.2f} "
+            f"| {m['peak_bytes_per_device']/2**30:.2f} "
+            f"| {m.get('tpu_corrected_peak_bytes', 0)/2**30:.2f} "
+            f"| {ccs} |")
+    return out
+
+
+def roofline_table(mesh: str = "16x16") -> list:
+    out = ["| arch | shape | t_comp ms | t_mem ms | t_coll ms | bottleneck "
+           "| useful FLOPs frac | roofline frac |",
+           "|---|---|---|---|---|---|---|---|"]
+    for rec in load(mesh):
+        r = rec["roofline"]
+        out.append(
+            f"| {rec['arch']} | {rec['shape']} "
+            f"| {r['t_compute_s']*1e3:.1f} | {r['t_memory_s']*1e3:.1f} "
+            f"| {r['t_collective_s']*1e3:.1f} | {r['bottleneck']} "
+            f"| {r['useful_flops_fraction']:.3f} "
+            f"| {r['roofline_fraction']:.3f} |")
+    return out
+
+
+if __name__ == "__main__":
+    print("## Dry-run")
+    for mesh in ("16x16", "2x16x16"):
+        print("\n".join(dryrun_table(mesh)))
+        print()
+    print("## Roofline (single-pod)")
+    print("\n".join(roofline_table("16x16")))

@@ -1,0 +1,29 @@
+"""Figure 13 — CPU usage vs number of pipelines for 2/4/6/8 cores
+(simulated on measured Q4.1 activity costs; paper boots maxcpus=n).
+
+Emits CSV: cores,m,avg_cpu_usage
+"""
+from __future__ import annotations
+
+from repro.core.simulate import cpu_usage_curve
+
+from .common import activity_costs_from_sequential, ssb_data
+
+DEGREES = [1, 2, 4, 8, 16, 32]
+
+
+def run() -> list:
+    data = ssb_data()
+    costs, _ = activity_costs_from_sequential("Q4.1", data)
+    per_act = list(costs.values())
+    out = ["fig13.cores,m,avg_cpu_usage"]
+    for cores in (2, 4, 6, 8):
+        curve = cpu_usage_curve(per_act, DEGREES, cores=cores, t0=0.002,
+                                switch_cost=0.004)
+        for m in DEGREES:
+            out.append(f"fig13.{cores},{m},{curve[m]:.3f}")
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

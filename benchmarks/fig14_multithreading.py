@@ -1,0 +1,34 @@
+"""Figure 14 — inside-component multithreading speedup (supplier lookup made
+the bottleneck; threads 1..16; cores 2/4/6/8).
+
+The real mt path is validated for equality in tests; the speedup CURVE is
+simulated from the measured bottleneck/other split (1-core container).
+
+Emits CSV: cores,threads,speedup
+"""
+from __future__ import annotations
+
+from repro.core.simulate import multithreading_curve
+
+from .common import activity_costs_from_sequential, ssb_data
+
+THREADS = [1, 2, 4, 8, 12, 16]
+
+
+def run() -> list:
+    data = ssb_data()
+    costs, _ = activity_costs_from_sequential("Q4.1", data)
+    bottleneck = costs.get("lookup_supplier", 0.0)
+    other = sum(costs.values()) - bottleneck
+    out = ["fig14.cores,threads,speedup"]
+    for cores in (2, 4, 6, 8):
+        curve = multithreading_curve(bottleneck, other, THREADS,
+                                     cores=cores, parallel_fraction=0.95,
+                                     switch_cost=0.02)
+        for t in THREADS:
+            out.append(f"fig14.{cores},{t},{curve[t]:.3f}")
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,105 @@
+"""Dry-run 'profiler': rank collectives and memory traffic in a stored
+compiled HLO artifact (the hypothesis-forming tool for §Perf iterations).
+
+  PYTHONPATH=src python -m benchmarks.inspect_hlo <arch> <shape> [mesh] [tag]
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+import zstandard
+
+from repro.launch.hlo_cost import (_CALLS_RE, _BODY_RE, COLLECTIVE_KINDS,
+                                   HloCostWalker, _collective_cost,
+                                   _while_trip, shape_elems_bytes)
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+
+
+def load_hlo(arch: str, shape: str, mesh: str = "16x16", tag: str = ""):
+    suffix = f"_{tag}" if tag else ""
+    path = os.path.join(ARTIFACT_DIR, f"{arch}_{shape}_{mesh}{suffix}.hlo.zst")
+    with open(path, "rb") as f:
+        return zstandard.ZstdDecompressor().decompress(f.read()).decode()
+
+
+def top_collectives(hlo: str, n_partitions: int = 256, top: int = 12):
+    w = HloCostWalker(hlo, n_partitions)
+    items = []
+
+    def walk(name, mult, stack=()):
+        comp = w.comps.get(name)
+        if comp is None or name in stack:
+            return
+        for ins in comp.instrs:
+            op = ins.opcode
+            base = op[:-6] if op.endswith("-start") else op
+            if base in COLLECTIVE_KINDS:
+                _, wire = _collective_cost(comp, ins, base, n_partitions,
+                                           walker=w)
+                m = re.search(r'op_name="([^"]*)"', ins.attrs)
+                items.append((wire * mult, base, ins.shape[:48], mult,
+                              (m.group(1) if m else "")[-78:]))
+            elif op == "while":
+                b = _BODY_RE.search(ins.attrs)
+                if b:
+                    walk(b.group(1), mult * _while_trip(w, ins),
+                         stack + (name,))
+            elif op == "fusion":
+                m = _CALLS_RE.search(ins.attrs)
+                if m:
+                    walk(m.group(1), mult, stack + (name,))
+
+    walk("__entry__", 1.0)
+    items.sort(reverse=True)
+    out = []
+    total = sum(i[0] for i in items)
+    for wire, kind, shp, mult, on in items[:top]:
+        out.append(f"{wire/1e9:9.2f} GB {kind:19s} x{mult:<5g} {shp:50s} {on}")
+    out.append(f"{total/1e9:9.2f} GB TOTAL wire ({len(items)} collective sites)")
+    return out
+
+
+def top_memory(hlo: str, n_partitions: int = 256, top: int = 12):
+    w = HloCostWalker(hlo, n_partitions)
+    items = []
+
+    def walk(name, mult, stack=()):
+        comp = w.comps.get(name)
+        if comp is None or name in stack:
+            return
+        for ins in comp.instrs:
+            if ins.opcode == "while":
+                b = _BODY_RE.search(ins.attrs)
+                if b:
+                    walk(b.group(1), mult * _while_trip(w, ins),
+                         stack + (name,))
+                continue
+            b = w.instr_bytes(comp, ins)
+            if b > 0:
+                m = re.search(r'op_name="([^"]*)"', ins.attrs)
+                items.append((b * mult, ins.opcode, ins.shape[:44], mult,
+                              (m.group(1) if m else "")[-74:]))
+
+    walk("__entry__", 1.0)
+    items.sort(reverse=True)
+    out = []
+    total = sum(i[0] for i in items)
+    for byts, op, shp, mult, on in items[:top]:
+        out.append(f"{byts/1e9:9.2f} GB {op:22s} x{mult:<5g} {shp:46s} {on}")
+    out.append(f"{total/1e9:9.2f} GB TOTAL hbm traffic")
+    return out
+
+
+if __name__ == "__main__":
+    arch, shape = sys.argv[1], sys.argv[2]
+    mesh = sys.argv[3] if len(sys.argv) > 3 else "16x16"
+    tag = sys.argv[4] if len(sys.argv) > 4 else ""
+    hlo = load_hlo(arch, shape, mesh, tag)
+    npart = 512 if mesh == "2x16x16" else 256
+    print(f"=== top collectives: {arch} x {shape} [{mesh}] ===")
+    print("\n".join(top_collectives(hlo, npart)))
+    print(f"=== top HBM traffic: {arch} x {shape} [{mesh}] ===")
+    print("\n".join(top_memory(hlo, npart)))

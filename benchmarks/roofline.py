@@ -1,0 +1,53 @@
+"""§Roofline generator — reads the dry-run artifacts and prints the
+per-(arch x shape x mesh) three-term roofline table.
+
+Emits CSV:
+  arch,shape,mesh,t_compute_ms,t_memory_ms,t_collective_ms,bottleneck,
+  useful_flops_fraction,roofline_fraction,peak_gib,tpu_corrected_peak_gib
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+
+
+def load(mesh: str = None, tag: str = ""):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(ARTIFACT_DIR, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if mesh and rec["mesh"] != mesh:
+            continue
+        if rec.get("tag", "") != tag:
+            continue
+        recs.append(rec)
+    return recs
+
+
+def run(mesh: str = "16x16", tag: str = "") -> list:
+    out = ["roofline.arch,shape,mesh,t_compute_ms,t_memory_ms,"
+           "t_collective_ms,bottleneck,useful_flops_frac,roofline_frac,"
+           "peak_gib,tpu_corrected_peak_gib"]
+    for rec in load(mesh, tag):
+        r = rec["roofline"]
+        m = rec["memory"]
+        out.append(
+            f"roofline.{rec['arch']},{rec['shape']},{rec['mesh']},"
+            f"{r['t_compute_s']*1e3:.2f},{r['t_memory_s']*1e3:.2f},"
+            f"{r['t_collective_s']*1e3:.2f},{r['bottleneck']},"
+            f"{r['useful_flops_fraction']:.3f},"
+            f"{r['roofline_fraction']:.3f},"
+            f"{m['peak_bytes_per_device']/2**30:.2f},"
+            f"{m.get('tpu_corrected_peak_bytes', m['peak_bytes_per_device'])/2**30:.2f}")
+    if len(out) == 1:
+        out.append("roofline.NO_ARTIFACTS_RUN_DRYRUN_FIRST,,,,,,,,,,")
+    return out
+
+
+if __name__ == "__main__":
+    import sys
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "16x16"
+    print("\n".join(run(mesh)))

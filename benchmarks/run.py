@@ -1,0 +1,51 @@
+"""Benchmark aggregator — one section per paper table/figure + the roofline
+table.  Prints CSV lines (name,...).
+
+  PYTHONPATH=src python -m benchmarks.run            # all
+  PYTHONPATH=src python -m benchmarks.run fig12 roofline
+Scale via env: BENCH_ROWS (default 2,000,000), BENCH_REPEATS.
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+from . import (fig12_pipeline_speedup, fig13_cpu_usage,
+               fig14_multithreading, fig15_optimization,
+               fig16_fig17_vs_kettle, kernel_bench, roofline,
+               theorem1_accuracy)
+
+SECTIONS = {
+    "fig12": fig12_pipeline_speedup.run,
+    "fig13": fig13_cpu_usage.run,
+    "fig14": fig14_multithreading.run,
+    "fig15": fig15_optimization.run,
+    "fig1617": fig16_fig17_vs_kettle.run,
+    "theorem1": theorem1_accuracy.run,
+    "kernels": kernel_bench.run,
+    "roofline": lambda: roofline.run("16x16") + roofline.run("2x16x16"),
+}
+
+
+def main() -> int:
+    names = [a for a in sys.argv[1:] if a in SECTIONS] or list(SECTIONS)
+    failures = []
+    for name in names:
+        print(f"# === {name} ===")
+        t0 = time.time()
+        try:
+            for line in SECTIONS[name]():
+                print(line)
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+        print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+    if failures:
+        print("# FAILED sections:", failures)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,36 @@
+"""Batched serving example: prefill + decode with donated KV caches (the
+shared caching scheme applied to inference) on a smoke-scale model.
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+import time
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.serve import BatchedServer, Request
+
+
+def main():
+    cfg = get_config("mixtral-8x7b", smoke=True)   # MoE + sliding window
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(2, cfg.vocab_size, 24
+                                        ).astype(np.int32),
+                    max_new=16, t_submit=time.time())
+            for i in range(8)]
+    server = BatchedServer(cfg, batch=4, temperature=0.0)
+    t0 = time.time()
+    done = server.run(reqs)
+    wall = time.time() - t0
+    n_tok = sum(len(r.out_tokens) for r in done)
+    print(f"served {len(done)} requests / {n_tok} tokens in {wall:.2f}s")
+    for r in done[:3]:
+        print(f"  req {r.rid}: {r.out_tokens[:8]}...")
+    # same-prompt determinism (greedy)
+    assert done[0].out_tokens != [] and len(done) == 8
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

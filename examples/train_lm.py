@@ -1,0 +1,60 @@
+"""End-to-end training driver: train a ~100M-parameter LM for a few hundred
+steps on CPU, with every substrate layer engaged —
+
+  ETL input pipeline (core engine: shared caches + Algorithm-2 prefetch)
+  -> jit'd train_step (microbatch accumulation, donated buffers)
+  -> async CheckpointManager + StragglerWatchdog
+  -> mid-run checkpoint-restart (simulated failure) proving elastic resume.
+
+  PYTHONPATH=src python examples/train_lm.py [--steps 200] [--dim 512]
+"""
+import argparse
+import shutil
+import tempfile
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.train import train_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--dim", type=int, default=512)
+    ap.add_argument("--layers", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=256)
+    args = ap.parse_args()
+
+    # ~100M params: 8L x d512 + 32k vocab (tok_embed+head = 2x 16.4M)
+    cfg = get_config("stablelm-3b", smoke=True).replace(
+        name="lm-100m", n_layers=args.layers, d_model=args.dim,
+        n_heads=8, n_kv_heads=8, d_ff=4 * args.dim, vocab_size=32_000,
+        grad_accum=2)
+    print(f"model: {cfg.param_count()/1e6:.1f}M params")
+
+    ckpt_dir = tempfile.mkdtemp(prefix="train_lm_ckpt_")
+    try:
+        half = args.steps // 2
+        print(f"— phase 1: steps 0..{half} (then simulated failure) —")
+        r1 = train_loop(cfg, steps=half, batch=args.batch,
+                        seq_len=args.seq_len, ckpt_dir=ckpt_dir,
+                        ckpt_every=max(half // 4, 1), log_every=20)
+        print(f"— phase 2: restart from checkpoint, continue to "
+              f"{args.steps} —")
+        r2 = train_loop(cfg, steps=args.steps, batch=args.batch,
+                        seq_len=args.seq_len, ckpt_dir=ckpt_dir,
+                        resume=True, log_every=20)
+        first = r1["losses"][0]
+        last = r2["losses"][-1]
+        print(f"loss {first:.3f} -> {last:.3f} over {args.steps} steps "
+              f"({r2['tokens_per_s']:.0f} tok/s phase-2)")
+        assert last < first - 0.5, "loss should drop substantially"
+        print("OK")
+    finally:
+        shutil.rmtree(ckpt_dir, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+# The paper's primary contribution: component classification (§3),
+# execution-tree partitioning (Algorithm 1), shared caching scheme (§3),
+# pipeline parallelization (Algorithm 2 + Theorem 1), inside-component
+# multithreading (§4.3), and the dataflow task planner (§2).
+from .component import (BlockComponent, Component, ComponentType, FnComponent,
+                        SemiBlockComponent, SinkComponent, SourceComponent)
+from .engine import (EngineRun, OptimizedEngine, OptimizeOptions,
+                     OrdinaryEngine)
+from .graph import Dataflow
+from .metadata import MetadataStore
+from .partitioner import ExecutionTree, ExecutionTreeGraph, partition
+from .pipeline import TreePipeline
+from .planner import (PipelinePlan, build_plan, choose_degree,
+                      theorem1_m_star)
+from .scheduler import plan_schedule, run_tree_graph
+from .shared_cache import (GLOBAL_CACHE_STATS, CacheStats, SharedCache,
+                           concat_caches)
+from .simulate import (SimResult, cpu_usage_curve, multithreading_curve,
+                       simulate_tree, speedup_curve)
+
+__all__ = [
+    "BlockComponent", "Component", "ComponentType", "FnComponent",
+    "SemiBlockComponent", "SinkComponent", "SourceComponent",
+    "EngineRun", "OptimizedEngine", "OptimizeOptions", "OrdinaryEngine",
+    "Dataflow", "MetadataStore",
+    "ExecutionTree", "ExecutionTreeGraph", "partition",
+    "TreePipeline",
+    "PipelinePlan", "build_plan", "choose_degree", "theorem1_m_star",
+    "plan_schedule", "run_tree_graph",
+    "GLOBAL_CACHE_STATS", "CacheStats", "SharedCache", "concat_caches",
+    "SimResult", "cpu_usage_curve", "multithreading_curve", "simulate_tree",
+    "speedup_curve",
+]

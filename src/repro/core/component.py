@@ -1,0 +1,180 @@
+"""Dataflow components and the paper's §3 classification.
+
+- ROW_SYNCHRONIZED: row-at-a-time processing; mutates a shared cache in place
+  (filter, lookup, splitter, expression, format converter, projector, ...).
+- BLOCK: accumulates ALL rows from a SINGLE upstream before any output
+  (aggregations: sum/avg/min/max, sort, ...).  Roots a new execution tree.
+- SEMI_BLOCK: accumulates rows from MULTIPLE upstreams until a condition is
+  met (union, merge, ...).  Roots a new execution tree.
+- SOURCE / SINK: dataflow entry (emits caches) / exit (consumes caches).
+  Sources behave like roots; sinks are row-synchronized consumers.
+"""
+from __future__ import annotations
+
+import enum
+import threading
+import time
+from typing import Callable, Dict, Iterable, Iterator, List, Optional, Sequence
+
+import numpy as np
+
+from .shared_cache import SharedCache, concat_caches
+
+
+class ComponentType(enum.Enum):
+    SOURCE = "source"
+    ROW_SYNC = "row-synchronized"
+    SEMI_BLOCK = "semi-block"
+    BLOCK = "block"
+    SINK = "sink"
+
+    @property
+    def roots_tree(self) -> bool:
+        """Block and semi-block components root a new execution tree
+        (Algorithm 1); sources do too, by virtue of in-degree 0."""
+        return self in (ComponentType.BLOCK, ComponentType.SEMI_BLOCK)
+
+    @property
+    def streams(self) -> bool:
+        return self in (ComponentType.ROW_SYNC, ComponentType.SINK)
+
+
+class Component:
+    """Base class.  An *activity* (the paper uses component/activity
+    interchangeably) is the `process_*` method of a component.
+
+    Thread-safety protocol (paper Algorithm 2 lines 6-11): each component owns
+    a `busy` flag + Condition; pipeline consumer threads serialize access so a
+    component processes one shared cache at a time, in split order when
+    `order_sensitive` is set.
+    """
+
+    ctype: ComponentType = ComponentType.ROW_SYNC
+    #: True if downstream semantics require split arrival order (e.g. before a
+    #: Merge) — the pipeline then hands caches to this component in order.
+    order_sensitive: bool = False
+
+    def __init__(self, name: str):
+        self.name = name
+        self.busy = False
+        self.cond = threading.Condition()
+        self.next_split = 0          # order enforcement for order_sensitive
+        # instrumentation
+        self.rows_in = 0
+        self.rows_out = 0
+        self.busy_time = 0.0
+        self.calls = 0
+
+    # ------------------------------------------------------------ row-sync
+    def process(self, cache: SharedCache, shared: bool = True) -> List[SharedCache]:
+        """Process one cache.  With ``shared=True`` the component MUST mutate
+        in place (shared caching scheme); with ``shared=False`` the engine has
+        already handed it a private copy.  Returns the list of output caches
+        (usually the same object; splitters return several)."""
+        t0 = time.perf_counter()
+        n_in = cache.n
+        out = self._run(cache)
+        self.busy_time += time.perf_counter() - t0
+        self.calls += 1
+        self.rows_in += n_in
+        self.rows_out += sum(c.n for c in out)
+        return out
+
+    def _run(self, cache: SharedCache) -> List[SharedCache]:  # pragma: no cover
+        raise NotImplementedError
+
+    # --------------------------------------------------- inside-component MT
+    #: Override to True on heavy components that support §4.3 multithreading.
+    supports_multithreading: bool = False
+
+    def process_range(self, cache: SharedCache, rows: slice) -> Dict[str, np.ndarray]:
+        """Process a sub-range of rows (inside-component parallelization).
+        Returns the output columns for that range; the engine's row-order
+        synchronizer merges ranges back in input order."""
+        raise NotImplementedError
+
+    # ------------------------------------------------------------ block/semi
+    def new_state(self):
+        """Per-execution accumulation state for block/semi-block components."""
+        return []
+
+    def accumulate(self, state, cache: SharedCache) -> None:
+        t0 = time.perf_counter()
+        state.append(cache)
+        self.busy_time += time.perf_counter() - t0
+        self.rows_in += cache.n
+
+    def finish(self, state) -> SharedCache:
+        """Consume accumulated caches, emit the result as one cache."""
+        raise NotImplementedError
+
+    # ------------------------------------------------------------------ misc
+    def reset_stats(self) -> None:
+        self.rows_in = self.rows_out = 0
+        self.busy_time = 0.0
+        self.calls = 0
+        self.next_split = 0
+
+    def spec(self) -> Dict[str, str]:
+        """Metadata-store component specification."""
+        return {"name": self.name, "type": self.ctype.value,
+                "class": type(self).__name__}
+
+    def __repr__(self) -> str:
+        return f"{type(self).__name__}({self.name!r})"
+
+
+class SourceComponent(Component):
+    """Emits the input row set as a stream of caches (chunks)."""
+
+    ctype = ComponentType.SOURCE
+
+    def chunks(self, chunk_rows: int) -> Iterator[SharedCache]:  # pragma: no cover
+        raise NotImplementedError
+
+    def total_rows(self) -> int:  # pragma: no cover
+        raise NotImplementedError
+
+
+class SinkComponent(Component):
+    """Consumes caches (writes results).  Row-synchronized semantics."""
+
+    ctype = ComponentType.SINK
+
+    def _run(self, cache: SharedCache) -> List[SharedCache]:
+        self.write(cache)
+        return [cache]
+
+    def write(self, cache: SharedCache) -> None:  # pragma: no cover
+        raise NotImplementedError
+
+
+class BlockComponent(Component):
+    """Accumulate-all-then-emit (single upstream)."""
+
+    ctype = ComponentType.BLOCK
+
+    def finish(self, state) -> SharedCache:
+        raise NotImplementedError
+
+
+class SemiBlockComponent(Component):
+    """Accumulate from multiple upstreams, then emit."""
+
+    ctype = ComponentType.SEMI_BLOCK
+
+    def finish(self, state) -> SharedCache:
+        raise NotImplementedError
+
+
+class FnComponent(Component):
+    """Row-synchronized component from a plain function
+    ``fn(cache) -> None`` (mutates in place)."""
+
+    def __init__(self, name: str, fn: Callable[[SharedCache], None]):
+        super().__init__(name)
+        self.fn = fn
+
+    def _run(self, cache: SharedCache) -> List[SharedCache]:
+        self.fn(cache)
+        return [cache]

@@ -1,0 +1,213 @@
+"""Execution engines.
+
+`OrdinaryEngine` — the paper's baseline (Figure 3): every component owns a
+separate output cache; on EVERY edge the rows are physically copied into the
+downstream component's input cache; execution is sequential.
+
+`OptimizedEngine` — the paper's framework: Algorithm-1 partitioning into
+execution trees, shared caching inside each tree (zero copies), Algorithm-2
+pipeline parallelization per tree, §4.3 inside-component multithreading, and
+concurrent execution of independent trees (the dataflow task planner).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from .component import (Component, ComponentType, SinkComponent,
+                        SourceComponent)
+from .graph import Dataflow
+from .partitioner import ExecutionTreeGraph, partition
+from .pipeline import TreePipeline
+from .planner import PipelinePlan, build_plan, choose_degree
+from .shared_cache import GLOBAL_CACHE_STATS, SharedCache
+
+
+@dataclass
+class EngineRun:
+    wall_time: float
+    copies: int
+    bytes_copied: int
+    engine: str
+    activity_times: Dict[str, float] = field(default_factory=dict)
+    trees: Optional[List[List[str]]] = None
+    plans: Dict[int, PipelinePlan] = field(default_factory=dict)
+
+    def summary(self) -> str:
+        return (f"[{self.engine}] wall={self.wall_time:.3f}s copies={self.copies} "
+                f"bytes_copied={self.bytes_copied/1e6:.1f}MB")
+
+
+# --------------------------------------------------------------------------
+#  Ordinary engine (baseline)
+# --------------------------------------------------------------------------
+class OrdinaryEngine:
+    """Separate input/output caches, copy on every edge, sequential."""
+
+    def __init__(self, flow: Dataflow, chunk_rows: int = 65536):
+        self.flow = flow
+        self.chunk_rows = chunk_rows
+
+    def _push(self, name: str, cache: SharedCache,
+              states: Dict[str, list]) -> None:
+        comp = self.flow.component(name)
+        if comp.ctype in (ComponentType.BLOCK, ComponentType.SEMI_BLOCK):
+            comp.accumulate(states[name], cache)
+            return
+        outs = comp.process(cache, shared=False)
+        self._route(name, outs, states)
+
+    def _route(self, name: str, outs: List[SharedCache],
+               states: Dict[str, list]) -> None:
+        succs = self.flow.succ(name)
+        per_port = len(outs) == len(succs) and len(outs) > 1
+        for i, u in enumerate(succs):
+            out = outs[i] if per_port else outs[0]
+            # separate-cache scheme: copy output cache -> downstream input cache
+            copied = out.copy()
+            GLOBAL_CACHE_STATS.record(out)
+            self._push(u, copied, states)
+
+    def run(self) -> EngineRun:
+        self.flow.validate()
+        self.flow.reset_stats()
+        before = GLOBAL_CACHE_STATS.snapshot()
+        t_start = time.perf_counter()
+        states: Dict[str, list] = {
+            n: c.new_state() for n, c in self.flow.vertices.items()
+            if c.ctype in (ComponentType.BLOCK, ComponentType.SEMI_BLOCK)}
+        # stream every source, chunk by chunk
+        for sname in self.flow.sources():
+            src = self.flow.component(sname)
+            if isinstance(src, SourceComponent):
+                for chunk in src.chunks(self.chunk_rows):
+                    self._route(sname, [chunk], states)
+            else:
+                raise TypeError(f"source {sname!r} is not a SourceComponent")
+        # finalize block/semi-block components in topological order
+        for name in self.flow.topo_order():
+            comp = self.flow.component(name)
+            if comp.ctype in (ComponentType.BLOCK, ComponentType.SEMI_BLOCK):
+                out = comp.finish(states[name])
+                self._route(name, [out], states)
+        wall = time.perf_counter() - t_start
+        after = GLOBAL_CACHE_STATS.snapshot()
+        return EngineRun(
+            wall_time=wall,
+            copies=after["copies"] - before["copies"],
+            bytes_copied=after["bytes_copied"] - before["bytes_copied"],
+            engine="ordinary",
+            activity_times={n: c.busy_time for n, c in self.flow.vertices.items()})
+
+
+# --------------------------------------------------------------------------
+#  Optimized engine (the paper's framework)
+# --------------------------------------------------------------------------
+@dataclass
+class OptimizeOptions:
+    shared_cache: bool = True          # §3 shared caching scheme
+    num_splits: int = 8                # m  — horizontal splits of root output
+    pipeline_degree: Optional[int] = None  # m' — in-flight bound; None => m
+    pipelined: bool = True             # False => sequential (non-pipeline)
+    mt_threads: Dict[str, int] = field(default_factory=dict)  # §4.3 per component
+    concurrent_trees: bool = True      # dataflow task planner concurrency
+    chunk_rows: Optional[int] = None   # source chunking; None => total/num_splits
+
+
+class OptimizedEngine:
+    def __init__(self, flow: Dataflow, options: Optional[OptimizeOptions] = None):
+        self.flow = flow
+        self.options = options or OptimizeOptions()
+        self.g_tau: Optional[ExecutionTreeGraph] = None
+        # tree_id -> list of (src_tree_id, split_index, cache)
+        self._inputs: Dict[int, List[Tuple[int, int, SharedCache]]] = {}
+        self._inputs_lock = threading.Lock()
+        self._root2tree: Dict[str, int] = {}
+
+    # ----------------------------------------------------------- deliveries
+    def _deliver(self, dst_root: str, cache: SharedCache, split_index: int,
+                 src_tree: int) -> None:
+        tid = self._root2tree[dst_root]
+        with self._inputs_lock:
+            self._inputs[tid].append((src_tree, split_index, cache))
+
+    # ----------------------------------------------------------- tree runs
+    def _tree_splits(self, tree, opts: OptimizeOptions):
+        """Produce the horizontal splits of the root output (medium-level
+        partitioning)."""
+        root = self.flow.component(tree.root)
+        if isinstance(root, SourceComponent):
+            total = root.total_rows()
+            chunk = opts.chunk_rows or max(1, -(-total // max(opts.num_splits, 1)))
+            def gen():
+                for i, c in enumerate(root.chunks(chunk)):
+                    c.split_index = i
+                    yield c
+            return gen()
+        # block / semi-block root: accumulate delivered caches, finish, split
+        entries = sorted(self._inputs[tree.tree_id], key=lambda e: (e[0], e[1]))
+        state = root.new_state()
+        for _, _, cache in entries:
+            root.accumulate(state, cache)
+        out = root.finish(state)
+        return out.split(opts.num_splits)
+
+    def _run_tree(self, tree, pool: Optional[ThreadPoolExecutor]) -> None:
+        opts = self.options
+        tp = TreePipeline(self.flow, tree, self.g_tau.tree_of, self._deliver,
+                          mt_config=opts.mt_threads, pool=pool,
+                          shared=opts.shared_cache)
+        splits = self._tree_splits(tree, opts)
+        if not opts.shared_cache:
+            # separate-cache mode inside the tree: copy on every hop
+            splits = (self._copy_split(s) for s in splits)
+        if opts.pipelined:
+            m_prime = opts.pipeline_degree or opts.num_splits
+            tp.run(splits, m_prime=m_prime, process_root=False)
+        else:
+            tp.run_sequential(splits, process_root=False)
+
+    @staticmethod
+    def _copy_split(s: SharedCache) -> SharedCache:
+        c = s.copy()
+        GLOBAL_CACHE_STATS.record(s)
+        c.split_index = s.split_index
+        return c
+
+    # ---------------------------------------------------------------- run
+    def run(self) -> EngineRun:
+        opts = self.options
+        self.flow.validate()
+        self.flow.reset_stats()
+        self.g_tau = partition(self.flow)
+        self._inputs = {t.tree_id: [] for t in self.g_tau.trees}
+        self._root2tree = {t.root: t.tree_id for t in self.g_tau.trees}
+
+        mt_max = max([1] + list(opts.mt_threads.values()))
+        pool = ThreadPoolExecutor(max_workers=mt_max) if mt_max > 1 else None
+
+        from .scheduler import run_tree_graph
+
+        before = GLOBAL_CACHE_STATS.snapshot()
+        t_start = time.perf_counter()
+        try:
+            run_tree_graph(self.g_tau,
+                           lambda tree: self._run_tree(tree, pool),
+                           concurrent=opts.concurrent_trees)
+        finally:
+            if pool is not None:
+                pool.shutdown()
+        wall = time.perf_counter() - t_start
+        after = GLOBAL_CACHE_STATS.snapshot()
+        return EngineRun(
+            wall_time=wall,
+            copies=after["copies"] - before["copies"],
+            bytes_copied=after["bytes_copied"] - before["bytes_copied"],
+            engine="optimized",
+            activity_times={n: c.busy_time for n, c in self.flow.vertices.items()},
+            trees=[list(t.members) for t in self.g_tau.trees])

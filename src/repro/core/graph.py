@@ -1,0 +1,116 @@
+"""Dataflow DAG — Definition 1: G(V, E), V = activities over row sets,
+E = logical transitions."""
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from .component import Component, ComponentType
+
+
+class Dataflow:
+    """A directed acyclic graph of components."""
+
+    def __init__(self, name: str = "dataflow"):
+        self.name = name
+        self.vertices: Dict[str, Component] = {}
+        self.edges: List[Tuple[str, str]] = []
+        self._succ: Dict[str, List[str]] = {}
+        self._pred: Dict[str, List[str]] = {}
+
+    # ------------------------------------------------------------- building
+    def add(self, comp: Component) -> Component:
+        if comp.name in self.vertices:
+            raise ValueError(f"duplicate component name {comp.name!r}")
+        self.vertices[comp.name] = comp
+        self._succ[comp.name] = []
+        self._pred[comp.name] = []
+        return comp
+
+    def connect(self, u, v) -> None:
+        """Add edge u -> v.  Accepts names or components."""
+        un = u if isinstance(u, str) else u.name
+        vn = v if isinstance(v, str) else v.name
+        for n in (un, vn):
+            if n not in self.vertices:
+                raise KeyError(f"unknown component {n!r}")
+        self.edges.append((un, vn))
+        self._succ[un].append(vn)
+        self._pred[vn].append(un)
+
+    def chain(self, *comps) -> None:
+        """Convenience: add (if needed) and connect comps in sequence."""
+        prev = None
+        for c in comps:
+            if (c.name if isinstance(c, Component) else c) not in self.vertices:
+                self.add(c)
+            if prev is not None:
+                self.connect(prev, c)
+            prev = c
+
+    # ------------------------------------------------------------- queries
+    def succ(self, name: str) -> List[str]:
+        return self._succ[name]
+
+    def pred(self, name: str) -> List[str]:
+        return self._pred[name]
+
+    def in_degree(self, name: str) -> int:
+        return len(self._pred[name])
+
+    def out_degree(self, name: str) -> int:
+        return len(self._succ[name])
+
+    def sources(self) -> List[str]:
+        return [n for n in self.vertices if self.in_degree(n) == 0]
+
+    def sinks(self) -> List[str]:
+        return [n for n in self.vertices if self.out_degree(n) == 0]
+
+    def component(self, name: str) -> Component:
+        return self.vertices[name]
+
+    # ---------------------------------------------------------- validation
+    def topo_order(self) -> List[str]:
+        indeg = {n: self.in_degree(n) for n in self.vertices}
+        ready = sorted([n for n, d in indeg.items() if d == 0])
+        order: List[str] = []
+        ready_set = list(ready)
+        while ready_set:
+            n = ready_set.pop(0)
+            order.append(n)
+            for s in self._succ[n]:
+                indeg[s] -= 1
+                if indeg[s] == 0:
+                    ready_set.append(s)
+        if len(order) != len(self.vertices):
+            raise ValueError(f"dataflow {self.name!r} has a cycle")
+        return order
+
+    def validate(self) -> None:
+        self.topo_order()  # acyclicity
+        for n, comp in self.vertices.items():
+            d_in, d_out = self.in_degree(n), self.out_degree(n)
+            t = comp.ctype
+            if t == ComponentType.SOURCE and d_in != 0:
+                raise ValueError(f"source {n!r} has incoming edges")
+            if d_in > 1 and t not in (ComponentType.SEMI_BLOCK, ComponentType.SINK):
+                raise ValueError(
+                    f"{n!r} ({t.value}) has in-degree {d_in}; only semi-block "
+                    f"components may merge multiple upstreams (paper §3)")
+            if t == ComponentType.BLOCK and d_in > 1:
+                raise ValueError(f"block component {n!r} must have a single upstream")
+            if t == ComponentType.SINK and d_out != 0:
+                raise ValueError(f"sink {n!r} has outgoing edges")
+            if d_in == 0 and t not in (ComponentType.SOURCE,):
+                raise ValueError(f"{n!r} has in-degree 0 but is not a source")
+
+    def reset_stats(self) -> None:
+        for c in self.vertices.values():
+            c.reset_stats()
+
+    def __len__(self) -> int:
+        return len(self.vertices)
+
+    def __repr__(self) -> str:
+        return (f"Dataflow({self.name!r}, |V|={len(self.vertices)}, "
+                f"|E|={len(self.edges)})")

@@ -1,0 +1,100 @@
+"""Metadata store (§2): schema info of sources and processing components,
+dataflow specifications, job/task planning info.  Import/export XML (as the
+paper's implementation used) and JSON."""
+from __future__ import annotations
+
+import json
+import xml.etree.ElementTree as ET
+from typing import Dict, List, Optional
+
+from .graph import Dataflow
+from .partitioner import ExecutionTreeGraph
+
+
+class MetadataStore:
+    def __init__(self) -> None:
+        self.component_specs: Dict[str, Dict[str, str]] = {}
+        self.dataflows: Dict[str, dict] = {}
+        self.partitions: Dict[str, dict] = {}
+
+    # ----------------------------------------------------------- register
+    def register_flow(self, flow: Dataflow) -> None:
+        for name, comp in flow.vertices.items():
+            self.component_specs[name] = comp.spec()
+        self.dataflows[flow.name] = {
+            "name": flow.name,
+            "vertices": [comp.spec() for comp in flow.vertices.values()],
+            "edges": [list(e) for e in flow.edges],
+        }
+
+    def register_partitioning(self, flow: Dataflow,
+                              g_tau: ExecutionTreeGraph) -> None:
+        self.partitions[flow.name] = {
+            "trees": [{"id": t.tree_id, "root": t.root, "members": t.members}
+                      for t in g_tau.trees],
+            "edges": [list(e) for e in g_tau.edges],
+        }
+
+    def type_of(self, component_name: str) -> Optional[str]:
+        spec = self.component_specs.get(component_name)
+        return spec["type"] if spec else None
+
+    # ---------------------------------------------------------------- XML
+    def to_xml(self) -> str:
+        root = ET.Element("metadata")
+        comps = ET.SubElement(root, "components")
+        for spec in self.component_specs.values():
+            ET.SubElement(comps, "component", attrib=spec)
+        flows = ET.SubElement(root, "dataflows")
+        for df in self.dataflows.values():
+            f = ET.SubElement(flows, "dataflow", attrib={"name": df["name"]})
+            for e in df["edges"]:
+                ET.SubElement(f, "edge", attrib={"src": e[0], "dst": e[1]})
+        parts = ET.SubElement(root, "partitions")
+        for name, p in self.partitions.items():
+            pf = ET.SubElement(parts, "partition", attrib={"dataflow": name})
+            for t in p["trees"]:
+                ET.SubElement(pf, "tree", attrib={
+                    "id": str(t["id"]), "root": t["root"],
+                    "members": ",".join(t["members"])})
+            for e in p["edges"]:
+                ET.SubElement(pf, "tree-edge",
+                              attrib={"src": str(e[0]), "dst": str(e[1])})
+        return ET.tostring(root, encoding="unicode")
+
+    @classmethod
+    def from_xml(cls, text: str) -> "MetadataStore":
+        store = cls()
+        root = ET.fromstring(text)
+        for c in root.find("components") or []:
+            store.component_specs[c.attrib["name"]] = dict(c.attrib)
+        for f in root.find("dataflows") or []:
+            store.dataflows[f.attrib["name"]] = {
+                "name": f.attrib["name"],
+                "vertices": [],
+                "edges": [[e.attrib["src"], e.attrib["dst"]] for e in f],
+            }
+        for pf in root.find("partitions") or []:
+            store.partitions[pf.attrib["dataflow"]] = {
+                "trees": [{"id": int(t.attrib["id"]), "root": t.attrib["root"],
+                           "members": t.attrib["members"].split(",")}
+                          for t in pf if t.tag == "tree"],
+                "edges": [[int(e.attrib["src"]), int(e.attrib["dst"])]
+                          for e in pf if e.tag == "tree-edge"],
+            }
+        return store
+
+    # --------------------------------------------------------------- JSON
+    def to_json(self) -> str:
+        return json.dumps({"components": self.component_specs,
+                           "dataflows": self.dataflows,
+                           "partitions": self.partitions}, indent=2)
+
+    @classmethod
+    def from_json(cls, text: str) -> "MetadataStore":
+        store = cls()
+        d = json.loads(text)
+        store.component_specs = d.get("components", {})
+        store.dataflows = d.get("dataflows", {})
+        store.partitions = d.get("partitions", {})
+        return store

@@ -1,0 +1,219 @@
+"""Algorithm 2 — pipeline parallelization within an execution tree.
+
+A *pipeline consumer thread* carries ONE shared cache (one horizontal split)
+through the tree's activities in sequence.  Each activity has a `busy` flag
+guarded by a Condition: a consumer `wait()`s while the activity is processing
+another split and is woken by `notify_all()` when it frees up — exactly the
+paper's Algorithm 2 lines 6-11.  A fix-sized BlockingQueue(m') bounds the
+number of in-flight shared caches (memory bound) and a housekeeping thread
+removes finished consumers from the queue (lines 14-15).
+
+Inside-component parallelization (§4.3) hooks in here too: activities with a
+configured thread count split their cache into row ranges, process the ranges
+on a worker pool and merge with the row-order synchronizer.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .component import Component, ComponentType
+from .graph import Dataflow
+from .partitioner import ExecutionTree
+from .shared_cache import GLOBAL_CACHE_STATS, SharedCache
+
+# deliver_fn(dst_root_component_name, cache, split_index, src_tree_id)
+DeliverFn = Callable[[str, SharedCache, int, int], None]
+
+
+class BlockingQueue:
+    """Fix-sized queue of live consumer threads (paper line 14)."""
+
+    def __init__(self, capacity: int):
+        self.q: "queue.Queue" = queue.Queue(maxsize=max(1, capacity))
+
+    def add(self, th: threading.Thread) -> None:
+        self.q.put(th)      # blocks while the queue is full
+
+    def reap(self) -> int:
+        """Remove finished threads; returns the number reaped."""
+        reaped = 0
+        alive = []
+        try:
+            while True:
+                th = self.q.get_nowait()
+                if th.is_alive():
+                    alive.append(th)
+                else:
+                    reaped += 1
+        except queue.Empty:
+            pass
+        for th in alive:
+            self.q.put(th)
+        return reaped
+
+
+class HouseKeepingThread(threading.Thread):
+    """Cleans finished consumer threads out of the blocking queue so new
+    consumers can be admitted (paper line 15)."""
+
+    def __init__(self, bq: BlockingQueue, stop_evt: threading.Event,
+                 interval: float = 0.001):
+        super().__init__(daemon=True, name="housekeeper")
+        self.bq = bq
+        self.stop_evt = stop_evt
+        self.interval = interval
+
+    def run(self) -> None:
+        while not self.stop_evt.is_set():
+            self.bq.reap()
+            time.sleep(self.interval)
+        self.bq.reap()
+
+
+class ActivityRunner:
+    """Wraps one component as a pipeline activity with the busy/wait/notify
+    protocol plus optional §4.3 multithreading."""
+
+    def __init__(self, comp: Component, mt_threads: int = 1,
+                 pool: Optional[ThreadPoolExecutor] = None):
+        self.comp = comp
+        self.mt_threads = mt_threads
+        self.pool = pool
+
+    def process(self, cache: SharedCache, shared: bool) -> List[SharedCache]:
+        comp = self.comp
+        with comp.cond:
+            while comp.busy or (comp.order_sensitive and
+                                comp.next_split != cache.split_index):
+                comp.cond.wait()            # paper line 7
+            comp.busy = True                # paper line 8
+        try:
+            if (self.mt_threads > 1 and comp.supports_multithreading
+                    and self.pool is not None and cache.n > self.mt_threads):
+                out = self._process_multithreaded(cache)
+            else:
+                out = comp.process(cache, shared=shared)    # paper line 9
+        finally:
+            with comp.cond:
+                comp.busy = False           # paper line 10
+                comp.next_split += 1
+                comp.cond.notify_all()      # paper line 11
+        return out
+
+    # -------------------------------------------------- §4.3 multithreading
+    def _process_multithreaded(self, cache: SharedCache) -> List[SharedCache]:
+        comp = self.comp
+        t0 = time.perf_counter()
+        ranges = cache.row_ranges(self.mt_threads)
+        futures = [self.pool.submit(comp.process_range, cache, r) for r in ranges]
+        parts = [f.result() for f in futures]       # row-order synchronizer:
+        out = comp.merge_ranges(cache, ranges, parts)   # merge in input order
+        comp.busy_time += time.perf_counter() - t0
+        comp.calls += 1
+        comp.rows_in += cache.n
+        comp.rows_out += sum(c.n for c in out)
+        return out
+
+
+class TreePipeline:
+    """Executes one execution tree over a stream of input splits."""
+
+    def __init__(self, flow: Dataflow, tree: ExecutionTree,
+                 tree_of: Dict[str, int],
+                 deliver: DeliverFn,
+                 mt_config: Optional[Dict[str, int]] = None,
+                 pool: Optional[ThreadPoolExecutor] = None,
+                 shared: bool = True):
+        self.flow = flow
+        self.tree = tree
+        self.tree_of = tree_of
+        self.deliver = deliver
+        self.mt_config = mt_config or {}
+        self.pool = pool
+        self.shared = shared
+        self.runners: Dict[str, ActivityRunner] = {
+            n: ActivityRunner(flow.component(n), self.mt_config.get(n, 1), pool)
+            for n in tree.members
+        }
+        self.errors: List[BaseException] = []
+
+    # ------------------------------------------------------------- routing
+    def _route(self, node: str, outs: List[SharedCache], split_index: int) -> None:
+        succs = self.flow.succ(node)
+        if not succs:
+            return
+        per_port = len(outs) == len(succs) and len(outs) > 1
+        first_intra_used = False
+        for i, u in enumerate(succs):
+            out = outs[i] if per_port else outs[0]
+            out.split_index = split_index
+            if self.tree_of.get(u) == self.tree.tree_id:
+                if per_port:
+                    self._walk(u, out)
+                else:
+                    if not first_intra_used:
+                        first_intra_used = True
+                        self._walk(u, out)
+                    else:
+                        branch = out.copy()   # unavoidable copy on fan-out
+                        GLOBAL_CACHE_STATS.record(out)
+                        branch.split_index = split_index
+                        self._walk(u, branch)
+            else:
+                # tree -> tree transition: COPY edge (paper §4.1)
+                copied = out.copy()
+                GLOBAL_CACHE_STATS.record(out)
+                copied.split_index = split_index
+                self.deliver(u, copied, split_index, self.tree.tree_id)
+
+    def _walk(self, node: str, cache: SharedCache) -> None:
+        outs = self.runners[node].process(cache, shared=self.shared)
+        self._route(node, outs, cache.split_index)
+
+    def _consume(self, cache: SharedCache, process_root: bool) -> None:
+        try:
+            if process_root:
+                self._walk(self.tree.root, cache)
+            else:
+                self._route(self.tree.root, [cache], cache.split_index)
+        except BaseException as e:
+            self.errors.append(e)
+
+    # ------------------------------------------------------------ execution
+    def run(self, splits, m_prime: int, process_root: bool = False) -> None:
+        """Pipeline-parallel: one consumer thread per split, bounded by
+        BlockingQueue(m') (paper lines 13-21)."""
+        bq = BlockingQueue(m_prime)
+        stop = threading.Event()
+        hk = HouseKeepingThread(bq, stop)
+        hk.start()
+        threads: List[threading.Thread] = []
+        try:
+            for sc in splits:                                 # line 16
+                th = threading.Thread(
+                    target=self._consume, args=(sc, process_root), daemon=True,
+                    name=f"pipe-t{self.tree.tree_id}-s{sc.split_index}")
+                bq.add(th)       # line 20: blocks if m' caches in flight
+                th.start()       # line 21
+                threads.append(th)
+            for th in threads:
+                th.join()
+        finally:
+            stop.set()
+            hk.join()
+        if self.errors:
+            raise self.errors[0]
+
+    def run_sequential(self, splits, process_root: bool = False) -> None:
+        """Non-pipeline fashion: each split flows through all activities
+        before the next is admitted (the m'=1 degenerate case)."""
+        for sc in splits:
+            self._consume(sc, process_root)
+        if self.errors:
+            raise self.errors[0]

@@ -1,0 +1,107 @@
+"""Algorithm 3 + Theorem 1 — estimate the optimal degree of pipeline
+parallelization.
+
+Cost model (paper §4.2): with m splits, staggering activity A_j of
+per-split time t_j = t0 + lambda*N/m, and per-activity miscellaneous time
+t0, the pipeline time is
+
+    T_p(m) = c/m + (m-1)*t_j + n*t0
+           = (c - lambda*N)/m + t0*m + lambda*N + (n-1)*t0
+
+minimized at  m* = sqrt((c - lambda*N) / t0)          (Theorem 1)
+
+where c = m * sum_i (t_i - t0) is the total *net* processing time of the
+full input (independent of m) and N is the number of rows through A_j.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+
+@dataclass
+class PipelinePlan:
+    n: int                    # number of activities in the execution tree
+    t0: float                 # avg per-activity miscellaneous time  (line 1,3)
+    c: float                  # total net processing time, full input (line 3)
+    lam: float                # lambda: seconds per row at the staggering activity
+    N: int                    # rows processed by the staggering activity
+    staggering: str           # name of A_j                          (line 3)
+    activity_times: Dict[str, float] = field(default_factory=dict)
+    T_s: float = 0.0          # measured sequential time on the sample
+    m_star: float = 1.0       # Theorem 1 optimum                    (line 5)
+
+    def predict_T_p(self, m: float) -> float:
+        m = max(1.0, float(m))
+        return ((self.c - self.lam * self.N) / m + self.t0 * m
+                + self.lam * self.N + (self.n - 1) * self.t0)
+
+    def predict_T_s(self) -> float:
+        return self.c + self.n * self.t0
+
+    def predict_speedup(self, m: float) -> float:
+        tp = self.predict_T_p(m)
+        return self.predict_T_s() / tp if tp > 0 else float("inf")
+
+
+def theorem1_m_star(c: float, lam: float, N: float, t0: float,
+                    m_max: Optional[int] = None) -> float:
+    """m* = sqrt((c - lambda*N)/t0), clamped to [1, m_max] (paper: 1<=m<=|Sigma|)."""
+    if t0 <= 0:
+        return float(m_max or 1)
+    inner = max(c - lam * N, 0.0) / t0
+    m = math.sqrt(inner)
+    m = max(1.0, m)
+    if m_max is not None:
+        m = min(m, float(m_max))
+    return m
+
+
+def build_plan(activity_times: Dict[str, float],
+               misc_total: float,
+               sample_rows: int,
+               full_rows: int,
+               m_prime: int,
+               staggering_rows_sample: Optional[int] = None) -> PipelinePlan:
+    """Algorithm 3 from measured quantities.
+
+    ``activity_times``: per-activity busy time from the *sequential* sample
+        run over m' splits                                        (line 2)
+    ``misc_total``: T_0 — busy time of a zero-row run              (line 1)
+    ``sample_rows`` / ``full_rows``: |D| and |Sigma|-scale factor
+    ``staggering_rows_sample``: rows through A_j in the sample (defaults to
+        sample_rows; differs when upstream filters drop rows).
+    """
+    names = list(activity_times.keys())
+    times = np.array([activity_times[k] for k in names], dtype=np.float64)
+    n = len(names)
+    T_s = float(times.sum())
+    t0 = misc_total / max(n, 1)                                   # line 3
+    j = int(times.argmax())                                       # line 3
+    staggering = names[j]
+    scale = full_rows / max(sample_rows, 1)
+    c_sample = max(T_s - misc_total, 1e-12)
+    c = c_sample * scale                                          # line 3
+    N_s = staggering_rows_sample or sample_rows
+    N = int(round(N_s * scale))
+    # line 4: lambda from the staggering activity's per-split time
+    t_j_split = times[j] / max(m_prime, 1)
+    lam = max(t_j_split - t0, 1e-12) * m_prime / max(N_s, 1)
+    m_star = theorem1_m_star(c, lam, N, t0, m_max=full_rows)      # line 5
+    return PipelinePlan(n=n, t0=t0, c=c, lam=lam, N=N, staggering=staggering,
+                        activity_times=dict(activity_times), T_s=T_s,
+                        m_star=m_star)
+
+
+def choose_degree(plan: PipelinePlan, cores: Optional[int] = None,
+                  cap: int = 64) -> int:
+    """Practical degree: Theorem-1 optimum, bounded by a configured cap and
+    (when known) by available cores — the paper observed the decline past the
+    core count (Fig 12/13)."""
+    m = int(round(plan.m_star))
+    if cores is not None:
+        m = min(m, max(1, cores))
+    return int(min(max(m, 1), cap))

@@ -1,0 +1,69 @@
+"""Dataflow task planner (§2): when a dataflow is partitioned, the job is
+generated into multiple tasks (one per execution tree) and the planner
+executes them according to the dependency of the generated tasks.
+
+A tree's task may start as soon as ALL upstream trees have finished (block /
+semi-block semantics require the complete input); independent trees run
+concurrently.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Callable, Dict, List
+
+from .partitioner import ExecutionTree, ExecutionTreeGraph
+
+RunTreeFn = Callable[[ExecutionTree], None]
+
+
+def run_tree_graph(g_tau: ExecutionTreeGraph, run_tree: RunTreeFn,
+                   concurrent: bool = True) -> None:
+    order = g_tau.topo_tree_order()
+    if not concurrent:
+        for tid in order:
+            run_tree(g_tau.tree(tid))
+        return
+
+    done: Dict[int, threading.Event] = {tid: threading.Event() for tid in order}
+    errors: List[BaseException] = []
+    err_lock = threading.Lock()
+
+    def run_one(tid: int) -> None:
+        try:
+            for up in g_tau.upstream_trees(tid):
+                done[up].wait()
+            with err_lock:
+                bail = bool(errors)
+            if not bail:
+                run_tree(g_tau.tree(tid))
+        except BaseException as e:  # noqa: BLE001 — surfaced after join
+            with err_lock:
+                errors.append(e)
+        finally:
+            done[tid].set()
+
+    threads = [threading.Thread(target=run_one, args=(tid,), daemon=True,
+                                name=f"tree-task-{tid}") for tid in order]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    if errors:
+        raise errors[0]
+
+
+def plan_schedule(g_tau: ExecutionTreeGraph) -> List[List[int]]:
+    """Return the wave schedule: list of waves, each a list of tree ids that
+    may run concurrently (all deps in earlier waves)."""
+    remaining = {t.tree_id for t in g_tau.trees}
+    waves: List[List[int]] = []
+    finished: set = set()
+    while remaining:
+        wave = sorted(tid for tid in remaining
+                      if all(up in finished for up in g_tau.upstream_trees(tid)))
+        if not wave:
+            raise ValueError("cycle in execution-tree graph")
+        waves.append(wave)
+        finished.update(wave)
+        remaining.difference_update(wave)
+    return waves

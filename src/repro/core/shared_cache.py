@@ -1,0 +1,173 @@
+"""Shared cache — the paper's §3 caching scheme.
+
+A cache is a columnar row buffer (dict of equal-length numpy arrays plus a
+valid-row count).  The *shared caching scheme* means one cache object is
+reused in place by every row-synchronized component of an execution tree:
+components add/drop/overwrite columns and compact rows inside the same
+object, so no output-cache -> input-cache copy ever happens.
+
+The *ordinary* scheme (`copy()`) physically duplicates every column, which is
+what the paper's baseline (Figure 3, "Copy") does on every edge.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Callable, Dict, Iterator, List, Optional
+
+import numpy as np
+
+Columns = Dict[str, np.ndarray]
+
+
+class SharedCache:
+    """Columnar row buffer that can be mutated in place.
+
+    ``split_index`` tracks which horizontal split of the execution-tree input
+    this cache carries (used by the row-order synchronizer to restore global
+    row order at tree leaves).
+    """
+
+    __slots__ = ("columns", "n", "split_index", "copies", "lock")
+
+    def __init__(self, columns: Optional[Columns] = None, n: Optional[int] = None,
+                 split_index: int = 0):
+        self.columns: Columns = dict(columns) if columns else {}
+        if n is None:
+            n = len(next(iter(self.columns.values()))) if self.columns else 0
+        self.n = int(n)
+        self.split_index = split_index
+        self.copies = 0          # instrumentation: number of physical copies taken
+        self.lock = threading.Lock()
+        self._check()
+
+    # ------------------------------------------------------------------ util
+    def _check(self) -> None:
+        for k, v in self.columns.items():
+            if len(v) < self.n:
+                raise ValueError(f"column {k!r} shorter ({len(v)}) than n={self.n}")
+
+    @property
+    def names(self) -> List[str]:
+        return list(self.columns.keys())
+
+    def nbytes(self) -> int:
+        return sum(v[: self.n].nbytes for v in self.columns.values())
+
+    def col(self, name: str) -> np.ndarray:
+        """Valid slice of a column (view, no copy)."""
+        return self.columns[name][: self.n]
+
+    def to_dict(self) -> Columns:
+        """Materialized dict of valid rows (copies — for sinks/tests)."""
+        return {k: np.array(v[: self.n]) for k, v in self.columns.items()}
+
+    # --------------------------------------------------------- ordinary path
+    def copy(self) -> "SharedCache":
+        """Physical copy — the operation the shared caching scheme removes."""
+        out = SharedCache({k: np.array(v[: self.n]) for k, v in self.columns.items()},
+                          self.n, self.split_index)
+        self.copies += 1
+        return out
+
+    # ------------------------------------------------------- in-place mutators
+    def add_column(self, name: str, values: np.ndarray) -> None:
+        if len(values) < self.n:
+            raise ValueError(f"add_column {name!r}: {len(values)} < n={self.n}")
+        self.columns[name] = values
+
+    def drop_columns(self, names) -> None:
+        for name in names:
+            self.columns.pop(name, None)
+
+    def keep_columns(self, names) -> None:
+        names = set(names)
+        for k in list(self.columns.keys()):
+            if k not in names:
+                del self.columns[k]
+
+    def compact(self, mask: np.ndarray) -> None:
+        """Keep rows where ``mask`` is True, in place (row filter)."""
+        if mask.dtype != np.bool_:
+            raise TypeError("compact expects a boolean mask")
+        if len(mask) < self.n:
+            raise ValueError("mask shorter than valid rows")
+        mask = mask[: self.n]
+        k = int(mask.sum())
+        for name, vals in self.columns.items():
+            # write the surviving rows into the head of the SAME buffer
+            vals[:k] = vals[: self.n][mask]
+        self.n = k
+
+    def take(self, idx: np.ndarray) -> None:
+        """Reorder/select rows by integer index, in place."""
+        k = len(idx)
+        for name, vals in self.columns.items():
+            vals[:k] = vals[: self.n][idx]
+        self.n = k
+
+    def truncate(self, n: int) -> None:
+        self.n = min(self.n, int(n))
+
+    # ----------------------------------------------------------- partitioning
+    def split(self, m: int) -> List["SharedCache"]:
+        """Horizontally partition into ``m`` even splits (views, zero copy)."""
+        m = max(1, min(m, max(self.n, 1)))
+        bounds = np.linspace(0, self.n, m + 1).astype(np.int64)
+        out = []
+        for i in range(m):
+            lo, hi = int(bounds[i]), int(bounds[i + 1])
+            out.append(SharedCache({k: v[lo:hi] for k, v in self.columns.items()},
+                                   hi - lo, split_index=i))
+        return out
+
+    def row_ranges(self, t: int) -> List[slice]:
+        """Even row ranges for inside-component parallelization."""
+        t = max(1, min(t, max(self.n, 1)))
+        bounds = np.linspace(0, self.n, t + 1).astype(np.int64)
+        return [slice(int(bounds[i]), int(bounds[i + 1])) for i in range(t)]
+
+    def __len__(self) -> int:
+        return self.n
+
+    def __repr__(self) -> str:
+        return f"SharedCache(n={self.n}, cols={self.names}, split={self.split_index})"
+
+
+def concat_caches(caches: List[SharedCache], ordered: bool = True) -> SharedCache:
+    """Row-order synchronizer: merge caches back into one, restoring the
+    original split order (paper §4.3 — 'maintains the row order of the output
+    to be the same of the input')."""
+    caches = [c for c in caches if c is not None]
+    if not caches:
+        return SharedCache({}, 0)
+    if ordered:
+        caches = sorted(caches, key=lambda c: c.split_index)
+    names = caches[0].names
+    cols = {k: np.concatenate([c.col(k) for c in caches]) for k in names}
+    return SharedCache(cols, sum(c.n for c in caches))
+
+
+class CacheStats:
+    """Global instrumentation for copies / bytes moved (thread-safe)."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self.copies = 0
+        self.bytes_copied = 0
+
+    def record(self, cache: SharedCache) -> None:
+        with self._lock:
+            self.copies += 1
+            self.bytes_copied += cache.nbytes()
+
+    def reset(self) -> None:
+        with self._lock:
+            self.copies = 0
+            self.bytes_copied = 0
+
+    def snapshot(self):
+        with self._lock:
+            return {"copies": self.copies, "bytes_copied": self.bytes_copied}
+
+
+GLOBAL_CACHE_STATS = CacheStats()

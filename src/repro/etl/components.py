@@ -1,0 +1,380 @@
+"""ETL component library over columnar numpy row sets.
+
+Component classification follows the paper's §3:
+  row-synchronized: Filter, Lookup, Project, Expression, Converter, Splitter
+  block:            Aggregate, Sort
+  semi-block:       Union, Merge
+  plus ArraySource / CollectSink / FileSink.
+
+Row-synchronized components mutate the shared cache IN PLACE (shared caching
+scheme).  Heavy row-synchronized components (Filter/Lookup/Expression)
+implement `process_range` + `merge_ranges` for §4.3 inside-component
+multithreading with a row-order synchronizer.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Callable, Dict, Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.component import (BlockComponent, Component, ComponentType,
+                              SemiBlockComponent, SinkComponent,
+                              SourceComponent)
+from ..core.shared_cache import SharedCache, concat_caches
+
+
+# ---------------------------------------------------------------------------
+#  Sources
+# ---------------------------------------------------------------------------
+class ArraySource(SourceComponent):
+    """In-memory columnar table source; yields chunked caches (views)."""
+
+    def __init__(self, name: str, columns: Dict[str, np.ndarray]):
+        super().__init__(name)
+        lens = {len(v) for v in columns.values()}
+        if len(lens) > 1:
+            raise ValueError("ragged source columns")
+        self.columns = columns
+        self._n = lens.pop() if lens else 0
+
+    def total_rows(self) -> int:
+        return self._n
+
+    def chunks(self, chunk_rows: int) -> Iterator[SharedCache]:
+        i = 0
+        idx = 0
+        while i < self._n:
+            j = min(i + chunk_rows, self._n)
+            # a chunk view is the root output split; downstream mutators
+            # compact/overwrite in place, so materialize the chunk buffer once
+            cache = SharedCache({k: np.array(v[i:j]) for k, v in
+                                 self.columns.items()}, j - i, split_index=idx)
+            self.rows_out += j - i
+            yield cache
+            i = j
+            idx += 1
+
+
+# ---------------------------------------------------------------------------
+#  Row-synchronized components
+# ---------------------------------------------------------------------------
+class RowSyncMT(Component):
+    """Base for row-sync components with §4.3 multithreading support."""
+
+    supports_multithreading = True
+
+    def _run(self, cache: SharedCache) -> List[SharedCache]:
+        full = slice(0, cache.n)
+        part = self.process_range(cache, full)
+        return self.merge_ranges(cache, [full], [part])
+
+    # subclasses implement process_range(cache, rows) -> dict and
+    # merge_ranges(cache, ranges, parts) -> [cache]
+
+
+class Filter(RowSyncMT):
+    """Keep rows where predicate(cache, rows) is True.  In-place compaction."""
+
+    def __init__(self, name: str,
+                 predicate: Callable[[SharedCache, slice], np.ndarray]):
+        super().__init__(name)
+        self.predicate = predicate
+
+    def process_range(self, cache: SharedCache, rows: slice) -> dict:
+        return {"__mask__": np.asarray(self.predicate(cache, rows), dtype=bool)}
+
+    def merge_ranges(self, cache: SharedCache, ranges: List[slice],
+                     parts: List[dict]) -> List[SharedCache]:
+        mask = np.concatenate([p["__mask__"] for p in parts])
+        cache.compact(mask)          # row order preserved (synchronizer)
+        return [cache]
+
+
+class DimTable:
+    """Dimension table for Lookup: key -> payload columns, vectorized via
+    sorted keys + searchsorted.  ``row_filter`` marks non-qualifying dim rows
+    as unmatched at build time (the paper's `AND c_region='AMERICA'` style
+    join conditions)."""
+
+    def __init__(self, key: np.ndarray, payload: Dict[str, np.ndarray],
+                 row_filter: Optional[np.ndarray] = None):
+        order = np.argsort(key, kind="stable")
+        self.keys = np.asarray(key)[order]
+        self.payload = {k: np.asarray(v)[order] for k, v in payload.items()}
+        if row_filter is not None:
+            self.qualifies = np.asarray(row_filter, dtype=bool)[order]
+        else:
+            self.qualifies = np.ones(len(self.keys), dtype=bool)
+
+    def probe(self, vals: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Returns (row_idx, matched_mask)."""
+        idx = np.searchsorted(self.keys, vals)
+        idx = np.clip(idx, 0, max(len(self.keys) - 1, 0))
+        matched = (self.keys[idx] == vals) & self.qualifies[idx] \
+            if len(self.keys) else np.zeros(len(vals), dtype=bool)
+        return idx, matched
+
+
+class Lookup(RowSyncMT):
+    """Join with a dimension table; unmatched rows get ``default`` (-1) in
+    every returned column — downstream Filter drops them (paper §5.1)."""
+
+    def __init__(self, name: str, dim: DimTable, key_col: str,
+                 return_cols: Dict[str, str], default: int = -1,
+                 matched_flag: Optional[str] = None):
+        super().__init__(name)
+        self.dim = dim
+        self.key_col = key_col
+        self.return_cols = return_cols       # out_name -> dim payload col
+        self.default = default
+        self.matched_flag = matched_flag     # optional bool col with match bit
+
+    def process_range(self, cache: SharedCache, rows: slice) -> dict:
+        vals = cache.col(self.key_col)[rows]
+        idx, matched = self.dim.probe(vals)
+        out: Dict[str, np.ndarray] = {}
+        for out_name, dim_col in self.return_cols.items():
+            got = self.dim.payload[dim_col][idx]
+            got = np.where(matched, got, np.asarray(self.default, got.dtype))
+            out[out_name] = got
+        if self.matched_flag:
+            out[self.matched_flag] = matched
+        return out
+
+    def merge_ranges(self, cache: SharedCache, ranges: List[slice],
+                     parts: List[dict]) -> List[SharedCache]:
+        names = parts[0].keys()
+        for name in names:                     # merge in input-range order
+            cache.add_column(name, np.concatenate([p[name] for p in parts]))
+        return [cache]
+
+
+class Expression(RowSyncMT):
+    """Compute a new column from existing ones (paper's component 8)."""
+
+    def __init__(self, name: str, out_col: str,
+                 fn: Callable[[SharedCache, slice], np.ndarray]):
+        super().__init__(name)
+        self.out_col = out_col
+        self.fn = fn
+
+    def process_range(self, cache: SharedCache, rows: slice) -> dict:
+        return {self.out_col: np.asarray(self.fn(cache, rows))}
+
+    def merge_ranges(self, cache: SharedCache, ranges: List[slice],
+                     parts: List[dict]) -> List[SharedCache]:
+        cache.add_column(self.out_col,
+                         np.concatenate([p[self.out_col] for p in parts]))
+        return [cache]
+
+
+class Project(Component):
+    """Keep a subset of columns.  With the shared caching scheme this is a
+    metadata-only operation (no rows move)."""
+
+    def __init__(self, name: str, keep: Sequence[str]):
+        super().__init__(name)
+        self.keep = list(keep)
+
+    def _run(self, cache: SharedCache) -> List[SharedCache]:
+        cache.keep_columns(self.keep)
+        return [cache]
+
+
+class Converter(Component):
+    """Data format converter (row-synchronized)."""
+
+    def __init__(self, name: str, conversions: Dict[str, np.dtype]):
+        super().__init__(name)
+        self.conversions = conversions
+
+    def _run(self, cache: SharedCache) -> List[SharedCache]:
+        for col, dt in self.conversions.items():
+            cache.columns[col] = cache.col(col).astype(dt)
+        return [cache]
+
+
+class Splitter(Component):
+    """Route rows to two output ports by predicate (row-synchronized)."""
+
+    def __init__(self, name: str,
+                 predicate: Callable[[SharedCache, slice], np.ndarray]):
+        super().__init__(name)
+        self.predicate = predicate
+
+    def _run(self, cache: SharedCache) -> List[SharedCache]:
+        mask = np.asarray(self.predicate(cache, slice(0, cache.n)), dtype=bool)
+        hi = SharedCache({k: cache.col(k)[mask] for k in cache.names},
+                         int(mask.sum()), cache.split_index)
+        lo = SharedCache({k: cache.col(k)[~mask] for k in cache.names},
+                         int((~mask).sum()), cache.split_index)
+        return [hi, lo]
+
+
+# ---------------------------------------------------------------------------
+#  Block components
+# ---------------------------------------------------------------------------
+_AGG_OPS = {"sum", "avg", "min", "max", "count"}
+
+
+class Aggregate(BlockComponent):
+    """Group-by aggregation — the paper's canonical block component
+    (sum/avg/min/max).  Accumulates all input caches, then reduces."""
+
+    def __init__(self, name: str, group_by: Sequence[str],
+                 aggs: Dict[str, Tuple[str, str]]):
+        """``aggs``: out_col -> (in_col, op) with op in sum/avg/min/max/count."""
+        super().__init__(name)
+        self.group_by = list(group_by)
+        for out, (col, op) in aggs.items():
+            if op not in _AGG_OPS:
+                raise ValueError(f"unknown agg op {op!r}")
+        self.aggs = dict(aggs)
+
+    def finish(self, state: List[SharedCache]) -> SharedCache:
+        merged = concat_caches(state, ordered=True)
+        n = merged.n
+        if n == 0:
+            cols = {g: np.array([], dtype=np.int64) for g in self.group_by}
+            for out in self.aggs:
+                cols[out] = np.array([], dtype=np.float64)
+            return SharedCache(cols, 0)
+        if not self.group_by:
+            # global aggregation: one group
+            cols = {}
+            for out, (col, op) in self.aggs.items():
+                vals = merged.col(col)
+                if op == "count":
+                    cols[out] = np.array([n], dtype=np.int64)
+                elif op == "sum":
+                    cols[out] = np.array([vals.astype(np.float64).sum()])
+                elif op == "avg":
+                    cols[out] = np.array([vals.astype(np.float64).mean()])
+                elif op == "min":
+                    cols[out] = np.array([vals.min()])
+                elif op == "max":
+                    cols[out] = np.array([vals.max()])
+            self.rows_out += 1
+            return SharedCache(cols, 1)
+        keys = [merged.col(g) for g in self.group_by]
+        order = np.lexsort(keys[::-1])
+        sk = [k[order] for k in keys]
+        boundary = np.zeros(n, dtype=bool)
+        boundary[0] = True
+        for k in sk:
+            boundary[1:] |= k[1:] != k[:-1]
+        starts = np.flatnonzero(boundary)
+        counts = np.diff(np.append(starts, n))
+        cols: Dict[str, np.ndarray] = {g: k[starts] for g, k in
+                                       zip(self.group_by, sk)}
+        for out, (col, op) in self.aggs.items():
+            if op == "count":
+                cols[out] = counts.astype(np.int64)
+                continue
+            vals = merged.col(col)[order]
+            if op in ("sum", "avg"):
+                acc = np.add.reduceat(vals.astype(np.float64), starts)
+                cols[out] = acc / counts if op == "avg" else acc
+            elif op == "min":
+                cols[out] = np.minimum.reduceat(vals, starts)
+            elif op == "max":
+                cols[out] = np.maximum.reduceat(vals, starts)
+        self.rows_out += len(starts)
+        return SharedCache(cols, len(starts))
+
+
+class Sort(BlockComponent):
+    """Total sort — block component (needs all rows)."""
+
+    def __init__(self, name: str, by: Sequence[str],
+                 ascending: bool = True):
+        super().__init__(name)
+        self.by = list(by)
+        self.ascending = ascending
+
+    def finish(self, state: List[SharedCache]) -> SharedCache:
+        merged = concat_caches(state, ordered=True)
+        keys = [merged.col(b) for b in self.by]
+        order = np.lexsort(keys[::-1])
+        if not self.ascending:
+            order = order[::-1]
+        merged.take(order)
+        self.rows_out += merged.n
+        return merged
+
+
+# ---------------------------------------------------------------------------
+#  Semi-block components
+# ---------------------------------------------------------------------------
+class Union(SemiBlockComponent):
+    """Concatenate rows from multiple upstreams (bag union)."""
+
+    def __init__(self, name: str):
+        super().__init__(name)
+
+    def finish(self, state: List[SharedCache]) -> SharedCache:
+        out = concat_caches(state, ordered=False)
+        self.rows_out += out.n
+        return out
+
+
+class Merge(SemiBlockComponent):
+    """Sorted merge of multiple upstreams by key columns."""
+
+    def __init__(self, name: str, by: Sequence[str]):
+        super().__init__(name)
+        self.by = list(by)
+
+    def finish(self, state: List[SharedCache]) -> SharedCache:
+        merged = concat_caches(state, ordered=False)
+        keys = [merged.col(b) for b in self.by]
+        merged.take(np.lexsort(keys[::-1]))
+        self.rows_out += merged.n
+        return merged
+
+
+# ---------------------------------------------------------------------------
+#  Sinks
+# ---------------------------------------------------------------------------
+class CollectSink(SinkComponent):
+    """Buffers result caches; exposes the final table (split-ordered)."""
+
+    def __init__(self, name: str):
+        super().__init__(name)
+        self._lock = threading.Lock()
+        self._buf: List[SharedCache] = []
+
+    def write(self, cache: SharedCache) -> None:
+        snap = SharedCache(cache.to_dict(), cache.n, cache.split_index)
+        with self._lock:
+            self._buf.append(snap)
+
+    def result(self) -> Dict[str, np.ndarray]:
+        with self._lock:
+            caches = sorted(self._buf, key=lambda c: c.split_index)
+            return concat_caches(caches, ordered=False).to_dict()
+
+    def clear(self) -> None:
+        with self._lock:
+            self._buf.clear()
+
+
+class FileSink(CollectSink):
+    """Writes the final result to a text file (paper: 'writes the final
+    results into a text file')."""
+
+    def __init__(self, name: str, path: str, sep: str = "|"):
+        super().__init__(name)
+        self.path = path
+        self.sep = sep
+
+    def close(self) -> None:
+        cols = self.result()
+        names = list(cols.keys())
+        with open(self.path, "w") as f:
+            f.write(self.sep.join(names) + "\n")
+            if names:
+                n = len(cols[names[0]])
+                for i in range(n):
+                    f.write(self.sep.join(str(cols[c][i]) for c in names) + "\n")

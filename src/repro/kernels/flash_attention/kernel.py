@@ -1,0 +1,167 @@
+"""Pallas TPU kernel: flash attention (online softmax), causal/bidirectional
+GQA with optional sliding window and logit softcap.
+
+TPU adaptation (DESIGN §4): the grid is (batch*kv_head, q_blocks, kv_blocks)
+with the LAST axis sequential — Pallas streams one K/V block at a time
+HBM->VMEM while the [block_q, head_dim] output tile and the online-softmax
+carries (m, l) live in VMEM scratch across the kv axis.  Q blocks are
+revisited per kv step via the BlockSpec index maps; the MXU does the
+[block_q, hd] @ [hd, block_k] score matmul and the [block_q, block_k] @
+[block_k, hd] value matmul at systolic throughput.
+
+Causality/window pruning: blocks entirely masked are skipped with pl.when
+(score compute is guarded), which converts the O(S^2) grid into the ~S^2/2
+causal trapezoid at zero code complexity — the grid still enumerates blocks
+but the skipped ones do no FLOPs and no VMEM writes.
+
+VMEM working set: q[bq,hd] + k[bk,hd] + v[bk,hd] + o[bq,hd] + m,l[bq,1]
+  + scores[bq,bk] ~= (2*bq + 2*bk)*hd*4 + bq*bk*4.
+With bq=bk=512, hd=128: ~2.1 MB << 16 MB.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, window: int, softcap: float,
+                  block_q: int, block_k: int, kv_blocks: int, seq_kv: int):
+    """Grid: (bh, q_block, kv_block); kv_block is the innermost sequential axis.
+
+    q_ref: [block_q, hd]; k_ref/v_ref: [block_k, hd]
+    o_ref: [block_q, hd] output tile
+    m_ref, l_ref: [block_q, 1] online-softmax max / normalizer (VMEM scratch)
+    acc_ref: [block_q, hd] un-normalized output accumulator (VMEM scratch)
+    """
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    # --- block-level pruning: skip fully-masked K/V blocks -----------------
+    #   causal:   need k_start <= q_end
+    #   window:   need k_end > q_start - window
+    run = True
+    if causal:
+        run = jnp.logical_and(run, k_start <= q_start + block_q - 1)
+    if window > 0:
+        run = jnp.logical_and(run, k_start + block_k - 1
+                              >= q_start - window + 1)
+
+    @pl.when(run)
+    def _block():
+        q = q_ref[...]
+        k = k_ref[...]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap and softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        # element mask inside the block
+        q_pos = q_start + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        mask = k_pos < seq_kv                      # pad rows beyond seq
+        if causal:
+            mask &= k_pos <= q_pos
+        if window > 0:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                        # [bq, 1]
+        l_prev = l_ref[...]
+        m_cur = jnp.max(s, axis=1, keepdims=True)  # [bq, 1]
+        m_new = jnp.maximum(m_prev, m_cur)
+        # guard fully-masked q rows (m_new == NEG_INF): exp(NEG_INF - NEG_INF)
+        p = jnp.exp(s - jnp.where(m_new <= NEG_INF / 2, 0.0, m_new))
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(jnp.where(m_prev <= NEG_INF / 2, NEG_INF,
+                                  m_prev - m_new))
+        alpha = jnp.where(m_prev <= NEG_INF / 2, 0.0, alpha)
+        l_ref[...] = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = (acc_ref[...] * alpha
+                        + jax.lax.dot_general(
+                            p.astype(v_ref.dtype), v_ref[...],
+                            (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(ki == kv_blocks - 1)
+    def _flush():
+        l = l_ref[...]
+        o_ref[...] = (acc_ref[...]
+                      / jnp.where(l == 0.0, 1.0, l)).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, window: int = 0,
+                           softcap: float = 0.0,
+                           block_q: int = 512, block_k: int = 512,
+                           interpret: bool = False) -> jax.Array:
+    """GQA flash attention.
+
+    q: [B, Sq, Kh, G, hd]; k, v: [B, Skv, Kh, hd].  Returns [B, Sq, Kh, G, hd].
+    The (B, Kh, G) axes are folded into the grid's first dim; K/V are
+    broadcast across G (grouped-query attention).
+    """
+    B, Sq, Kh, G, hd = q.shape
+    Skv = k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+
+    bq = min(block_q, Sq)
+    bk = min(block_k, Skv)
+    q_blocks = -(-Sq // bq)
+    kv_blocks = -(-Skv // bk)
+    pad_q = q_blocks * bq - Sq
+    pad_k = kv_blocks * bk - Skv
+
+    # fold: [B*Kh*G, S, hd] for q; [B*Kh, S, hd] for k/v
+    qf = jnp.moveaxis(q, 1, 3).reshape(B * Kh * G, Sq, hd)
+    kf = jnp.moveaxis(k, 1, 2).reshape(B * Kh, Skv, hd)
+    vf = jnp.moveaxis(v, 1, 2).reshape(B * Kh, Skv, hd)
+    if pad_q:
+        qf = jnp.pad(qf, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        kf = jnp.pad(kf, ((0, 0), (0, pad_k), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, pad_k), (0, 0)))
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, block_q=bq, block_k=bk, kv_blocks=kv_blocks,
+        seq_kv=Skv)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * Kh * G, q_blocks, kv_blocks),
+        in_specs=[
+            pl.BlockSpec((None, bq, hd), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((None, bk, hd), lambda b, qi, ki: (b // G, ki, 0)),
+            pl.BlockSpec((None, bk, hd), lambda b, qi, ki: (b // G, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, bq, hd), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Kh * G, q_blocks * bq, hd),
+                                       q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    out = out[:, :Sq].reshape(B, Kh, G, Sq, hd)
+    return jnp.moveaxis(out, 3, 1)

@@ -1,0 +1,31 @@
+"""Public flash_attention op: jit'd wrapper choosing Pallas (TPU),
+interpret=True (CPU validation) or the pure-jnp reference."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import flash_attention_pallas
+from .ref import flash_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "impl", "block_q", "block_k"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, impl: str = "auto",
+                    block_q: int = 512, block_k: int = 512) -> jax.Array:
+    """GQA flash attention.  q: [B, Sq, Kh, G, hd]; k, v: [B, Skv, Kh, hd]."""
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "reference"
+    if impl == "pallas":
+        return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                      softcap=softcap, block_q=block_q,
+                                      block_k=block_k)
+    if impl == "interpret":
+        return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                      softcap=softcap, block_q=block_q,
+                                      block_k=block_k, interpret=True)
+    return flash_attention_ref(q, k, v, causal=causal, window=window,
+                               softcap=softcap)

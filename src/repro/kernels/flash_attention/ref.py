@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for flash attention — materializes the full score matrix
+with fp32 softmax (numerically exact reference)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0,
+                        softcap: float = 0.0) -> jax.Array:
+    """q: [B, Sq, Kh, G, hd]; k, v: [B, Skv, Kh, hd] -> [B, Sq, Kh, G, hd]."""
+    B, Sq, Kh, G, hd = q.shape
+    Skv = k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap and softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    qp = jnp.arange(Sq)[:, None]
+    kp = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= kp <= qp
+    if window and window > 0:
+        mask &= kp > qp - window
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)          # fully-masked rows -> 0
+    out = jnp.einsum("bkgqs,bskh->bqkgh", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)

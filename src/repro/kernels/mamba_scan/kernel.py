@@ -1,0 +1,129 @@
+"""Pallas TPU kernel: fused selective-scan (Mamba-1 SSM hot loop).
+
+Recurrence per channel c and state n:
+    h_t[c, n] = exp(delta_t[c] * A[c, n]) * h_{t-1}[c, n]
+                + delta_t[c] * B_t[n] * x_t[c]
+    y_t[c]    = sum_n h_t[c, n] * C_t[n]
+
+TPU adaptation (DESIGN §4): the GPU implementation materializes
+dA/dBx = [B, T, d_inner, N] in HBM.  We instead fuse the outer products into
+the kernel: inputs are the SMALL tensors delta/x [B, T, d], B/C [B, T, N] and
+A [d, N]; the [d_blk, N] intermediates exist only in VMEM/VREGs.  HBM traffic
+drops by ~2*N (N=16 => ~32x) versus the materialized form — the same
+copy-elimination idea as the paper's shared caching scheme, applied to the
+HBM<->VMEM boundary.
+
+Grid: (batch, d_inner blocks, seq chunks) — the LAST axis is sequential;
+the [d_blk, N] state carry lives in VMEM scratch across chunk steps.  Each
+chunk streams [chunk, d_blk] slices of delta/x and [chunk, N] slices of B/C
+from HBM while the inner fori_loop runs the recurrence on VREG-resident
+tiles (elementwise VPU work — the op is memory-bound, so the win is the
+HBM-traffic reduction, not MXU utilization).
+
+VMEM per step (d_blk=512, N=16, chunk=64, fp32):
+  delta/x: 2*64*512*4 = 256 KB; B/C: 2*64*16*4 = 8 KB; A: 512*16*4 = 32 KB;
+  h carry: 32 KB; y: 128 KB  => ~0.5 MB << 16 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mamba_scan_kernel(delta_ref, x_ref, b_ref, c_ref, a_ref, h0_ref,
+                       y_ref, hT_ref, h_ref, *,
+                       chunk: int, n_chunks: int):
+    """One (batch, d_block) lane over one sequence chunk.
+
+    delta_ref, x_ref: [chunk, d_blk]   fp32
+    b_ref, c_ref:     [chunk, N]       fp32
+    a_ref:            [d_blk, N]       fp32 (A = -exp(A_log), precomputed)
+    h0_ref:           [d_blk, N]       fp32 initial state
+    y_ref:            [chunk, d_blk]   output
+    hT_ref:           [d_blk, N]       final state (written on last chunk)
+    h_ref:            [d_blk, N]       VMEM scratch carry
+    """
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = h0_ref[...]
+
+    a = a_ref[...]                                     # [d_blk, N]
+    delta = delta_ref[...]                             # [ch, d_blk]
+    x = x_ref[...]
+    bmat = b_ref[...]                                  # [ch, N]
+    cmat = c_ref[...]
+
+    def step(t, h):
+        d_t = delta[t][:, None]                        # [d_blk, 1]
+        dA = jnp.exp(d_t * a)                          # [d_blk, N]
+        dBx = d_t * bmat[t][None, :] * x[t][:, None]   # fused outer product
+        h = dA * h + dBx
+        y_t = jnp.sum(h * cmat[t][None, :], axis=1)    # [d_blk]
+        pl.store(y_ref, (pl.dslice(t, 1), slice(None)), y_t[None, :])
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, step, h_ref[...])
+    h_ref[...] = h
+
+    @pl.when(ci == n_chunks - 1)
+    def _flush():
+        hT_ref[...] = h
+
+
+def mamba_scan_pallas(delta: jax.Array, x: jax.Array, B: jax.Array,
+                      C: jax.Array, A: jax.Array, h0: jax.Array, *,
+                      chunk: int = 64, d_block: int = 512,
+                      interpret: bool = False):
+    """delta, x: [Bt, T, d]; B, C: [Bt, T, N]; A: [d, N]; h0: [Bt, d, N].
+    Returns (y [Bt, T, d], hT [Bt, d, N]), all fp32."""
+    Bt, T, d = delta.shape
+    N = B.shape[-1]
+    ch = min(chunk, T)
+    db = min(d_block, d)
+    n_chunks = -(-T // ch)
+    n_dblk = -(-d // db)
+    pad_t = n_chunks * ch - T
+    pad_d = n_dblk * db - d
+    if pad_t or pad_d:
+        delta = jnp.pad(delta, ((0, 0), (0, pad_t), (0, pad_d)))
+        x = jnp.pad(x, ((0, 0), (0, pad_t), (0, pad_d)))
+        B = jnp.pad(B, ((0, 0), (0, pad_t), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad_t), (0, 0)))
+    if pad_d:
+        A = jnp.pad(A, ((0, pad_d), (0, 0)))
+        h0 = jnp.pad(h0, ((0, 0), (0, pad_d), (0, 0)))
+
+    kernel = functools.partial(_mamba_scan_kernel, chunk=ch,
+                               n_chunks=n_chunks)
+    y, hT = pl.pallas_call(
+        kernel,
+        grid=(Bt, n_dblk, n_chunks),
+        in_specs=[
+            pl.BlockSpec((None, ch, db), lambda b, di, ci: (b, ci, di)),
+            pl.BlockSpec((None, ch, db), lambda b, di, ci: (b, ci, di)),
+            pl.BlockSpec((None, ch, N), lambda b, di, ci: (b, ci, 0)),
+            pl.BlockSpec((None, ch, N), lambda b, di, ci: (b, ci, 0)),
+            pl.BlockSpec((db, N), lambda b, di, ci: (di, 0)),
+            pl.BlockSpec((None, db, N), lambda b, di, ci: (b, di, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, ch, db), lambda b, di, ci: (b, ci, di)),
+            pl.BlockSpec((None, db, N), lambda b, di, ci: (b, di, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bt, n_chunks * ch, n_dblk * db),
+                                 jnp.float32),
+            jax.ShapeDtypeStruct((Bt, n_dblk * db, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((db, N), jnp.float32)],
+        interpret=interpret,
+    )(delta.astype(jnp.float32), x.astype(jnp.float32),
+      B.astype(jnp.float32), C.astype(jnp.float32),
+      A.astype(jnp.float32), h0.astype(jnp.float32))
+    return y[:, :T, :d], hT[:, :d]

@@ -1,0 +1,27 @@
+"""Public mamba_scan op: jit'd wrapper choosing Pallas (TPU), interpret=True
+(CPU validation) or the pure-jnp reference."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import mamba_scan_pallas
+from .ref import mamba_scan_ref
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "chunk", "d_block"))
+def mamba_scan(delta: jax.Array, x: jax.Array, B: jax.Array, C: jax.Array,
+               A: jax.Array, h0: jax.Array, impl: str = "auto",
+               chunk: int = 64, d_block: int = 512):
+    """Fused selective scan.  delta, x: [Bt, T, d]; B, C: [Bt, T, N];
+    A: [d, N]; h0: [Bt, d, N] -> (y [Bt, T, d], hT [Bt, d, N])."""
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "reference"
+    if impl == "pallas":
+        return mamba_scan_pallas(delta, x, B, C, A, h0, chunk=chunk,
+                                 d_block=d_block)
+    if impl == "interpret":
+        return mamba_scan_pallas(delta, x, B, C, A, h0, chunk=chunk,
+                                 d_block=d_block, interpret=True)
+    return mamba_scan_ref(delta, x, B, C, A, h0)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the selective scan (lax.scan over time)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mamba_scan_ref(delta: jax.Array, x: jax.Array, B: jax.Array,
+                   C: jax.Array, A: jax.Array, h0: jax.Array):
+    """delta, x: [Bt, T, d]; B, C: [Bt, T, N]; A: [d, N]; h0: [Bt, d, N].
+    Returns (y [Bt, T, d], hT [Bt, d, N])."""
+    delta = delta.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+    B = B.astype(jnp.float32)
+    C = C.astype(jnp.float32)
+    A = A.astype(jnp.float32)
+    h0 = h0.astype(jnp.float32)
+
+    def step(h, inp):
+        d_t, x_t, b_t, c_t = inp                  # [Bt,d], [Bt,d], [Bt,N], [Bt,N]
+        dA = jnp.exp(d_t[..., None] * A)          # [Bt, d, N]
+        dBx = d_t[..., None] * b_t[:, None, :] * x_t[..., None]
+        h = dA * h + dBx
+        y_t = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y_t
+
+    xs = (jnp.moveaxis(delta, 1, 0), jnp.moveaxis(x, 1, 0),
+          jnp.moveaxis(B, 1, 0), jnp.moveaxis(C, 1, 0))
+    hT, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), hT

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for segment_sum (the allclose reference)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_sum_ref(seg_ids: jax.Array, values: jax.Array,
+                    n_groups: int) -> jax.Array:
+    """seg_ids: [N] int (-1 = padding); values: [N, C].  -> [n_groups, C]."""
+    valid = seg_ids >= 0
+    safe = jnp.where(valid, seg_ids, 0)
+    vals = jnp.where(valid[:, None], values.astype(jnp.float32), 0.0)
+    return jax.ops.segment_sum(vals, safe, num_segments=n_groups)

@@ -1,0 +1,8 @@
+# Launchers: mesh construction, dry-run (lower+compile proof), roofline
+# analysis, and the train/serve drivers.
+#
+# NOTE: repro.launch.dryrun must be the FIRST repro import in its process —
+# it sets XLA_FLAGS for 512 placeholder devices before jax initializes.
+from .mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16, make_production_mesh
+
+__all__ = ["HBM_BW", "ICI_BW", "PEAK_FLOPS_BF16", "make_production_mesh"]

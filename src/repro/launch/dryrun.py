@@ -1,0 +1,279 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines, before ANY other import — jax locks the
+#   device count on first backend init.  Do NOT set this globally.
+
+# Multi-pod dry-run: lower + compile every (architecture x input shape) on
+# the production meshes, print memory/cost analysis, and persist the roofline
+# terms for §Roofline.
+#
+# This proves the distribution config is coherent without real hardware:
+# sharding mismatches, OOM-at-compile and unsupported collectives all surface
+# here as hard failures.
+#
+# Usage:
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch mixtral-8x7b --shape train_4k
+#   PYTHONPATH=src python -m repro.launch.dryrun --all               # single-pod
+#   PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod   # 2x16x16
+
+import argparse
+import json
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+
+from ..configs import ARCH_IDS, get_config, get_shapes
+from ..models.transformer import decode_step, forward_prefill
+from ..train.optimizer import OptConfig
+from ..train.train_step import make_train_step
+from .hlo_analysis import analyze_compiled, model_flops_for
+from .mesh import make_production_mesh
+from .specs import cell_specs
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "benchmarks", "artifacts", "dryrun")
+
+
+def lower_cell(arch_id: str, shape_name: str, mesh, *,
+               overrides: Optional[Dict[str, Any]] = None,
+               grad_rs: bool = False):
+    """Lower one cell.  Returns (lowered, cfg, shape, n_devices).
+    ``grad_rs``: constrain per-microbatch grads to the param sharding
+    (reduce-scatter accumulation — §Perf lever)."""
+    cfg = get_config(arch_id)
+    shape = get_shapes(arch_id)[shape_name]
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    specs = cell_specs(cfg, shape, mesh)
+    cfg = specs["cfg"]              # kv_repeat applied for this mesh
+    rules = specs["rules"]
+
+    with jax.set_mesh(mesh):
+        if shape.kind == "train":
+            step = make_train_step(
+                cfg, OptConfig(), rules,
+                grad_pspecs=specs["param_specs"] if grad_rs else None)
+            fn = jax.jit(step,
+                         in_shardings=(specs["param_shardings"],
+                                       specs["opt_shardings"],
+                                       specs["batch_shardings"]),
+                         out_shardings=(specs["param_shardings"],
+                                        specs["opt_shardings"], None),
+                         donate_argnums=(0, 1))
+            lowered = fn.lower(specs["param_shapes"], specs["opt_shapes"],
+                               specs["batch_shapes"])
+        elif shape.kind == "prefill":
+            fn = jax.jit(lambda p, b: forward_prefill(p, b, cfg, rules),
+                         in_shardings=(specs["param_shardings"],
+                                       specs["batch_shardings"]))
+            lowered = fn.lower(specs["param_shapes"], specs["batch_shapes"])
+        else:  # decode
+            fn = jax.jit(lambda p, c, b: decode_step(p, c, b, cfg, rules),
+                         in_shardings=(specs["param_shardings"],
+                                       specs["cache_shardings"],
+                                       specs["batch_shardings"]),
+                         out_shardings=(None, specs["cache_shardings"]),
+                         donate_argnums=(1,))
+            lowered = fn.lower(specs["param_shapes"], specs["cache_shapes"],
+                               specs["batch_shapes"])
+    return lowered, cfg, shape
+
+
+def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool = False,
+             verbose: bool = True, save: bool = True,
+             overrides: Optional[Dict[str, Any]] = None,
+             grad_rs: bool = False, tag: str = "") -> Dict[str, Any]:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    t0 = time.time()
+    lowered, cfg, shape = lower_cell(arch_id, shape_name, mesh,
+                                     overrides=overrides, grad_rs=grad_rs)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    all_bf16 = (cfg.param_dtype == "bfloat16"
+                and cfg.opt_state_dtype == "bfloat16"
+                and cfg.compute_dtype == "bfloat16")
+    # per-device microbatch size: identifies activation-shaped f32
+    # collectives that run bf16-native on TPU (CPU legalization upcast)
+    data_total = mesh.shape["data"] * mesh.shape.get("pod", 1)
+    mb_dim = None
+    if cfg.compute_dtype == "bfloat16" and not all_bf16:
+        mb_dim = max(1, shape.global_batch // data_total
+                     // (cfg.grad_accum if shape.kind == "train" else 1))
+    roof = analyze_compiled(compiled, n_dev,
+                            model_flops=model_flops_for(cfg, shape),
+                            assume_bf16=all_bf16,
+                            activation_leading_dim=mb_dim)
+    from .hlo_cost import cpu_bf16_inflation_bytes
+    bf16_infl = cpu_bf16_inflation_bytes(compiled.as_text())
+    rec: Dict[str, Any] = {
+        "arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+        "kind": shape.kind, "tag": tag, "assume_bf16": all_bf16,
+        "activation_leading_dim": mb_dim,
+        "seq_len": shape.seq_len, "global_batch": shape.global_batch,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "alias_bytes": int(getattr(mem, "alias_size_in_bytes", 0)),
+            "peak_bytes_per_device": int(mem.argument_size_in_bytes
+                                         + mem.output_size_in_bytes
+                                         + mem.temp_size_in_bytes
+                                         - getattr(mem, "alias_size_in_bytes", 0)),
+            # XLA CPU legalizes bf16 math to f32, materializing f32 twins of
+            # bf16 buffers that do not exist on TPU; subtracting them
+            # approximates the TPU temp footprint (see hlo_cost)
+            "cpu_bf16_inflation_bytes": int(bf16_infl),
+            "tpu_corrected_peak_bytes": int(mem.argument_size_in_bytes
+                                            + mem.output_size_in_bytes
+                                            + max(mem.temp_size_in_bytes
+                                                  - bf16_infl, 0)
+                                            - getattr(mem, "alias_size_in_bytes", 0)),
+        },
+        "roofline": roof.to_dict(),
+    }
+    if verbose:
+        m = rec["memory"]
+        r = rec["roofline"]
+        print(f"[{mesh_name}] {arch_id} x {shape_name}"
+              f"{(' [' + tag + ']') if tag else ''}")
+        print(f"  lower {t_lower:.1f}s  compile {t_compile:.1f}s")
+        print(f"  memory/device: args {m['argument_bytes']/2**30:.2f} GiB"
+              f" + temp {m['temp_bytes']/2**30:.2f} GiB"
+              f" - aliased {m['alias_bytes']/2**30:.2f} GiB"
+              f" -> peak {m['peak_bytes_per_device']/2**30:.2f} GiB"
+              f" (tpu-corrected {m['tpu_corrected_peak_bytes']/2**30:.2f}"
+              f" GiB, HBM 16 GiB)")
+        print(f"  flops/dev {r['flops_per_device']:.3e}"
+              f"  bytes/dev {r['bytes_per_device']:.3e}"
+              f"  coll bytes/dev {r['collective_bytes_per_device']:.3e}")
+        print(f"  t_compute {r['t_compute_s']*1e3:.2f} ms"
+              f"  t_memory {r['t_memory_s']*1e3:.2f} ms"
+              f"  t_collective {r['t_collective_s']*1e3:.2f} ms"
+              f"  -> bottleneck: {r['bottleneck']}")
+        print(f"  MODEL_FLOPS/HLO_FLOPS {r['useful_flops_fraction']:.3f}"
+              f"  roofline fraction {r['roofline_fraction']:.3f}")
+        sys.stdout.flush()
+    if save:
+        os.makedirs(ARTIFACT_DIR, exist_ok=True)
+        suffix = f"_{tag}" if tag else ""
+        base = f"{arch_id}_{shape_name}_{mesh_name}{suffix}".replace("/", "-")
+        with open(os.path.join(ARTIFACT_DIR, base + ".json"), "w") as f:
+            json.dump(rec, f, indent=2)
+        # compressed HLO text: lets the roofline analysis be re-run after
+        # hlo_cost changes without recompiling every cell
+        import zstandard
+        with open(os.path.join(ARTIFACT_DIR, base + ".hlo.zst"), "wb") as f:
+            f.write(zstandard.ZstdCompressor(level=3).compress(
+                compiled.as_text().encode()))
+    return rec
+
+
+def reanalyze_artifacts() -> int:
+    """Recompute every saved artifact's roofline record from its stored HLO
+    (after hlo_cost changes) — no recompilation."""
+    import zstandard
+    from .hlo_analysis import Roofline
+    from .hlo_cost import analyze_hlo_text, cpu_bf16_inflation_bytes
+    n = 0
+    for fname in sorted(os.listdir(ARTIFACT_DIR)):
+        if not fname.endswith(".json"):
+            continue
+        jpath = os.path.join(ARTIFACT_DIR, fname)
+        hpath = jpath[:-5] + ".hlo.zst"
+        if not os.path.exists(hpath):
+            continue
+        with open(jpath) as f:
+            rec = json.load(f)
+        with open(hpath, "rb") as f:
+            hlo = zstandard.ZstdDecompressor().decompress(f.read()).decode()
+        n_dev = rec["roofline"]["n_devices"]
+        if "assume_bf16" not in rec:
+            c = get_config(rec["arch"])
+            rec["assume_bf16"] = (c.param_dtype == "bfloat16"
+                                  and c.opt_state_dtype == "bfloat16"
+                                  and c.compute_dtype == "bfloat16")
+        if "activation_leading_dim" not in rec:
+            c = get_config(rec["arch"])
+            data_total = 16 * (2 if rec["mesh"] == "2x16x16" else 1)
+            rec["activation_leading_dim"] = (
+                None if rec["assume_bf16"] else
+                max(1, rec["global_batch"] // data_total
+                    // (c.grad_accum if rec["kind"] == "train" else 1)))
+        hc = analyze_hlo_text(hlo, n_dev, assume_bf16=rec["assume_bf16"],
+                              activation_leading_dim=rec[
+                                  "activation_leading_dim"])
+        roof = Roofline(
+            flops_per_device=hc.flops,
+            bytes_per_device=hc.hbm_bytes,
+            collective_bytes_per_device=hc.collectives.total_wire_bytes,
+            collective_operand_bytes_per_device=(
+                hc.collectives.total_operand_bytes),
+            collective_bytes_by_kind=dict(hc.collectives.wire_bytes),
+            collective_count_by_kind=dict(hc.collectives.counts),
+            n_devices=n_dev,
+            model_flops=rec["roofline"]["model_flops"],
+            xla_flops=rec["roofline"].get("xla_flops_once_counted", 0.0),
+            xla_bytes=rec["roofline"].get("xla_bytes_once_counted", 0.0))
+        rec["roofline"] = roof.to_dict()
+        infl = cpu_bf16_inflation_bytes(hlo)
+        m = rec["memory"]
+        m["cpu_bf16_inflation_bytes"] = int(infl)
+        m["tpu_corrected_peak_bytes"] = int(
+            m["argument_bytes"] + m["output_bytes"]
+            + max(m["temp_bytes"] - infl, 0) - m["alias_bytes"])
+        with open(jpath, "w") as f:
+            json.dump(rec, f, indent=2)
+        n += 1
+    print(f"reanalyzed {n} artifacts")
+    return n
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, choices=ARCH_IDS + [None])
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="every (arch x shape) cell")
+    ap.add_argument("--no-save", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch_id in ARCH_IDS:
+            for shape_name in get_shapes(arch_id):
+                cells.append((arch_id, shape_name))
+    else:
+        if not args.arch:
+            ap.error("--arch required unless --all")
+        shapes = get_shapes(args.arch)
+        names = [args.shape] if args.shape else list(shapes)
+        cells = [(args.arch, s) for s in names]
+
+    failures = []
+    for arch_id, shape_name in cells:
+        try:
+            run_cell(arch_id, shape_name, multi_pod=args.multi_pod,
+                     save=not args.no_save)
+        except Exception:
+            failures.append((arch_id, shape_name))
+            traceback.print_exc()
+    print(f"\n{len(cells) - len(failures)}/{len(cells)} cells passed"
+          f" ({'multi-pod 2x16x16' if args.multi_pod else 'single-pod 16x16'})")
+    for f in failures:
+        print("  FAILED:", f)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

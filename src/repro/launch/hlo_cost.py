@@ -1,0 +1,703 @@
+"""Trip-count-aware cost walker over compiled (post-SPMD) HLO text.
+
+XLA's built-in HloCostAnalysis counts a while-loop body ONCE, which
+undercounts scanned programs (layer scan x microbatch scan) by orders of
+magnitude and misses the collectives inside the loops.  This walker parses
+the optimized HLO text, builds a per-computation symbol table of instruction
+shapes, and computes
+
+    flops(comp)      — dots/convs at 2*M*N*K, elementwise at 1/element,
+                       fusions recurse into the called computation,
+                       while loops multiply body+cond by the trip count
+                       (read from the loop-bound constant in the condition);
+    hbm_bytes(comp)  — operand+result sizes of every non-control instruction
+                       at fusion granularity (fusion internals don't touch
+                       HBM); dynamic-update-slice counts 2x the update slice
+                       (in-place semantics), not the full buffer;
+    collectives      — per-kind operand bytes AND ring-model wire bytes
+                       (all-reduce 2(g-1)/g, all-gather/all-to-all (g-1)/g,
+                       reduce-scatter (g-1)x result), trip-multiplied.
+
+All numbers are PER DEVICE: the parsed module is the partitioned program.
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "u2": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1, "f8e4m3b11fnuz": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*"          # name
+    r"((?:\([^)]*\)|[a-z][a-z0-9]*\[[0-9,]*\](?:\{[^}]*\})?))\s+"  # shape
+    r"([\w\-]+)\("                                   # opcode
+)
+_COMP_START_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s+->\s+.*\{")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_GROUPS_BRACKET_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([0-9,]*)\}")
+_CONST_INT_RE = re.compile(r"=\s*s(?:32|64)\[\]\s+constant\((\d+)\)")
+_KNOWN_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_DIMLABELS_RE = re.compile(r"dim_labels=([\w?]+)_([\w?]+)->")
+_FEATURE_GROUPS_RE = re.compile(r"feature_group_count=(\d+)")
+
+_CONTROL_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+                "bitcast", "after-all", "partition-id", "replica-id",
+                "iota", "rng-bit-generator", "rng",
+                "custom-call", "infeed", "outfeed", "domain",
+                "opt-barrier"}
+
+_TRANSCENDENTAL = {"exponential", "tanh", "log", "power", "divide", "sqrt",
+                   "rsqrt", "sine", "cosine", "logistic", "expm1", "log1p",
+                   "atan2", "erf", "cbrt", "exponential-minus-one"}
+
+COLLECTIVE_KINDS = ("all-reduce", "all-gather", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+
+def shape_elems_bytes(shape_str: str) -> Tuple[int, int]:
+    """Total (elements, bytes) of a shape string (tuples summed)."""
+    elems = 0
+    byts = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        byts += n * _DTYPE_BYTES[dtype]
+    return elems, byts
+
+
+@dataclass
+class Instr:
+    name: str
+    shape: str
+    opcode: str
+    operands: List[str]
+    attrs: str
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    by_name: Dict[str, Instr] = field(default_factory=dict)
+
+
+@dataclass
+class CollectiveTotals:
+    operand_bytes: Dict[str, float] = field(default_factory=dict)
+    wire_bytes: Dict[str, float] = field(default_factory=dict)
+    counts: Dict[str, float] = field(default_factory=dict)
+
+    def add(self, kind: str, operand_b: float, wire_b: float,
+            mult: float) -> None:
+        self.operand_bytes[kind] = (self.operand_bytes.get(kind, 0.0)
+                                    + operand_b * mult)
+        self.wire_bytes[kind] = self.wire_bytes.get(kind, 0.0) + wire_b * mult
+        self.counts[kind] = self.counts.get(kind, 0.0) + mult
+
+    @property
+    def total_operand_bytes(self) -> float:
+        return sum(self.operand_bytes.values())
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return sum(self.wire_bytes.values())
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collectives: CollectiveTotals = field(default_factory=CollectiveTotals)
+    while_trip_counts: List[int] = field(default_factory=list)
+
+
+def parse_computations(hlo_text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry: Optional[str] = None
+    for line in hlo_text.splitlines():
+        if cur is None:
+            m = _COMP_START_RE.match(line)
+            if m:
+                cur = Computation(m.group(2))
+                if m.group(1):
+                    entry = m.group(2)
+                comps[cur.name] = cur
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, shape, opcode = m.group(1), m.group(2), m.group(3)
+        rest = line[m.end():]
+        # operand list = refs before the closing paren of the call
+        depth = 1
+        i = 0
+        while i < len(rest) and depth > 0:
+            if rest[i] == "(":
+                depth += 1
+            elif rest[i] == ")":
+                depth -= 1
+            i += 1
+        opnd_str, attrs = rest[: i - 1], rest[i:]
+        instr = Instr(name, shape, opcode,
+                      _OPERAND_RE.findall(opnd_str), attrs, line)
+        cur.instrs.append(instr)
+        cur.by_name[name] = instr
+    if entry is not None:
+        comps["__entry__"] = comps[entry]
+    return comps
+
+
+def _operand_shape(comp: Computation, ref: str) -> str:
+    ins = comp.by_name.get(ref)
+    return ins.shape if ins is not None else ""
+
+
+def _trip_count(cond: Computation) -> int:
+    """Loop bound = the largest integer constant in the condition region
+    (JAX counter loops compare the induction var against the bound)."""
+    best = 1
+    for ins in cond.instrs:
+        m = _CONST_INT_RE.search(ins.line)
+        if m:
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def _while_trip(walker: "HloCostWalker", ins: Instr) -> int:
+    """Trip count of a while instruction: prefer XLA's own
+    backend_config known_trip_count; fall back to the condition constant."""
+    m = _KNOWN_TRIP_RE.search(ins.attrs)
+    if m:
+        return int(m.group(1))
+    cond = _COND_RE.search(ins.attrs)
+    if cond and cond.group(1) in walker.comps:
+        return _trip_count(walker.comps[cond.group(1)])
+    return 1
+
+
+def _dot_flops(comp: Computation, ins: Instr) -> float:
+    out_elems, _ = shape_elems_bytes(ins.shape)
+    lhs_shape = _operand_shape(comp, ins.operands[0]) if ins.operands else ""
+    m = _CONTRACT_RE.search(ins.attrs)
+    k = 1
+    if m and lhs_shape:
+        sm = _SHAPE_RE.search(lhs_shape)
+        if sm:
+            dims = [int(d) for d in sm.group(2).split(",") if d]
+            for idx in m.group(1).split(","):
+                if idx and int(idx) < len(dims):
+                    k *= dims[int(idx)]
+    return 2.0 * out_elems * k
+
+
+def _conv_flops(comp: Computation, ins: Instr) -> float:
+    out_elems, _ = shape_elems_bytes(ins.shape)
+    rhs_shape = (_operand_shape(comp, ins.operands[1])
+                 if len(ins.operands) > 1 else "")
+    m = _DIMLABELS_RE.search(ins.attrs)
+    if not (m and rhs_shape):
+        return 2.0 * out_elems
+    labels = m.group(2)             # e.g. '0io' / '01io'
+    sm = _SHAPE_RE.search(rhs_shape)
+    dims = [int(d) for d in sm.group(2).split(",") if d] if sm else []
+    spatial = 1
+    cin = 1
+    for ch, d in zip(labels, dims):
+        if ch.isdigit():
+            spatial *= d
+        elif ch == "i":
+            cin = d
+    return 2.0 * out_elems * spatial * cin
+
+
+def _group_size(ins: Instr, n_partitions: int) -> int:
+    m = _GROUPS_BRACKET_RE.search(ins.attrs)
+    if m:
+        return max(1, int(m.group(2)))
+    m = _GROUPS_BRACE_RE.search(ins.attrs)
+    if m:
+        ids = [x for x in m.group(1).split(",") if x]
+        return max(1, len(ids))
+    return max(1, n_partitions)
+
+
+def _bf16_native_factor(comp: Computation, ins: Instr) -> float:
+    """0.5 when an f32 collective's payload is really bf16 data upcast by
+    XLA CPU's float-normalization (bf16 has no CPU ALUs) — TPU would run the
+    collective natively in bf16 at half the bytes.
+
+    Detected from either side:
+      producer: convert(bf16->f32) (or a wrapped-convert fusion) feeds it;
+      consumer: its result is immediately converted/narrowed back to bf16.
+    """
+    if not ins.shape.startswith("f32") or not ins.operands:
+        return 1.0
+    src = comp.by_name.get(ins.operands[0])
+    if src is not None:
+        if src.opcode == "convert" and src.operands:
+            orig = comp.by_name.get(src.operands[0])
+            if orig is not None and orig.shape.startswith("bf16"):
+                return 0.5
+        if src.opcode == "fusion" and "convert" in src.name:
+            for ref in src.operands:
+                o = comp.by_name.get(ref)
+                if o is not None and o.shape.startswith("bf16"):
+                    return 0.5
+    # consumer side: f32 result only used as bf16
+    consumers = [c for c in comp.instrs if ins.name in c.operands]
+    if consumers and all(
+            (c.opcode == "convert" and c.shape.startswith("bf16"))
+            or (c.opcode == "fusion" and "convert" in c.name
+                and c.shape.startswith("bf16"))
+            for c in consumers):
+        return 0.5
+    return 1.0
+
+
+def _consumed_slice_only(walker, comp: Computation, ins: Instr,
+                         depth: int = 0) -> bool:
+    """True if ``ins``'s value is only ever consumed through slices — the
+    all-reduce + dynamic-slice pattern TPU's ReduceScatterCreator rewrites
+    to a true reduce-scatter.  Follows get-tuple-element and fusion
+    parameters one level deep."""
+    if depth > 3:
+        return False
+    consumers = [c for c in comp.instrs if ins.name in c.operands]
+    if not consumers:
+        return False
+    for c in consumers:
+        if c.opcode == "dynamic-slice":
+            continue
+        if c.opcode == "get-tuple-element":
+            if not _consumed_slice_only(walker, comp, c, depth + 1):
+                return False
+            continue
+        if c.opcode == "fusion" and walker is not None:
+            m = _CALLS_RE.search(c.attrs)
+            called = walker.comps.get(m.group(1)) if m else None
+            if called is None:
+                return False
+            ok = True
+            for i, ref in enumerate(c.operands):
+                if ref != ins.name:
+                    continue
+                pname = None
+                for inner in called.instrs:
+                    if inner.opcode == "parameter" and \
+                            f"parameter({i})" in inner.line:
+                        pname = inner.name
+                        break
+                if pname is None:
+                    ok = False
+                    break
+                # chase CPU-legalization convert/bitcast/copy chains before
+                # requiring the slice
+                frontier = [pname]
+                hops = 0
+                found_slice = False
+                while frontier and hops < 8:
+                    hops += 1
+                    nxt = []
+                    for fn_ in frontier:
+                        cons_ = [x for x in called.instrs
+                                 if fn_ in x.operands]
+                        if not cons_:
+                            ok = False
+                            break
+                        for x in cons_:
+                            if x.opcode == "dynamic-slice":
+                                found_slice = True
+                            elif x.opcode in ("convert", "bitcast", "copy"):
+                                nxt.append(x.name)
+                            else:
+                                ok = False
+                                break
+                        if not ok:
+                            break
+                    if not ok:
+                        break
+                    frontier = nxt
+                if not ok or not found_slice:
+                    ok = False
+                    break
+            if not ok:
+                return False
+            continue
+        return False
+    return True
+
+
+def _collective_cost(comp: Computation, ins: Instr, kind: str,
+                     n_partitions: int, assume_bf16: bool = False,
+                     walker=None) -> Tuple[float, float]:
+    """-> (operand_bytes, ring wire_bytes) per device for one execution.
+
+    ``assume_bf16``: the model's params/compute/grads are all bf16 (grok,
+    jamba) — every f32 collective in the CPU-legalized module is an upcast
+    artifact; TPU moves half the bytes."""
+    _, out_b = shape_elems_bytes(ins.shape)
+    factor = _bf16_native_factor(comp, ins)
+    if factor == 1.0 and assume_bf16 and ins.shape.startswith("f32"):
+        factor = 0.5
+    if factor == 1.0 and walker is not None \
+            and walker.activation_leading_dim is not None \
+            and ins.shape.startswith("f32"):
+        # activation-shaped f32 payload (leading dim = microbatch): the
+        # model computes these in bf16; the f32 width is CPU legalization
+        m_ = _SHAPE_RE.search(ins.shape)
+        if m_:
+            dims = [int(d) for d in m_.group(2).split(",") if d]
+            if len(dims) >= 3 and dims[0] == walker.activation_leading_dim:
+                factor = 0.5
+    out_b *= factor
+    g = _group_size(ins, n_partitions)
+    if kind == "all-gather":
+        op_b = out_b / g
+        wire = out_b * (g - 1) / g
+    elif kind == "all-reduce":
+        op_b = out_b
+        # CPU GSPMD lowers a sharded reduction as all-reduce + dynamic-slice;
+        # TPU's ReduceScatterCreator pass rewrites that pair to a true
+        # reduce-scatter at HALF the wire bytes — price it as RS when a
+        # result (or tuple element) is only consumed through slices.
+        if ins.shape.startswith("(") and walker is not None:
+            elem_sizes = [shape_elems_bytes(f"{dt_}[{dims}]")[1]
+                          for dt_, dims in _SHAPE_RE.findall(ins.shape)]
+            bf = (out_b / sum(elem_sizes)) if sum(elem_sizes) else 1.0
+            gtes = [(c, int(re.search(r"index=(\d+)", c.attrs).group(1)))
+                    for c in comp.instrs
+                    if c.opcode == "get-tuple-element"
+                    and ins.name in c.operands
+                    and re.search(r"index=(\d+)", c.attrs)]
+            wire = 0.0
+            for c, idx in gtes:
+                if idx < len(elem_sizes):
+                    f_ = (1.0 if _consumed_slice_only(walker, comp, c)
+                          else 2.0)
+                    wire += f_ * elem_sizes[idx] * bf * (g - 1) / g
+        else:
+            slice_only = _consumed_slice_only(walker, comp, ins)
+            wire = (1.0 if slice_only else 2.0) * out_b * (g - 1) / g
+    elif kind == "reduce-scatter":
+        op_b = out_b * g
+        wire = out_b * (g - 1)
+    elif kind == "all-to-all":
+        op_b = out_b
+        wire = out_b * (g - 1) / g
+    else:  # collective-permute
+        op_b = out_b
+        wire = out_b
+    return op_b, wire
+
+
+class HloCostWalker:
+    def __init__(self, hlo_text: str, n_partitions: int,
+                 assume_bf16: bool = False,
+                 activation_leading_dim: Optional[int] = None):
+        """``activation_leading_dim``: per-device microbatch size — f32
+        collectives whose first dim equals it (rank>=3) carry bf16
+        activations upcast by CPU float-normalization; price at bf16."""
+        self.comps = parse_computations(hlo_text)
+        self.n_partitions = n_partitions
+        self.assume_bf16 = assume_bf16
+        self.activation_leading_dim = activation_leading_dim
+        self._flops_cache: Dict[str, float] = {}
+        self._bytes_cache: Dict[str, float] = {}
+        self.cost = HloCost()
+
+    # ------------------------------------------------------------- flops
+    def comp_flops(self, name: str) -> float:
+        if name in self._flops_cache:
+            return self._flops_cache[name]
+        comp = self.comps.get(name)
+        if comp is None:
+            return 0.0
+        self._flops_cache[name] = 0.0          # cycle guard
+        total = 0.0
+        for ins in comp.instrs:
+            total += self.instr_flops(comp, ins)
+        self._flops_cache[name] = total
+        return total
+
+    def instr_flops(self, comp: Computation, ins: Instr) -> float:
+        op = ins.opcode
+        if op in _CONTROL_OPS or op.endswith("-done"):
+            return 0.0
+        if op == "while":
+            body = _BODY_RE.search(ins.attrs)
+            cond = _COND_RE.search(ins.attrs)
+            trip = _while_trip(self, ins)
+            self.cost.while_trip_counts.append(trip)
+            sub = 0.0
+            if body:
+                sub += self.comp_flops(body.group(1))
+            if cond:
+                sub += self.comp_flops(cond.group(1))
+            return trip * sub
+        if op == "fusion":
+            m = _CALLS_RE.search(ins.attrs)
+            return self.comp_flops(m.group(1)) if m else 0.0
+        if op in ("call", "async-start"):
+            m = _TO_APPLY_RE.search(ins.attrs) or _CALLS_RE.search(ins.attrs)
+            return self.comp_flops(m.group(1)) if m else 0.0
+        if op == "conditional":
+            flops = [self.comp_flops(c)
+                     for c in re.findall(r"%([\w.\-]+)", ins.attrs)
+                     if c in self.comps]
+            return max(flops) if flops else 0.0
+        if op == "dot":
+            return _dot_flops(comp, ins)
+        if op == "convolution":
+            return _conv_flops(comp, ins)
+        if op in ("reduce", "reduce-window"):
+            in_elems = sum(shape_elems_bytes(_operand_shape(comp, o))[0]
+                           for o in ins.operands[:1])
+            return float(in_elems)
+        out_elems, _ = shape_elems_bytes(ins.shape)
+        if op in _TRANSCENDENTAL:
+            return float(out_elems)
+        if op in ("add", "subtract", "multiply", "maximum", "minimum",
+                  "and", "or", "xor", "select", "compare", "clamp",
+                  "negate", "abs", "floor", "ceil", "round-nearest-afz",
+                  "round-nearest-even", "sign", "not"):
+            return float(out_elems)
+        return 0.0
+
+    # ------------------------------------------------------------- bytes
+    def comp_bytes(self, name: str) -> float:
+        if name in self._bytes_cache:
+            return self._bytes_cache[name]
+        comp = self.comps.get(name)
+        if comp is None:
+            return 0.0
+        self._bytes_cache[name] = 0.0
+        total = 0.0
+        for ins in comp.instrs:
+            total += self.instr_bytes(comp, ins)
+        self._bytes_cache[name] = total
+        return total
+
+    def instr_bytes(self, comp: Computation, ins: Instr) -> float:
+        op = ins.opcode
+        if op in _CONTROL_OPS or op.endswith("-done"):
+            return 0.0
+        if op == "while":
+            body = _BODY_RE.search(ins.attrs)
+            cond = _COND_RE.search(ins.attrs)
+            trip = _while_trip(self, ins)
+            sub = 0.0
+            if body:
+                sub += self.comp_bytes(body.group(1))
+            if cond:
+                sub += self.comp_bytes(cond.group(1))
+            return trip * sub
+        if op == "conditional":
+            byts = [self.comp_bytes(c)
+                    for c in re.findall(r"%([\w.\-]+)", ins.attrs)
+                    if c in self.comps]
+            return max(byts) if byts else 0.0
+        if op == "call":
+            m = _TO_APPLY_RE.search(ins.attrs) or _CALLS_RE.search(ins.attrs)
+            return self.comp_bytes(m.group(1)) if m else 0.0
+        if op == "dynamic-update-slice":
+            # in-place: traffic = 2x the update slice, not the full buffer
+            upd = (_operand_shape(comp, ins.operands[1])
+                   if len(ins.operands) > 1 else ins.shape)
+            _, ub = shape_elems_bytes(upd)
+            return 2.0 * ub
+        if op == "convert":
+            # dtype converts are fused into consumers on TPU (free); on CPU
+            # they materialize as f32-legalization twins of bf16 buffers
+            return 0.0
+        if op in ("dynamic-slice", "gather"):
+            # reads only the sliced/gathered rows, not the full operand
+            _, out_b = shape_elems_bytes(ins.shape)
+            return 2.0 * out_b
+        if op == "scatter":
+            upd = (_operand_shape(comp, ins.operands[2])
+                   if len(ins.operands) > 2 else ins.shape)
+            _, ub = shape_elems_bytes(upd)
+            return 3.0 * ub          # read update + read/write target slices
+        if op == "fusion":
+            return self._fusion_bytes(comp, ins)
+        # dot/conv/copy/collective/...: operands + result
+        _, out_b = shape_elems_bytes(ins.shape)
+        in_b = sum(shape_elems_bytes(_operand_shape(comp, o))[1]
+                   for o in ins.operands)
+        return float(in_b + out_b)
+
+    def _fusion_bytes(self, comp: Computation, ins: Instr) -> float:
+        """HBM traffic of one fusion: result + actually-read operand bytes.
+
+        A fusion parameter consumed ONLY by dynamic-slice/gather reads just
+        the sliced rows (the scan-xs access pattern), not the whole buffer;
+        a parameter feeding the root dynamic-update-slice as the target
+        buffer is updated in place (0 read, the written slice is counted via
+        the root).  Everything else reads fully.
+        """
+        m = _CALLS_RE.search(ins.attrs)
+        called = self.comps.get(m.group(1)) if m else None
+        _, out_b = shape_elems_bytes(ins.shape)
+        if called is None:
+            in_b = sum(shape_elems_bytes(_operand_shape(comp, o))[1]
+                       for o in ins.operands)
+            return float(in_b + out_b)
+        # pure-convert fusion (wrapped_convert_computation): free on TPU
+        body_ops = [i.opcode for i in called.instrs
+                    if i.opcode not in ("parameter", "constant")]
+        if body_ops and all(o in ("convert", "copy", "bitcast", "tuple",
+                                  "get-tuple-element") for o in body_ops):
+            return 0.0
+        # map parameter index -> inner name
+        param_name: Dict[int, str] = {}
+        for inner in called.instrs:
+            if inner.opcode == "parameter":
+                pm = re.search(r"parameter\((\d+)\)", inner.line)
+                if pm:
+                    param_name[int(pm.group(1))] = inner.name
+        root = None
+        for inner in called.instrs:
+            if "ROOT" in inner.line:
+                root = inner
+                break
+        if root is None and called.instrs:
+            root = called.instrs[-1]
+
+        def _chase(ins_):
+            # follow convert/bitcast/copy chains (CPU bf16-legalization wraps)
+            seen_ = 0
+            while (ins_ is not None and seen_ < 8
+                   and ins_.opcode in ("convert", "bitcast", "copy")
+                   and ins_.operands):
+                ins_ = called.by_name.get(ins_.operands[0])
+                seen_ += 1
+            return ins_
+
+        rooted = _chase(root)
+        root_is_dus = rooted is not None and \
+            rooted.opcode == "dynamic-update-slice"
+        dus_target = None
+        if root_is_dus and rooted.operands:
+            tgt = _chase(called.by_name.get(rooted.operands[0]))
+            if tgt is not None and tgt.opcode == "parameter":
+                dus_target = tgt.name
+        if root_is_dus and len(rooted.operands) > 1:
+            _, ub = shape_elems_bytes(
+                _operand_shape(called, rooted.operands[1]))
+            out_b = 2.0 * ub         # in-place: write+read of the slice only
+        total = float(out_b)
+        for i, outer_ref in enumerate(ins.operands):
+            pname = param_name.get(i)
+            if pname is None:
+                continue
+            consumers = [c for c in called.instrs if pname in c.operands]
+            if pname == dus_target and len(consumers) == 1:
+                continue             # aliased in-place target: no read
+            if consumers and all(c.opcode in ("dynamic-slice", "gather")
+                                 for c in consumers):
+                total += sum(shape_elems_bytes(c.shape)[1]
+                             for c in consumers)
+                continue
+            total += shape_elems_bytes(_operand_shape(comp, outer_ref))[1]
+        return total
+
+    # ------------------------------------------------------- collectives
+    def _walk_collectives(self, name: str, mult: float,
+                          seen_stack: Tuple[str, ...] = ()) -> None:
+        comp = self.comps.get(name)
+        if comp is None or name in seen_stack:
+            return
+        for ins in comp.instrs:
+            op = ins.opcode
+            base = op[:-6] if op.endswith("-start") else op
+            if base in COLLECTIVE_KINDS:
+                op_b, wire = _collective_cost(comp, ins, base,
+                                              self.n_partitions,
+                                              self.assume_bf16, self)
+                self.cost.collectives.add(base, op_b, wire, mult)
+            elif op == "while":
+                body = _BODY_RE.search(ins.attrs)
+                trip = _while_trip(self, ins)
+                if body:
+                    self._walk_collectives(body.group(1), mult * trip,
+                                           seen_stack + (name,))
+            elif op == "fusion":
+                m = _CALLS_RE.search(ins.attrs)
+                if m:
+                    self._walk_collectives(m.group(1), mult,
+                                           seen_stack + (name,))
+            elif op in ("call", "conditional"):
+                for c in re.findall(r"%([\w.\-]+)", ins.attrs):
+                    if c in self.comps:
+                        self._walk_collectives(c, mult, seen_stack + (name,))
+
+    # -------------------------------------------------------------- run
+    def run(self) -> HloCost:
+        self.cost.flops = self.comp_flops("__entry__")
+        self.cost.hbm_bytes = self.comp_bytes("__entry__")
+        self._walk_collectives("__entry__", 1.0)
+        return self.cost
+
+
+def analyze_hlo_text(hlo_text: str, n_partitions: int,
+                     assume_bf16: bool = False,
+                     activation_leading_dim: Optional[int] = None) -> HloCost:
+    return HloCostWalker(hlo_text, n_partitions, assume_bf16,
+                         activation_leading_dim).run()
+
+
+def cpu_bf16_inflation_bytes(hlo_text: str) -> int:
+    """XLA's CPU backend has no bf16 ALUs: the float-normalization pass
+    rewrites bf16 arithmetic to f32, materializing f32 twins of bf16 buffers
+    (converts + f32 while-carry copies) that DO NOT exist on TPU.  Estimate
+    the inflation as the total size of f32 buffers produced by
+    convert(bf16 -> f32) with identical dims — subtracting this from the CPU
+    temp size approximates the TPU temp footprint.
+    """
+    comps = parse_computations(hlo_text)
+    total = 0
+    seen = set()
+    for name, comp in comps.items():
+        if name == "__entry__":
+            continue
+        for ins in comp.instrs:
+            if ins.opcode != "convert" or not ins.shape.startswith("f32"):
+                continue
+            src = comp.by_name.get(ins.operands[0]) if ins.operands else None
+            src_shape = src.shape if src is not None else ""
+            if not src_shape.startswith("bf16"):
+                continue
+            m_out = _SHAPE_RE.search(ins.shape)
+            m_in = _SHAPE_RE.search(src_shape)
+            if m_out and m_in and m_out.group(2) == m_in.group(2):
+                key = (name, ins.name)
+                if key not in seen:
+                    seen.add(key)
+                    total += shape_elems_bytes(ins.shape)[1]
+    return total

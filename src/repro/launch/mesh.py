@@ -1,0 +1,47 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — jax locks the device count on first backend init,
+and only dryrun.py (which sets XLA_FLAGS first) may ask for 512 host devices.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod.
+
+    Slices jax.devices() to the mesh size so the single-pod mesh builds even
+    when dryrun.py forced 512 placeholder devices."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)} — "
+            f"run via launch/dryrun.py (it forces 512 host devices)")
+    auto = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, devices=devices[:n], axis_types=auto)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many local devices exist (tests/examples)."""
+    n = len(jax.devices())
+    if data * model > n:
+        raise ValueError(f"need {data*model} devices, have {n}")
+    auto = (jax.sharding.AxisType.Auto,) * 2
+    return jax.make_mesh((data, model), ("data", "model"),
+                         devices=jax.devices()[: data * model],
+                         axis_types=auto)
+
+
+# TPU v5e hardware constants (roofline denominators)
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9                     # bytes/s per link

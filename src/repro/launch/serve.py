@@ -1,0 +1,129 @@
+"""Serving launcher — batched request serving with donated KV caches.
+
+The serving loop is the paper's pipeline applied to inference: requests are
+staged in a bounded queue (BlockingQueue(m')), prefill builds the shared
+cache, and each decode step reuses the donated cache buffer in place (the
+shared caching scheme at the HBM level — no per-token copy).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.serve --arch stablelm-3b --smoke \
+      --requests 8 --prompt-len 32 --max-new 16
+"""
+from __future__ import annotations
+
+import argparse
+import queue
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import ARCH_IDS, get_config
+from ..models.layers import NO_RULES
+from ..models.transformer import (decode_step, forward_prefill, grow_cache,
+                                  init_params)
+from ..train.serve_step import sample_token
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                  # [prompt_len] int32
+    max_new: int
+    out_tokens: List[int] = field(default_factory=list)
+    t_submit: float = 0.0
+    t_done: float = 0.0
+
+
+class BatchedServer:
+    """Static-batch server: groups up to ``batch`` same-length requests,
+    prefills once, decodes to the longest max_new (donated cache)."""
+
+    def __init__(self, cfg, params=None, batch: int = 8, rules=NO_RULES,
+                 temperature: float = 0.0, seed: int = 0):
+        self.cfg = cfg
+        self.rules = rules
+        self.batch = batch
+        self.temperature = temperature
+        self.key = jax.random.PRNGKey(seed)
+        self.params = (params if params is not None
+                       else init_params(cfg, jax.random.PRNGKey(0)))
+        self._prefill = jax.jit(
+            lambda p, b: forward_prefill(p, b, cfg, rules))
+        self._decode = jax.jit(
+            lambda p, c, b: decode_step(p, c, b, cfg, rules),
+            donate_argnums=(1,))
+        self.stats: Dict[str, float] = {"prefills": 0, "decode_steps": 0}
+
+    def serve_batch(self, requests: List[Request]) -> List[Request]:
+        assert len(requests) <= self.batch
+        prompts = np.stack([r.prompt for r in requests])
+        max_new = max(r.max_new for r in requests)
+        batch = {"tokens": jnp.asarray(prompts)}
+        logits, cache = self._prefill(self.params, batch)
+        cache = grow_cache(cache, self.cfg, prompts.shape[1] + max_new)
+        self.stats["prefills"] += 1
+        tok = sample_token(logits, self.key, self.temperature)
+        for i, r in enumerate(requests):
+            r.out_tokens.append(int(tok[i, 0]))
+        for step in range(max_new - 1):
+            self.key = jax.random.fold_in(self.key, step)
+            logits, cache = self._decode(self.params, cache,
+                                         {"tokens": tok})
+            self.stats["decode_steps"] += 1
+            tok = sample_token(logits, self.key, self.temperature)
+            for i, r in enumerate(requests):
+                if len(r.out_tokens) < r.max_new:
+                    r.out_tokens.append(int(tok[i, 0]))
+        now = time.time()
+        for r in requests:
+            r.t_done = now
+        return requests
+
+    def run(self, requests: List[Request]) -> List[Request]:
+        """Admission control: bounded wave scheduling over the request list
+        (groups of ``batch``) — the task planner over request waves."""
+        done: List[Request] = []
+        for i in range(0, len(requests), self.batch):
+            wave = requests[i: i + self.batch]
+            done.extend(self.serve_batch(wave))
+        return done
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    if cfg.is_encoder:
+        raise SystemExit(f"{args.arch} is encoder-only: no decode step")
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(2, cfg.vocab_size,
+                                        args.prompt_len).astype(np.int32),
+                    max_new=args.max_new, t_submit=time.time())
+            for i in range(args.requests)]
+    server = BatchedServer(cfg, batch=args.batch,
+                           temperature=args.temperature)
+    t0 = time.time()
+    done = server.run(reqs)
+    wall = time.time() - t0
+    n_tok = sum(len(r.out_tokens) for r in done)
+    print(f"served {len(done)} requests, {n_tok} tokens in {wall:.2f}s "
+          f"({n_tok/wall:.1f} tok/s); "
+          f"prefills={server.stats['prefills']:.0f} "
+          f"decode_steps={server.stats['decode_steps']:.0f}")
+
+
+if __name__ == "__main__":
+    main()

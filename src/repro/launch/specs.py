@@ -1,0 +1,145 @@
+"""ShapeDtypeStruct stand-ins + PartitionSpecs for every dry-run cell.
+
+No device allocation happens here: params/opt-state/caches/batches are all
+ShapeDtypeStructs fed to jax.jit(...).lower() (the shannon/kernels pattern).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..models.layers import Rules
+from ..models.transformer import make_cache_shapes, param_shapes, param_specs
+from ..train.optimizer import opt_state_shapes, opt_state_specs
+from ..train.sharding import make_rules
+
+
+def _axis_size(mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, (tuple, list)):
+        n = 1
+        for e in entry:
+            n *= mesh.shape[e]
+        return n
+    return mesh.shape[entry]
+
+
+def limit_spec(spec: P, shape, mesh) -> P:
+    """Drop mesh axes from dims they do not divide (NamedSharding rejects
+    uneven in_shardings — e.g. hubert's vocab=504 over model=16)."""
+    dims = tuple(shape.shape) if hasattr(shape, "shape") else tuple(shape)
+    entries = list(spec) + [None] * (len(dims) - len(spec))
+    out = []
+    for d, e in zip(dims, entries):
+        out.append(e if d % _axis_size(mesh, e) == 0 else None)
+    return P(*out)
+
+
+def limit_specs_tree(spec_tree, shape_tree, mesh):
+    return jax.tree.map(lambda s, sh: limit_spec(s, sh, mesh),
+                        spec_tree, shape_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_shapes(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Model-input ShapeDtypeStructs for one cell (train/prefill: the full
+    window; decode: one new token against a seq_len cache)."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        S_in = 1
+    else:
+        S_in = S
+    out: Dict[str, Any] = {}
+    if cfg.family == "audio":
+        # modality frontend is a STUB: precomputed frame embeddings
+        out["frames"] = jax.ShapeDtypeStruct((B, S_in, cfg.d_model),
+                                             jnp.dtype(cfg.compute_dtype))
+        if shape.kind == "train":
+            out["labels"] = jax.ShapeDtypeStruct((B, S_in), jnp.int32)
+        return out
+    out["tokens"] = jax.ShapeDtypeStruct((B, S_in), jnp.int32)
+    if cfg.family == "vlm" and shape.kind != "decode":
+        out["vision"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_vision_tokens, cfg.d_model),
+            jnp.dtype(cfg.compute_dtype))
+    return out
+
+
+def batch_pspecs(cfg: ModelConfig, shape: ShapeConfig, rules: Rules
+                 ) -> Dict[str, Any]:
+    specs: Dict[str, Any] = {}
+    for name in batch_shapes(cfg, shape):
+        if name in ("tokens", "labels"):
+            specs[name] = rules.spec("batch", None)
+        else:                                    # frames / vision: [B, T, d]
+            specs[name] = rules.spec("batch", None, None)
+    return specs
+
+
+def kv_repeat_for(cfg: ModelConfig, model_n: int) -> int:
+    """TP kv-head replication factor: smallest r with (kh*r) % model_n == 0
+    and h % (kh*r) == 0 (query regrouping must stay even).  1 if none."""
+    kh, h = cfg.n_kv_heads, cfg.n_heads
+    if not kh or not h or kh % model_n == 0:
+        return 1
+    if model_n % kh == 0:
+        r = model_n // kh
+        if h % (kh * r) == 0:
+            return r
+    return 1
+
+
+def cell_specs(cfg: ModelConfig, shape: ShapeConfig, mesh
+               ) -> Dict[str, Any]:
+    """Everything dryrun/train/serve need for one (arch x shape x mesh) cell:
+    shapes (ShapeDtypeStruct trees) + shardings (NamedSharding trees).
+    NOTE: returns the possibly-updated cfg under 'cfg' (kv_repeat applied) —
+    callers must use it for the model functions."""
+    r = kv_repeat_for(cfg, mesh.shape.get("model", 1))
+    if r > 1:
+        cfg = cfg.replace(kv_repeat=r)
+    profile = shape.kind
+    if shape.kind == "decode" and shape.seq_len >= 262_144:
+        profile = "long"
+    rules = make_rules(mesh, profile, cfg)
+    ns = lambda spec: NamedSharding(mesh, spec)
+
+    p_shapes = param_shapes(cfg)
+    p_spec = limit_specs_tree(param_specs(cfg, rules), p_shapes, mesh)
+    p_shard = jax.tree.map(ns, p_spec, is_leaf=lambda x: isinstance(x, P))
+
+    b_shapes = batch_shapes(cfg, shape)
+    b_spec = limit_specs_tree(batch_pspecs(cfg, shape, rules), b_shapes, mesh)
+    out: Dict[str, Any] = {
+        "cfg": cfg,
+        "rules": rules,
+        "profile": profile,
+        "param_shapes": p_shapes,
+        "param_specs": p_spec,
+        "param_shardings": p_shard,
+        "batch_shapes": b_shapes,
+        "batch_shardings": jax.tree.map(ns, b_spec,
+                                        is_leaf=lambda x: isinstance(x, P)),
+    }
+    if shape.kind == "train":
+        out["opt_shapes"] = opt_state_shapes(p_shapes, cfg)
+        opt_spec = limit_specs_tree(opt_state_specs(p_spec),
+                                    out["opt_shapes"], mesh)
+        out["opt_shardings"] = jax.tree.map(
+            ns, opt_spec, is_leaf=lambda x: isinstance(x, P))
+    if shape.kind == "decode":
+        out["cache_shapes"] = make_cache_shapes(
+            cfg, shape.global_batch, shape.seq_len, rules)
+        cache_spec = limit_specs_tree(
+            make_cache_shapes(cfg, shape.global_batch, shape.seq_len, rules,
+                              as_spec=True),
+            out["cache_shapes"], mesh)
+        out["cache_shardings"] = jax.tree.map(
+            ns, cache_spec, is_leaf=lambda x: isinstance(x, P))
+    return out

@@ -1,0 +1,9 @@
+from .layers import NO_RULES, Rules
+from .transformer import (backbone, decode_step, forward_prefill,
+                          forward_train, init_params, make_cache_shapes,
+                          n_periods, param_count, param_shapes, param_specs,
+                          period)
+
+__all__ = ["NO_RULES", "Rules", "backbone", "decode_step", "forward_prefill",
+           "forward_train", "init_params", "make_cache_shapes", "n_periods",
+           "param_count", "param_shapes", "param_specs", "period"]

@@ -1,0 +1,280 @@
+"""Shared model building blocks (pure-jnp reference path).
+
+All functions are pure; parameters are nested dicts of jnp arrays.  Sharding
+is injected via `Rules` (logical-axis -> mesh-axis mapping) so the same model
+code runs unsharded on one CPU device (smoke tests) and SPMD-sharded on the
+production mesh (dry-run / launch).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+#  Sharding rules
+# ---------------------------------------------------------------------------
+class Rules:
+    """Maps logical axis names to mesh axis names (or None).  With an empty
+    mapping every constraint is a no-op (single-device paths)."""
+
+    def __init__(self, mapping: Optional[Dict[str, Any]] = None):
+        self.mapping = mapping or {}
+
+    def spec(self, *axes: Optional[str]) -> P:
+        return P(*(self.mapping.get(a) if a else None for a in axes))
+
+    def cons(self, x: jax.Array, *axes: Optional[str]) -> jax.Array:
+        if not self.mapping:
+            return x
+        return jax.lax.with_sharding_constraint(x, self.spec(*axes))
+
+
+NO_RULES = Rules()
+
+
+def dt(name: str):
+    return jnp.dtype(name)
+
+
+# ---------------------------------------------------------------------------
+#  Normalization
+# ---------------------------------------------------------------------------
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+#  Rotary position embeddings
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., seq, heads, head_dim]; positions: [..., seq] (int)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                          # [hd/2]
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    cos = jnp.cos(angles)[..., :, None, :]                 # [..., S, 1, hd/2]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+#  Attention (GQA, causal / bidirectional / sliding-window / cross)
+# ---------------------------------------------------------------------------
+def _softcap(scores: jax.Array, cap: float) -> jax.Array:
+    if cap and cap > 0:
+        return cap * jnp.tanh(scores / cap)
+    return scores
+
+
+def attention_scores_mask(q_pos: jax.Array, kv_pos: jax.Array, causal: bool,
+                          window: int, kv_valid: Optional[jax.Array] = None
+                          ) -> jax.Array:
+    """Boolean [.., Sq, Skv] mask of allowed attention pairs."""
+    rel = q_pos[..., :, None] - kv_pos[..., None, :]
+    mask = jnp.ones(rel.shape, dtype=bool)
+    if causal:
+        mask &= rel >= 0
+    if window and window > 0:
+        mask &= rel < window
+    if kv_valid is not None:
+        mask &= kv_valid[..., None, :]
+    return mask
+
+
+def sdpa(q: jax.Array, k: jax.Array, v: jax.Array, mask: jax.Array,
+         softcap: float = 0.0) -> jax.Array:
+    """Grouped-query scaled dot-product attention.
+
+    q: [B, Sq, Kh, G, hd]   (G = query heads per kv head)
+    k,v: [B, Skv, Kh, hd]
+    mask: broadcastable to [B, Kh, G, Sq, Skv]
+    returns [B, Sq, Kh, G, hd]
+    """
+    hd = q.shape[-1]
+    scale = 1.0 / math.sqrt(hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    scores = _softcap(scores, softcap)
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+def chunked_sdpa(q: jax.Array, k: jax.Array, v: jax.Array,
+                 q_pos: jax.Array, kv_pos: jax.Array,
+                 causal: bool, window: int, softcap: float,
+                 q_chunk: int = 1024) -> jax.Array:
+    """Flash-style chunked attention (pure jnp): iterate q in chunks so the
+    [Sq, Skv] score matrix never fully materializes.  Used for long
+    sequences; numerically identical to sdpa (fp32 softmax)."""
+    B, Sq, Kh, G, hd = q.shape
+    n_chunks = -(-Sq // q_chunk)
+    pad = n_chunks * q_chunk - Sq
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, pad),), constant_values=-1)
+    qs = q.reshape(B, n_chunks, q_chunk, Kh, G, hd)
+    qp = q_pos.reshape(n_chunks, q_chunk)
+
+    def one_chunk(args):
+        qc, qpc = args
+        mask = attention_scores_mask(qpc, kv_pos, causal, window)
+        return sdpa(qc, k, v, mask[None, None, None], softcap)
+
+    out = jax.lax.map(one_chunk, (jnp.moveaxis(qs, 1, 0), qp))
+    out = jnp.moveaxis(out, 0, 1).reshape(B, n_chunks * q_chunk, Kh, G, hd)
+    return out[:, :Sq]
+
+
+def attn_block(x: jax.Array, kv_src: jax.Array, p: Dict[str, jax.Array],
+               cfg, rules: Rules,
+               q_pos: jax.Array, kv_pos: jax.Array,
+               causal: bool, window: int = 0,
+               use_rope: bool = True,
+               kv_cache: Optional[Tuple[jax.Array, jax.Array]] = None,
+               cache_pos: Optional[jax.Array] = None,
+               attn_impl: Optional[str] = None,
+               ) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
+    """Full attention sub-block: projections + RoPE + SDPA + out-proj.
+
+    If ``kv_cache`` is given (decode), (k_cache, v_cache) are updated at
+    ``cache_pos`` and attention runs over the cache.
+    kv_src == x for self-attention; vision embeddings for cross-attention.
+    Returns (out, updated_cache).
+    """
+    B, Sq, d = x.shape
+    h, kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    G = h // kh
+    cdt = dt(cfg.compute_dtype)
+    if attn_impl is None:
+        attn_impl = getattr(cfg, "attn_impl", "reference")
+
+    wq = p["wq"].astype(cdt)
+    wk = p["wk"].astype(cdt)
+    wv = p["wv"].astype(cdt)
+    wo = p["wo"].astype(cdt)
+    q = jnp.einsum("bsd,dn->bsn", x.astype(cdt), wq)
+    k = jnp.einsum("bsd,dn->bsn", kv_src.astype(cdt), wk)
+    v = jnp.einsum("bsd,dn->bsn", kv_src.astype(cdt), wv)
+    if cfg.attn_bias:
+        q = q + p["bq"].astype(cdt)
+        k = k + p["bk"].astype(cdt)
+        v = v + p["bv"].astype(cdt)
+    q = q.reshape(B, Sq, kh, G, hd)
+    k = k.reshape(B, kv_src.shape[1], kh, hd)
+    v = v.reshape(B, kv_src.shape[1], kh, hd)
+    q = rules.cons(q, "batch", None, "kv_heads_act", None, None)
+    k = rules.cons(k, "batch", None, "kv_heads_act", None)
+    v = rules.cons(v, "batch", None, "kv_heads_act", None)
+
+    if use_rope:
+        q = apply_rope(q.reshape(B, Sq, kh * G, hd), q_pos, cfg.rope_theta
+                       ).reshape(B, Sq, kh, G, hd)
+        k = apply_rope(k, kv_pos, cfg.rope_theta)
+
+    r = getattr(cfg, "kv_repeat", 1)
+    if r > 1:
+        # TP kv-head replication: kh*r heads (each kv head repeated r times,
+        # queries regrouped) — mathematically identical GQA, but the head
+        # dim now divides the 'model' axis so scores/cache shard evenly.
+        k = jnp.repeat(k, r, axis=2)
+        v = jnp.repeat(v, r, axis=2)
+        q = q.reshape(B, Sq, kh * r, G // r, hd)
+        k = rules.cons(k, "batch", None, "kv_heads_act", None)
+        v = rules.cons(v, "batch", None, "kv_heads_act", None)
+        q = rules.cons(q, "batch", None, "kv_heads_act", None, None)
+
+    if kv_cache is not None:
+        # decode: insert new k/v at cache_pos, attend over the whole cache
+        k_cache, v_cache = kv_cache
+        S_cache = k_cache.shape[1]
+        if window and window > 0:
+            slot = cache_pos % window
+        else:
+            slot = cache_pos
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, k.astype(k_cache.dtype), (0, slot, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, v.astype(v_cache.dtype), (0, slot, 0, 0))
+        idx = jnp.arange(S_cache)
+        if window and window > 0:
+            # ring buffer: entry i holds absolute position matching slot layout
+            n_wrap = (cache_pos // window) * window
+            abs_pos = jnp.where(idx <= slot, n_wrap + idx,
+                                n_wrap - window + idx)
+            kv_valid = (abs_pos >= 0) & (abs_pos <= cache_pos)
+            kv_p = abs_pos
+        else:
+            kv_valid = idx <= cache_pos
+            kv_p = idx
+        mask = attention_scores_mask(q_pos, kv_p, causal, window, kv_valid)
+        out = sdpa(q, k_cache.astype(cdt), v_cache.astype(cdt),
+                   mask[None, None, None], cfg.logit_softcap)
+        new_cache = (k_cache, v_cache)
+    else:
+        qc = getattr(cfg, "attn_q_chunk", 0)
+        if attn_impl in ("pallas", "interpret"):
+            # TPU flash-attention kernel (kernels/flash_attention); the
+            # 'interpret' impl runs the same kernel body on CPU for tests.
+            from ..kernels.flash_attention import flash_attention
+            out = flash_attention(q, k, v, causal=causal, window=window,
+                                  softcap=cfg.logit_softcap, impl=attn_impl)
+        elif (qc and Sq > qc) or (not qc and Sq >= 8192):
+            out = chunked_sdpa(q, k, v, q_pos, kv_pos, causal, window,
+                               cfg.logit_softcap, q_chunk=qc or 1024)
+        else:
+            mask = attention_scores_mask(q_pos, kv_pos, causal, window)
+            out = sdpa(q, k, v, mask[None, None, None], cfg.logit_softcap)
+        new_cache = (k, v)   # prefill: return computed k/v for cache building
+
+    out = out.reshape(B, Sq, h * hd)
+    out = jnp.einsum("bsn,nd->bsd", out, wo)
+    out = rules.cons(out, "batch", None, None)
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+#  Dense FFN
+# ---------------------------------------------------------------------------
+def mlp_block(x: jax.Array, p: Dict[str, jax.Array], cfg, rules: Rules
+              ) -> jax.Array:
+    cdt = dt(cfg.compute_dtype)
+    xc = x.astype(cdt)
+    if cfg.mlp_kind == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", xc, p["wg"].astype(cdt))
+        u = jnp.einsum("bsd,df->bsf", xc, p["wu"].astype(cdt))
+        hcts = jax.nn.silu(g) * u
+    else:  # gelu
+        u = jnp.einsum("bsd,df->bsf", xc, p["wu"].astype(cdt))
+        hcts = jax.nn.gelu(u)
+    hcts = rules.cons(hcts, "batch", None, "d_ff")
+    out = jnp.einsum("bsf,fd->bsd", hcts, p["wd"].astype(cdt))
+    return rules.cons(out, "batch", None, None)
+
+
+# ---------------------------------------------------------------------------
+#  Initializers
+# ---------------------------------------------------------------------------
+def normal_init(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def split_keys(key, n):
+    return list(jax.random.split(key, n))

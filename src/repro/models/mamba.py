@@ -1,0 +1,172 @@
+"""Mamba-1 (selective SSM) block — pure-jnp reference path.
+
+Recurrence (per channel c, state n):
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t * x_t
+    y_t = C_t . h_t + D * x_t
+with input-dependent dt (softplus), B, C from x_proj.
+
+Training uses a two-level scan: outer `lax.scan` over sequence chunks
+(carry = h at chunk boundary, saved for backward) and a remat'd inner scan
+over time steps within the chunk — bounding activation memory to
+O(seq/chunk) carries + one recomputed chunk (see DESIGN §6).
+
+Decode is a single recurrence step on carried (conv_state, h).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Rules, dt
+
+
+def _ssm_chunk_scan(h0: jax.Array, dA: jax.Array, dBx: jax.Array,
+                    C: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Scan one chunk.  h0: [B, di, N]; dA, dBx: [B, T, di, N]; C: [B, T, N].
+    Returns (h_T, y [B, T, di])."""
+
+    def step(h, inp):
+        dA_t, dBx_t, C_t = inp
+        h = dA_t * h + dBx_t                       # [B, di, N]
+        y_t = jnp.einsum("bdn,bn->bd", h, C_t)     # [B, di]
+        return h, y_t
+
+    xs = (jnp.moveaxis(dA, 1, 0), jnp.moveaxis(dBx, 1, 0),
+          jnp.moveaxis(C, 1, 0))
+    hT, ys = jax.lax.scan(step, h0, xs)
+    return hT, jnp.moveaxis(ys, 0, 1)
+
+
+def _ssm_chunk_scan_fused(h0: jax.Array, delta: jax.Array, x: jax.Array,
+                          Bm: jax.Array, C: jax.Array, A: jax.Array,
+                          unroll: int = 1) -> Tuple[jax.Array, jax.Array]:
+    """Fused variant: the [B, di, N] outer products dA/dBx are computed
+    INSIDE the step from the small per-step slices (delta/x [B, di],
+    B/C [B, N]) — never materializing [B, T, di, N] in HBM.  This is the
+    pure-jnp analogue of the Pallas kernel's VMEM fusion (DESIGN §4) and
+    the hillclimb lever for the memory-bound SSM cells."""
+
+    def step(h, inp):
+        d_t, x_t, b_t, c_t = inp                   # [B,di],[B,di],[B,N],[B,N]
+        dA_t = jnp.exp(d_t[..., None] * A)         # [B, di, N] (VREG-fused)
+        dBx_t = d_t[..., None] * b_t[:, None, :] * x_t[..., None]
+        h = dA_t * h + dBx_t
+        y_t = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y_t
+
+    xs = (jnp.moveaxis(delta, 1, 0), jnp.moveaxis(x, 1, 0),
+          jnp.moveaxis(Bm, 1, 0), jnp.moveaxis(C, 1, 0))
+    hT, ys = jax.lax.scan(step, h0, xs, unroll=max(1, unroll))
+    return hT, jnp.moveaxis(ys, 0, 1)
+
+
+def _causal_conv(x: jax.Array, w: jax.Array,
+                 state: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv1d.  x: [B, T, di]; w: [K, di].
+    ``state``: [B, K-1, di] carried inputs for decode."""
+    K = w.shape[0]
+    if state is not None:
+        x = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+        pad = 0
+    else:
+        pad = K - 1
+    out = jax.lax.conv_general_dilated(
+        x, w[:, None, :],                 # [K, 1, di] (HIO for depthwise)
+        window_strides=(1,), padding=[(pad, 0)],
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=w.shape[1])
+    return out
+
+
+def mamba_block(x: jax.Array, p: Dict[str, jax.Array], cfg, rules: Rules,
+                state: Optional[Tuple[jax.Array, jax.Array]] = None
+                ) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
+    """x: [B, T, d].  ``state`` = (conv_state [B, K-1, di], h [B, di, N]) for
+    decode (T==1); None for training/prefill.  Returns (out, new_state)."""
+    B, T, d = x.shape
+    di, N, dtr, K = cfg.d_inner, cfg.ssm_state, cfg.dt_rank, cfg.d_conv
+    cdt = dt(cfg.compute_dtype)
+    xc = x.astype(cdt)
+
+    xz = jnp.einsum("btd,de->bte", xc, p["in_proj"].astype(cdt))
+    xin, z = jnp.split(xz, 2, axis=-1)                # [B, T, di] each
+    xin = rules.cons(xin, "batch", None, "d_inner")
+
+    conv_w = p["conv_w"].astype(cdt)                  # [K, di]
+    if state is not None:
+        conv_state, h0 = state
+        conv_in = xin
+        xconv = _causal_conv(conv_in, conv_w, state=conv_state)
+        new_conv_state = jnp.concatenate([conv_state[:, 1:],
+                                          xin.astype(conv_state.dtype)], axis=1)
+    else:
+        xconv = _causal_conv(xin, conv_w)
+        h0 = jnp.zeros((B, di, N), jnp.float32)
+        new_conv_state = xin[:, -(K - 1):]            # for prefill -> decode
+    xconv = jax.nn.silu(xconv + p["conv_b"].astype(cdt))
+
+    # input-dependent dt, B, C
+    dbc = jnp.einsum("btd,de->bte", xconv, p["x_proj"].astype(cdt))
+    dt_in, B_in, C_in = jnp.split(dbc, [dtr, dtr + N], axis=-1)
+    delta = jax.nn.softplus(
+        jnp.einsum("btr,rd->btd", dt_in, p["dt_proj"].astype(cdt))
+        + p["dt_bias"].astype(cdt))                   # [B, T, di]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))      # [di, N]
+
+    delta32 = delta.astype(jnp.float32)
+    B32 = B_in.astype(jnp.float32)
+    x32 = xconv.astype(jnp.float32)
+
+    if T == 1:
+        dA = jnp.exp(delta32[:, 0, :, None] * A)      # [B, di, N]
+        dBx = (delta32[:, 0, :, None] * B32[:, 0, None, :]
+               * x32[:, 0, :, None])
+        h = dA * h0 + dBx
+        y = jnp.einsum("bdn,bn->bd", h, C_in[:, 0].astype(jnp.float32))[:, None]
+        hT = h
+    elif getattr(cfg, "ssm_impl", "reference") in ("pallas", "interpret"):
+        # fused Pallas selective-scan kernel (kernels/mamba_scan)
+        from ..kernels.mamba_scan import mamba_scan
+        y, hT = mamba_scan(delta32, x32, B32, C_in.astype(jnp.float32),
+                           A, h0, impl=cfg.ssm_impl, chunk=cfg.ssm_chunk)
+    else:
+        # chunked two-level scan
+        ch = min(cfg.ssm_chunk, T)
+        n_chunks = -(-T // ch)
+        pad = n_chunks * ch - T
+        if pad:
+            delta32 = jnp.pad(delta32, ((0, 0), (0, pad), (0, 0)))
+            B32 = jnp.pad(B32, ((0, 0), (0, pad), (0, 0)))
+            x32 = jnp.pad(x32, ((0, 0), (0, pad), (0, 0)))
+            C_pad = jnp.pad(C_in, ((0, 0), (0, pad), (0, 0)))
+        else:
+            C_pad = C_in
+
+        fused = getattr(cfg, "ssm_fused_ref", False)
+
+        def chunk_body(h, inp):
+            dl, Bc, xck, Cc = inp                     # [B, ch, ...]
+            if fused:
+                return _ssm_chunk_scan_fused(
+                    h, dl, xck, Bc, Cc.astype(jnp.float32), A,
+                    unroll=getattr(cfg, "ssm_unroll", 1))
+            dA = jnp.exp(dl[..., None] * A)           # [B, ch, di, N]
+            dBx = dl[..., None] * Bc[:, :, None, :] * xck[..., None]
+            return _ssm_chunk_scan(h, dA, dBx, Cc.astype(jnp.float32))
+
+        chunk_body = jax.checkpoint(chunk_body)       # remat inner chunk
+        resh = lambda a: jnp.moveaxis(
+            a.reshape(B, n_chunks, ch, *a.shape[2:]), 1, 0)
+        hT, ys = jax.lax.scan(chunk_body, h0,
+                              (resh(delta32), resh(B32), resh(x32),
+                               resh(C_pad)))
+        y = jnp.moveaxis(ys, 0, 1).reshape(B, n_chunks * ch, di)[:, :T]
+
+    y = y.astype(cdt) + x32.astype(cdt) * p["D"].astype(cdt)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bte,ed->btd", y, p["out_proj"].astype(cdt))
+    out = rules.cons(out, "batch", None, None)
+    new_state = (new_conv_state, hT) if (state is not None or T > 1) else None
+    return out, new_state

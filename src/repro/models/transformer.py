@@ -1,0 +1,486 @@
+"""Unified model covering all 10 assigned architectures.
+
+One period-structured decoder/encoder: layers are grouped into structural
+periods (dense/moe/ssm: P=1; jamba: P=8 with attention at offset 4 and MoE
+every 2nd layer; llama-vision: P=5 with cross-attention at offset 3) and
+`lax.scan` runs over periods with stacked parameters — small HLO, fast
+compiles, remat per period.
+
+Entry points:
+  init_params / param_shapes / param_specs
+  forward_train(params, batch)        -> (loss, aux)
+  forward_prefill(params, batch)      -> (logits, cache)
+  decode_step(params, cache, tokens)  -> (logits, cache)
+  make_cache_shapes(cfg, B, S)        -> cache ShapeDtypeStruct tree
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .layers import (NO_RULES, Rules, attn_block, dt, mlp_block, normal_init,
+                     rms_norm)
+from .mamba import mamba_block
+from .moe import moe_block
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+#  Structure
+# ---------------------------------------------------------------------------
+def period(cfg) -> int:
+    p = 1
+    if cfg.family == "hybrid":
+        p = math.lcm(cfg.attn_layer_period, cfg.moe_layer_period)
+    elif cfg.family == "vlm" and cfg.cross_attn_period:
+        p = cfg.cross_attn_period
+    elif cfg.n_experts and cfg.moe_layer_period > 1:
+        p = cfg.moe_layer_period
+    assert cfg.n_layers % p == 0, (cfg.name, cfg.n_layers, p)
+    return p
+
+
+def n_periods(cfg) -> int:
+    return cfg.n_layers // period(cfg)
+
+
+# ---------------------------------------------------------------------------
+#  Parameter definitions: (path, shape, logical_axes, init_scale)
+# ---------------------------------------------------------------------------
+def _layer_defs(cfg, pos: int) -> List[Tuple[str, tuple, tuple, float]]:
+    """Definitions for the layer at in-period position ``pos`` (shapes
+    WITHOUT the leading n_periods stack dim)."""
+    d, f = cfg.d_model, cfg.d_ff
+    h, kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    out_scale = 0.02 / math.sqrt(2 * cfg.n_layers)
+    defs: List[Tuple[str, tuple, tuple, float]] = []
+    kind = cfg.layer_kind(pos)
+    defs.append(("ln1", (d,), (None,), 1.0))
+    if kind == "attn":
+        defs += [
+            ("attn.wq", (d, h * hd), ("embed", "heads"), 0.02),
+            ("attn.wk", (d, kh * hd), ("embed", "kv_heads"), 0.02),
+            ("attn.wv", (d, kh * hd), ("embed", "kv_heads"), 0.02),
+            ("attn.wo", (h * hd, d), ("heads", "embed"), out_scale),
+        ]
+        if cfg.attn_bias:
+            defs += [("attn.bq", (h * hd,), ("heads",), 0.0),
+                     ("attn.bk", (kh * hd,), ("kv_heads",), 0.0),
+                     ("attn.bv", (kh * hd,), ("kv_heads",), 0.0)]
+    else:  # mamba
+        di, N, dtr, K = cfg.d_inner, cfg.ssm_state, cfg.dt_rank, cfg.d_conv
+        defs += [
+            ("mamba.in_proj", (d, 2 * di), ("embed", "d_inner"), 0.02),
+            ("mamba.conv_w", (K, di), (None, "d_inner"), 0.02),
+            ("mamba.conv_b", (di,), ("d_inner",), 0.0),
+            ("mamba.x_proj", (di, dtr + 2 * N), ("d_inner", None), 0.02),
+            ("mamba.dt_proj", (dtr, di), (None, "d_inner"), 0.02),
+            ("mamba.dt_bias", (di,), ("d_inner",), 0.0),
+            ("mamba.A_log", (di, N), ("d_inner", None), 1.0),
+            ("mamba.D", (di,), ("d_inner",), 1.0),
+            ("mamba.out_proj", (di, d), ("d_inner", "embed"), out_scale),
+        ]
+    if cfg.has_cross_attn(pos):
+        defs += [
+            ("ln_x", (d,), (None,), 1.0),
+            ("xattn.wq", (d, h * hd), ("embed", "heads"), 0.02),
+            ("xattn.wk", (d, kh * hd), ("embed", "kv_heads"), 0.02),
+            ("xattn.wv", (d, kh * hd), ("embed", "kv_heads"), 0.02),
+            ("xattn.wo", (h * hd, d), ("heads", "embed"), out_scale),
+            ("xattn.gate", (1,), (None,), 0.0),
+        ]
+    if cfg.d_ff > 0:
+        defs.append(("ln2", (d,), (None,), 1.0))
+        if cfg.ffn_kind(pos) == "moe":
+            E = cfg.n_experts
+            # 'experts'/'expert_ff' resolve per sharding profile: baseline
+            # experts=None + expert_ff='model' (TP over d_ff); EP mode
+            # experts='model' + expert_ff=None (each device owns E/16
+            # whole experts — no per-use weight all-gather)
+            defs += [
+                ("moe.router", (d, E), ("embed", None), 0.02),
+                ("moe.wg", (E, d, f), ("experts", "embed", "expert_ff"), 0.02),
+                ("moe.wu", (E, d, f), ("experts", "embed", "expert_ff"), 0.02),
+                ("moe.wd", (E, f, d), ("experts", "expert_ff", "embed"),
+                 out_scale),
+            ]
+        else:
+            if cfg.mlp_kind == "swiglu":
+                defs.append(("mlp.wg", (d, f), ("embed", "d_ff"), 0.02))
+            defs += [("mlp.wu", (d, f), ("embed", "d_ff"), 0.02),
+                     ("mlp.wd", (f, d), ("d_ff", "embed"), out_scale)]
+    return defs
+
+
+def _top_defs(cfg) -> List[Tuple[str, tuple, tuple, float]]:
+    d, V = cfg.d_model, cfg.vocab_size
+    defs: List[Tuple[str, tuple, tuple, float]] = []
+    if cfg.family == "audio":
+        defs += [("in_proj_w", (d, d), ("embed", None), 0.02),
+                 ("in_proj_b", (d,), (None,), 0.0),
+                 ("in_ln", (d,), (None,), 1.0)]
+    else:
+        defs.append(("tok_embed", (V, d), ("vocab", "embed"), 0.02))
+    defs += [("final_ln", (d,), (None,), 1.0),
+             ("head_w", (d, V), ("embed", "vocab"), 0.02)]
+    return defs
+
+
+def _assign(tree: dict, path: str, val) -> None:
+    parts = path.split(".")
+    for p_ in parts[:-1]:
+        tree = tree.setdefault(p_, {})
+    tree[parts[-1]] = val
+
+
+def _build(cfg, leaf_fn) -> Params:
+    """Build the param tree; ``leaf_fn(path, shape, axes, scale, stacked)``
+    produces each leaf.  Layer params get a leading n_periods dim."""
+    np_ = n_periods(cfg)
+    tree: Params = {"blocks": {}}
+    for path, shape, axes, scale in _top_defs(cfg):
+        _assign(tree, path, leaf_fn(path, shape, axes, scale, False))
+    for pos in range(period(cfg)):
+        sub: Params = {}
+        for path, shape, axes, scale in _layer_defs(cfg, pos):
+            stacked_shape = (np_,) + shape
+            stacked_axes = ("layers",) + axes
+            _assign(sub, path, leaf_fn(f"blocks.pos{pos}.{path}",
+                                       stacked_shape, stacked_axes, scale, True))
+        tree["blocks"][f"pos{pos}"] = sub
+    return tree
+
+
+def init_params(cfg, key) -> Params:
+    pdt = dt(cfg.param_dtype)
+    counter = [0]
+
+    def leaf(path, shape, axes, scale, stacked):
+        counter[0] += 1
+        k = jax.random.fold_in(key, counter[0])
+        if path.endswith("A_log"):
+            # mamba: A init = -(1..N) per state dim, log-parameterized
+            N = shape[-1]
+            a = jnp.tile(jnp.log(jnp.arange(1, N + 1, dtype=jnp.float32)),
+                         shape[:-1] + (1,))
+            return a.astype(pdt)
+        if path.endswith((".D", "ln1", "ln2", "ln_x", "final_ln", "in_ln")) \
+                or ".D" == path[-2:]:
+            return jnp.ones(shape, pdt)
+        if path.endswith("dt_bias"):
+            return jnp.full(shape, -4.6, pdt)   # softplus^-1(0.01)
+        if scale == 0.0:
+            return jnp.zeros(shape, pdt)
+        return normal_init(k, shape, scale, pdt)
+
+    return _build(cfg, leaf)
+
+
+def param_shapes(cfg) -> Params:
+    pdt = dt(cfg.param_dtype)
+    return _build(cfg, lambda path, shape, axes, scale, stacked:
+                  jax.ShapeDtypeStruct(shape, pdt))
+
+
+def param_specs(cfg, rules: Rules) -> Params:
+    return _build(cfg, lambda path, shape, axes, scale, stacked:
+                  rules.spec(*axes))
+
+
+def param_count(cfg) -> int:
+    leaves = jax.tree.leaves(param_shapes(cfg))
+    return sum(int(jnp.prod(jnp.array(l.shape))) for l in leaves)
+
+
+# ---------------------------------------------------------------------------
+#  Decode cache
+# ---------------------------------------------------------------------------
+def cache_len(cfg, seq_len: int) -> int:
+    return min(seq_len, cfg.sliding_window) if cfg.sliding_window else seq_len
+
+
+def make_cache_shapes(cfg, batch: int, seq_len: int, rules: Rules,
+                      as_spec: bool = False):
+    """ShapeDtypeStructs (or PartitionSpecs) for the decode cache."""
+    np_ = n_periods(cfg)
+    kh, hd = cfg.kh_eff, cfg.hd      # kv heads after TP replication
+    cdt = dt(cfg.compute_dtype)
+    Sc = cache_len(cfg, seq_len)
+    tree: Dict[str, Any] = {}
+    for pos in range(period(cfg)):
+        sub: Dict[str, Any] = {}
+        if cfg.layer_kind(pos) == "attn":
+            shp = (np_, batch, Sc, kh, hd)
+            axes = ("layers", "batch", "kv_seq", "kv_heads_cache", None)
+            sub["k"] = (rules.spec(*axes) if as_spec
+                        else jax.ShapeDtypeStruct(shp, cdt))
+            sub["v"] = (rules.spec(*axes) if as_spec
+                        else jax.ShapeDtypeStruct(shp, cdt))
+        else:
+            di, N, K = cfg.d_inner, cfg.ssm_state, cfg.d_conv
+            c_shp = (np_, batch, K - 1, di)
+            h_shp = (np_, batch, di, N)
+            sub["conv"] = (rules.spec("layers", "batch", None, "d_inner")
+                           if as_spec else jax.ShapeDtypeStruct(c_shp, cdt))
+            sub["h"] = (rules.spec("layers", "batch", "d_inner", None)
+                        if as_spec else jax.ShapeDtypeStruct(h_shp, jnp.float32))
+        if cfg.has_cross_attn(pos):
+            vshp = (np_, batch, cfg.n_vision_tokens, kh, hd)
+            vaxes = ("layers", "batch", None, "kv_heads_cache", None)
+            sub["xk"] = (rules.spec(*vaxes) if as_spec
+                         else jax.ShapeDtypeStruct(vshp, cdt))
+            sub["xv"] = (rules.spec(*vaxes) if as_spec
+                         else jax.ShapeDtypeStruct(vshp, cdt))
+        tree[f"pos{pos}"] = sub
+    tree["pos_idx"] = (rules.spec() if as_spec
+                       else jax.ShapeDtypeStruct((), jnp.int32))
+    return tree
+
+
+# ---------------------------------------------------------------------------
+#  Layer application
+# ---------------------------------------------------------------------------
+def _apply_layer(h, sub, cfg, rules, pos, q_pos, kv_pos, vision,
+                 cache, cache_pos, mode):
+    """One layer at in-period position ``pos``.  Returns (h, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: Dict[str, Any] = {}
+    kind = cfg.layer_kind(pos)
+    hin = rms_norm(h, sub["ln1"], cfg.norm_eps)
+    hin = rules.cons(hin, "batch", "seq_act", None)   # SP: norm runs sharded
+    if kind == "attn":
+        kv_cache = ((cache["k"], cache["v"])
+                    if (cache is not None and mode == "decode") else None)
+        out, kv = attn_block(
+            hin, hin, sub["attn"], cfg, rules, q_pos, kv_pos,
+            causal=cfg.causal, window=cfg.sliding_window,
+            kv_cache=kv_cache, cache_pos=cache_pos)
+        if mode in ("decode", "prefill") and kv is not None:
+            k_, v_ = kv
+            if mode == "prefill" and cfg.sliding_window:
+                W = cache_len(cfg, k_.shape[1])
+                k_, v_ = k_[:, -W:], v_[:, -W:]
+            new_cache["k"], new_cache["v"] = k_, v_
+        h = h + out
+    else:
+        st = ((cache["conv"], cache["h"])
+              if (cache is not None and mode == "decode") else None)
+        out, st_new = mamba_block(hin, sub["mamba"], cfg, rules, state=st)
+        if mode in ("decode", "prefill") and st_new is not None:
+            new_cache["conv"], new_cache["h"] = st_new
+        h = h + out
+    if cfg.has_cross_attn(pos):
+        use_cached_vision = (mode == "decode" and cache is not None
+                             and "xk" in cache)
+        if use_cached_vision or vision is not None:
+            hx = rms_norm(h, sub["ln_x"], cfg.norm_eps)
+            if use_cached_vision:
+                # decode cross-attn: reuse cached vision K/V (no recompute)
+                xk, xv = cache["xk"], cache["xv"]
+                out = _cross_with_cache(hx, xk, xv, sub["xattn"], cfg, rules)
+                new_cache["xk"], new_cache["xv"] = xk, xv
+            else:
+                out, kv = attn_block(
+                    hx, vision, sub["xattn"], cfg, rules, q_pos,
+                    jnp.arange(vision.shape[1]), causal=False,
+                    use_rope=False)
+                if mode == "prefill":
+                    new_cache["xk"], new_cache["xv"] = kv
+            h = h + jnp.tanh(sub["xattn"]["gate"].astype(h.dtype)) * out
+    if cfg.d_ff > 0:
+        hin2 = rms_norm(h, sub["ln2"], cfg.norm_eps)
+        hin2 = rules.cons(hin2, "batch", "seq_act", None)
+        if cfg.ffn_kind(pos) == "moe":
+            out, aux = moe_block(hin2, sub["moe"], cfg, rules)
+        else:
+            out = mlp_block(hin2, sub["mlp"], cfg, rules)
+        h = h + out
+    # sequence parallelism: park the residual stream seq-sharded over the
+    # TP axis between blocks (no-op unless cfg.seq_shard) — GSPMD then
+    # lowers the per-block TP sync as reduce-scatter + all-gather instead
+    # of a full all-reduce (half the wire bytes)
+    h = rules.cons(h, "batch", "seq_act", None)
+    return h, new_cache, aux
+
+
+def _cross_with_cache(hx, xk, xv, p, cfg, rules):
+    """Cross-attention against cached vision K/V (decode path).  The cache
+    holds kh_eff heads (TP kv replication applied at prefill)."""
+    from .layers import sdpa
+    B, Sq, d = hx.shape
+    h_, kh, hd = cfg.n_heads, cfg.kh_eff, cfg.hd
+    G = h_ // kh
+    cdt = dt(cfg.compute_dtype)
+    q = jnp.einsum("bsd,dn->bsn", hx.astype(cdt), p["wq"].astype(cdt))
+    q = q.reshape(B, Sq, kh, G, hd)
+    mask = jnp.ones((1, 1, 1, Sq, xk.shape[1]), bool)
+    out = sdpa(q, xk.astype(cdt), xv.astype(cdt), mask, 0.0)
+    out = out.reshape(B, Sq, h_ * hd)
+    return jnp.einsum("bsn,nd->bsd", out, p["wo"].astype(cdt))
+
+
+# ---------------------------------------------------------------------------
+#  Backbone (scan over periods)
+# ---------------------------------------------------------------------------
+def backbone(params, h, cfg, rules: Rules, mode: str,
+             q_pos, kv_pos, vision=None, cache=None, cache_pos=None):
+    """h: [B, S, d] -> (h, new_cache_or_None, aux_loss)."""
+    P_ = period(cfg)
+
+    def body(carry, xs):
+        hh, aux = carry
+        bp, cc = xs
+        new_cc: Dict[str, Any] = {}
+        for pos in range(P_):
+            sub = bp[f"pos{pos}"]
+            c = cc[f"pos{pos}"] if cc is not None else None
+            hh, nc, a = _apply_layer(hh, sub, cfg, rules, pos, q_pos, kv_pos,
+                                     vision, c, cache_pos, mode)
+            new_cc[f"pos{pos}"] = nc
+            aux = aux + a
+        return (hh, aux), new_cc
+
+    # remat only matters when a backward pass will run
+    if cfg.remat_policy == "full" and mode == "train":
+        body = jax.checkpoint(body)
+
+    blocks = params["blocks"]
+    layer_cache = ({k: v for k, v in cache.items() if k != "pos_idx"}
+                   if cache is not None else None)
+    aux0 = jnp.zeros((), jnp.float32)
+    if cfg.scan_layers and mode == "decode" and layer_cache is not None:
+        # Decode: keep the stacked cache in the scan CARRY and update each
+        # layer's slice in place.  Emitting the updated cache as scan ys
+        # would double-buffer it (xs+ys copies of a multi-GB cache) and XLA
+        # then round-trips it through f32; the carry-DUS form aliases the
+        # donated input cache buffer (shared caching scheme at HBM level).
+        def body_carry(carry, xs_i):
+            hh, aux, cc_all = carry
+            bp, i = xs_i
+            cc = jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, i, 0,
+                                                       keepdims=False),
+                cc_all)
+            (hh, aux), new_cc = body((hh, aux), (bp, cc))
+            cc_new = jax.tree.map(
+                lambda a, n: jax.lax.dynamic_update_index_in_dim(
+                    a, n.astype(a.dtype), i, 0),
+                cc_all, new_cc)
+            return (hh, aux, cc_new), None
+
+        idx = jnp.arange(n_periods(cfg))
+        (h, aux, new_cache), _ = jax.lax.scan(
+            body_carry, (h, aux0, layer_cache), (blocks, idx))
+    elif cfg.scan_layers:
+        xs = (blocks, layer_cache)
+        (h, aux), new_cache = jax.lax.scan(body, (h, aux0), xs)
+    else:
+        new_caches = []
+        carry = (h, aux0)
+        for i in range(n_periods(cfg)):
+            bp = jax.tree.map(lambda a: a[i], blocks)
+            cc = (jax.tree.map(lambda a: a[i], layer_cache)
+                  if layer_cache is not None else None)
+            carry, nc = body(carry, (bp, cc))
+            new_caches.append(nc)
+        h, aux = carry
+        new_cache = (jax.tree.map(lambda *xs: jnp.stack(xs), *new_caches)
+                     if new_caches and new_caches[0] else None)
+    return h, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+#  Entry points
+# ---------------------------------------------------------------------------
+def _embed(params, batch, cfg, rules: Rules):
+    cdt = dt(cfg.compute_dtype)
+    if cfg.family == "audio":
+        x = batch["frames"].astype(cdt)                  # [B, T, d] stub frontend
+        x = jnp.einsum("btd,de->bte", x, params["in_proj_w"].astype(cdt))
+        x = x + params["in_proj_b"].astype(cdt)
+        x = rms_norm(x, params["in_ln"], cfg.norm_eps)
+    else:
+        tok = batch["tokens"]
+        x = params["tok_embed"].astype(cdt)[tok]         # gather [B, S, d]
+    return rules.cons(x, "batch", None, None)
+
+
+def _logits(params, h, cfg, rules: Rules):
+    cdt = dt(cfg.compute_dtype)
+    h = rms_norm(h, params["final_ln"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", h.astype(cdt),
+                        params["head_w"].astype(cdt))
+    return rules.cons(logits, "batch", None, "vocab")
+
+
+def forward_train(params, batch, cfg, rules: Rules = NO_RULES):
+    """-> (scalar loss, dict metrics).  batch: tokens [B,S] (+ vision /
+    frames / labels per family)."""
+    x = _embed(params, batch, cfg, rules)
+    S = x.shape[1]
+    pos = jnp.arange(S)
+    vision = batch.get("vision")
+    h, _, aux = backbone(params, x, cfg, rules, "train", pos, pos,
+                         vision=vision)
+    logits = _logits(params, h, cfg, rules).astype(jnp.float32)
+    if cfg.family == "audio":
+        labels = batch["labels"]                         # [B, T]
+        tgt = labels
+        lg = logits
+    else:
+        tgt = batch["tokens"][:, 1:]
+        lg = logits[:, :-1]
+    logz = jax.scipy.special.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, tgt[..., None], axis=-1)[..., 0]
+    ce = (logz - gold).mean()
+    loss = ce + 0.01 * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+def forward_prefill(params, batch, cfg, rules: Rules = NO_RULES):
+    """Full forward over the prompt -> (last-position logits, cache)."""
+    x = _embed(params, batch, cfg, rules)
+    S = x.shape[1]
+    pos = jnp.arange(S)
+    vision = batch.get("vision")
+    h, cache, _ = backbone(params, x, cfg, rules, "prefill", pos, pos,
+                           vision=vision)
+    logits = _logits(params, h[:, -1:], cfg, rules)
+    if cache is not None:
+        cache["pos_idx"] = jnp.asarray(S, jnp.int32)
+    return logits, cache
+
+
+def grow_cache(cache, cfg, max_len: int):
+    """Pad prefill-built KV caches along the seq axis to ``max_len`` so
+    decode has free slots (serving-time cache allocation)."""
+    Sc = cache_len(cfg, max_len)
+
+    def pad(path, x):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if name in ("k", "v") and x.ndim == 5 and x.shape[2] < Sc:
+            padw = [(0, 0)] * x.ndim
+            padw[2] = (0, Sc - x.shape[2])
+            return jnp.pad(x, padw)
+        return x
+
+    return jax.tree_util.tree_map_with_path(pad, cache)
+
+
+def decode_step(params, cache, batch, cfg, rules: Rules = NO_RULES):
+    """One-token decode against the cache -> (logits [B,1,V], new cache)."""
+    x = _embed(params, batch, cfg, rules)                # [B, 1, d]
+    pos_idx = cache["pos_idx"]
+    q_pos = pos_idx[None]
+    h, new_cache, _ = backbone(params, x, cfg, rules, "decode",
+                               q_pos, q_pos, vision=None,
+                               cache=cache, cache_pos=pos_idx)
+    logits = _logits(params, h, cfg, rules)
+    new_cache["pos_idx"] = pos_idx + 1
+    return logits, new_cache

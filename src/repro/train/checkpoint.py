@@ -1,0 +1,156 @@
+"""Sharded checkpointing with resharding restore (fault tolerance +
+elastic scaling substrate).
+
+Layout:  <dir>/step_<N>/
+           meta.msgpack          — step, config name, tree structure, dtypes
+           arrays.npz            — one entry per flattened tree path
+
+Saves are atomic (tmp dir + rename) and optionally asynchronous (background
+thread — training continues while the previous state serializes, double
+buffering the host copy).  Restore takes a *target mesh/sharding* so a
+checkpoint written on one mesh restarts on another (elastic re-scale):
+arrays are loaded on host then `device_put` with the new sharding.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+# ------------------------------------------------------------- tree <-> flat
+def _flatten_with_paths(tree) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out.append((key, leaf))
+    return out
+
+
+def tree_paths(tree) -> List[str]:
+    return [k for k, _ in _flatten_with_paths(tree)]
+
+
+def _unflatten_like(template, values: Dict[str, np.ndarray]):
+    flat = _flatten_with_paths(template)
+    leaves = [values[k] for k, _ in flat]
+    treedef = jax.tree_util.tree_structure(template)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+# ------------------------------------------------------------------ save
+def save_checkpoint(directory: str, step: int, state: Dict[str, Any],
+                    extra_meta: Optional[dict] = None) -> str:
+    """Synchronous atomic save.  ``state`` is any pytree of arrays."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat = _flatten_with_paths(state)
+    arrays = {k: np.asarray(jax.device_get(v)) for k, v in flat}
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    meta = {"step": step,
+            "paths": [k for k, _ in flat],
+            "shapes": {k: list(a.shape) for k, a in arrays.items()},
+            "dtypes": {k: str(a.dtype) for k, a in arrays.items()},
+            "time": time.time(),
+            "extra": extra_meta or {}}
+    with open(os.path.join(tmp, "meta.msgpack"), "wb") as f:
+        f.write(msgpack.packb(meta))
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, template, step: Optional[int] = None,
+                       shardings=None):
+    """Restore into the structure of ``template``.  ``shardings``: optional
+    pytree of jax.sharding.Sharding — arrays are placed with it (resharding
+    onto whatever mesh the caller is running now: elastic restart)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "meta.msgpack"), "rb") as f:
+        meta = msgpack.unpackb(f.read())
+    data = np.load(os.path.join(path, "arrays.npz"))
+    values = {k: data[k] for k in meta["paths"]}
+    tree = _unflatten_like(template, values)
+    if shardings is not None:
+        tree = jax.tree.map(
+            lambda x, s: jax.device_put(jnp.asarray(x), s), tree, shardings)
+    else:
+        tree = jax.tree.map(jnp.asarray, tree)
+    return tree, meta
+
+
+# ----------------------------------------------------------- manager
+class CheckpointManager:
+    """Periodic, asynchronous, keep-last-k checkpointing."""
+
+    def __init__(self, directory: str, every_steps: int = 100,
+                 keep: int = 3, async_save: bool = True):
+        self.directory = directory
+        self.every_steps = every_steps
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        self.saves = 0
+
+    def maybe_save(self, step: int, state, extra_meta=None,
+                   force: bool = False) -> bool:
+        if not force and (step % self.every_steps != 0 or step == 0):
+            return False
+        # snapshot to host BEFORE handing to the background thread (the
+        # device buffers may be donated/overwritten by the next step)
+        host_state = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                  state)
+        if self.async_save:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._save, args=(step, host_state, extra_meta),
+                daemon=True)
+            self._thread.start()
+        else:
+            self._save(step, host_state, extra_meta)
+        return True
+
+    def _save(self, step, host_state, extra_meta) -> None:
+        save_checkpoint(self.directory, step, host_state, extra_meta)
+        self.saves += 1
+        self._gc()
+
+    def wait(self) -> None:
+        if self._thread is not None and self._thread.is_alive():
+            self._thread.join()
+
+    def _gc(self) -> None:
+        if not os.path.isdir(self.directory):
+            return
+        steps = sorted(int(d.split("_")[1]) for d in os.listdir(self.directory)
+                       if d.startswith("step_") and not d.endswith(".tmp"))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)

@@ -1,0 +1,119 @@
+"""Fault tolerance for 1000+-node deployments.
+
+Three mechanisms (composable with the CheckpointManager):
+
+1. ``with_retries`` — transient-failure retry with exponential backoff
+   (preemptions, flaky interconnect RPCs, data-source hiccups).
+2. ``StragglerWatchdog`` — per-step wall-time monitor.  In an SPMD job a
+   straggling host stalls every step (collectives are synchronous), so
+   persistent step-time inflation IS the straggler signal; the watchdog
+   detects it (median × threshold over a sliding window) and fires a policy
+   callback (alert / checkpoint-now / request re-shard).  The detection
+   logic is hardware-independent and unit-tested with synthetic timings.
+3. ``ElasticRunner`` — restart loop: on failure, restore the latest
+   checkpoint onto the CURRENT device topology (possibly fewer/more hosts —
+   checkpoint.restore reshards) and continue.
+"""
+from __future__ import annotations
+
+import collections
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+
+def with_retries(fn: Callable, max_retries: int = 3, backoff: float = 0.1,
+                 retry_on=(RuntimeError, OSError), on_retry=None):
+    """Wrap fn with retry + exponential backoff."""
+
+    def wrapped(*args, **kwargs):
+        delay = backoff
+        for attempt in range(max_retries + 1):
+            try:
+                return fn(*args, **kwargs)
+            except retry_on as e:  # noqa: PERF203
+                if attempt == max_retries:
+                    raise
+                if on_retry is not None:
+                    on_retry(attempt, e)
+                time.sleep(delay)
+                delay *= 2
+        raise AssertionError("unreachable")
+
+    return wrapped
+
+
+@dataclass
+class StragglerEvent:
+    step: int
+    step_time: float
+    median: float
+    ratio: float
+
+
+class StragglerWatchdog:
+    """Sliding-window step-time monitor.
+
+    ``threshold``: a step slower than threshold x running-median is a
+    straggler suspicion; ``patience`` consecutive suspicions fire the
+    policy (default: record only)."""
+
+    def __init__(self, window: int = 32, threshold: float = 2.0,
+                 patience: int = 3,
+                 on_straggler: Optional[Callable[[StragglerEvent], None]] = None):
+        self.window = window
+        self.threshold = threshold
+        self.patience = patience
+        self.on_straggler = on_straggler
+        self.times: collections.deque = collections.deque(maxlen=window)
+        self.suspicions = 0
+        self.events: List[StragglerEvent] = []
+
+    def observe(self, step: int, step_time: float) -> Optional[StragglerEvent]:
+        med = float(np.median(self.times)) if len(self.times) >= 4 else None
+        self.times.append(step_time)
+        if med is None or med <= 0:
+            return None
+        ratio = step_time / med
+        if ratio > self.threshold:
+            self.suspicions += 1
+            if self.suspicions >= self.patience:
+                ev = StragglerEvent(step, step_time, med, ratio)
+                self.events.append(ev)
+                if self.on_straggler is not None:
+                    self.on_straggler(ev)
+                self.suspicions = 0
+                return ev
+        else:
+            self.suspicions = 0
+        return None
+
+
+class ElasticRunner:
+    """Checkpoint-restart loop with topology-change tolerance.
+
+    run(make_state, train_loop) calls ``train_loop(state, start_step)``;
+    on an exception from ``recover_on`` it restores the newest checkpoint
+    (resharded onto the current mesh by the caller-provided ``restore``)
+    and retries, up to ``max_restarts``."""
+
+    def __init__(self, restore: Callable[[], tuple], max_restarts: int = 3,
+                 recover_on=(RuntimeError,)):
+        self.restore = restore
+        self.max_restarts = max_restarts
+        self.recover_on = recover_on
+        self.restarts = 0
+
+    def run(self, train_loop: Callable[[Any, int], Any], init_state,
+            start_step: int = 0):
+        state, step = init_state, start_step
+        while True:
+            try:
+                return train_loop(state, step)
+            except self.recover_on as e:
+                self.restarts += 1
+                if self.restarts > self.max_restarts:
+                    raise
+                state, step = self.restore()

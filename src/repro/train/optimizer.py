@@ -1,0 +1,101 @@
+"""AdamW (own implementation) with dtype policies and warmup+cosine schedule.
+
+Moments are stored in ``cfg.opt_state_dtype`` (bf16 for the giant archs —
+DESIGN §6 memory policy); the update math runs in fp32.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    min_lr_frac: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def lr_at(step: jax.Array, cfg: OptConfig) -> jax.Array:
+    warm = cfg.lr * (step + 1) / max(cfg.warmup_steps, 1)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_frac * cfg.lr + (1 - cfg.min_lr_frac) * cfg.lr \
+        * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init_opt_state(params, model_cfg) -> Dict[str, Any]:
+    odt = jnp.dtype(model_cfg.opt_state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, odt)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def opt_state_shapes(params, model_cfg):
+    """ShapeDtypeStruct tree (dry-run: no allocation)."""
+    odt = jnp.dtype(model_cfg.opt_state_dtype)
+    sds = lambda p: jax.ShapeDtypeStruct(p.shape, odt)
+    return {"m": jax.tree.map(sds, params),
+            "v": jax.tree.map(sds, params),
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def opt_state_specs(param_specs_tree):
+    """PartitionSpecs mirroring the parameter sharding."""
+    from jax.sharding import PartitionSpec as P
+    return {"m": param_specs_tree, "v": param_specs_tree, "step": P()}
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(grads, params, opt_state, ocfg: OptConfig, model_cfg
+                 ) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+    """One AdamW step.  Returns (new_params, new_opt_state, stats)."""
+    step = opt_state["step"]
+    lr = lr_at(step, ocfg)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, ocfg.grad_clip / (gnorm + 1e-9)) \
+        if ocfg.grad_clip > 0 else jnp.ones(())
+    odt = jnp.dtype(model_cfg.opt_state_dtype)
+    pdt = jnp.dtype(model_cfg.param_dtype)
+    b1, b2 = ocfg.b1, ocfg.b2
+    bc1 = 1 - b1 ** (step.astype(jnp.float32) + 1)
+    bc2 = 1 - b2 ** (step.astype(jnp.float32) + 1)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32) * scale
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32
+        mh = m32 / bc1
+        vh = v32 / bc2
+        p32 = p.astype(jnp.float32)
+        wd = ocfg.weight_decay if p.ndim >= 2 else 0.0   # no decay on norms/biases
+        step_ = lr * (mh / (jnp.sqrt(vh) + ocfg.eps) + wd * p32)
+        return ((p32 - step_).astype(pdt), m32.astype(odt), v32.astype(odt))
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt_state["m"])
+    flat_v = jax.tree.leaves(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    new_state = {"m": new_m, "v": new_v, "step": step + 1}
+    return new_p, new_state, {"lr": lr, "grad_norm": gnorm}

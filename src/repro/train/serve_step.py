@@ -1,0 +1,78 @@
+"""Serving: prefill + decode steps with donated KV caches.
+
+Donating the cache buffer into each decode step is the paper's shared
+caching scheme applied to serving: the updated cache reuses the previous
+cache's memory — no copy per token.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.layers import NO_RULES, Rules
+from ..models.transformer import (decode_step, forward_prefill, grow_cache,
+                                  make_cache_shapes)
+
+
+def make_serve_steps(cfg, rules: Rules = NO_RULES):
+    """Returns (prefill_fn, decode_fn) (unjitted)."""
+
+    def prefill(params, batch):
+        return forward_prefill(params, batch, cfg, rules)
+
+    def decode(params, cache, batch):
+        return decode_step(params, cache, batch, cfg, rules)
+
+    return prefill, decode
+
+
+def jit_serve_steps(cfg, rules: Rules, param_spec_tree, mesh,
+                    batch: int, seq_len: int):
+    """jit'd prefill/decode with explicit shardings; decode donates the
+    cache (argnums=1)."""
+    from jax.sharding import NamedSharding
+
+    prefill, decode = make_serve_steps(cfg, rules)
+    ns = lambda s: NamedSharding(mesh, s)
+    p_sh = jax.tree.map(ns, param_spec_tree)
+    cache_spec = make_cache_shapes(cfg, batch, seq_len, rules, as_spec=True)
+    c_sh = jax.tree.map(ns, cache_spec)
+    jp = jax.jit(prefill, in_shardings=(p_sh, None))
+    jd = jax.jit(decode, in_shardings=(p_sh, c_sh, None),
+                 out_shardings=(None, c_sh), donate_argnums=(1,))
+    return jp, jd
+
+
+def sample_token(logits: jax.Array, key, temperature: float = 0.0
+                 ) -> jax.Array:
+    """logits [B, 1, V] -> tokens [B, 1]."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits[:, -1], axis=-1)[:, None]
+    return jax.random.categorical(key, logits[:, -1] / temperature)[:, None]
+
+
+def generate(params, cfg, prompts: jax.Array, max_new_tokens: int,
+             rules: Rules = NO_RULES, temperature: float = 0.0,
+             key=None, vision: Optional[jax.Array] = None):
+    """Batched greedy/temperature generation (reference serving loop)."""
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    batch: Dict[str, Any] = {"tokens": prompts}
+    if vision is not None:
+        batch["vision"] = vision
+    logits, cache = jax.jit(
+        lambda p, b: forward_prefill(p, b, cfg, rules))(params, batch)
+    cache = grow_cache(cache, cfg, prompts.shape[1] + max_new_tokens)
+    step = jax.jit(lambda p, c, b: decode_step(p, c, b, cfg, rules),
+                   donate_argnums=(1,))
+    out = []
+    tok = sample_token(logits, key, temperature)
+    out.append(tok)
+    for i in range(max_new_tokens - 1):
+        key = jax.random.fold_in(key, i)
+        logits, cache = step(params, cache, {"tokens": tok})
+        tok = sample_token(logits, key, temperature)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

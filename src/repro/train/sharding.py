@@ -1,0 +1,76 @@
+"""Logical-axis -> mesh-axis rules for every execution profile.
+
+The production mesh is (data=16, model=16), optionally with a leading pod=2
+axis (multi-pod).  Parameters are 2D-sharded: FSDP-style over the data-like
+axes ('embed' dims) x tensor-parallel over 'model' ('heads'/'d_ff'/'vocab'/
+'d_inner') — uniform across profiles so a checkpoint reshards trivially.
+
+Profiles differ only in activation layout:
+  train:   batch over (pod, data)
+  prefill: batch over (pod, data)
+  decode:  batch over (pod, data); KV-cache heads over 'model' when the
+           kv-head count divides the model axis, otherwise the cache SEQ
+           dim goes over 'model' (flash-decode layout — GQA kv=8 / MQA kv=1
+           archs cannot split 8 or 1 heads over 16 chips)
+  long:    batch=1 -> unsharded; KV/SSM state sharded as wide as possible
+           (seq over data[+model]) — the jamba/falcon 500k cells' layout.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+from ..models.layers import Rules
+
+
+def make_rules(mesh, profile: str = "train", cfg=None) -> Rules:
+    """``mesh``: jax Mesh (or any object with .shape mapping axis->size)."""
+    shape = dict(mesh.shape)
+    multi_pod = "pod" in shape
+    data_ax = ("pod", "data") if multi_pod else "data"
+    model_n = shape.get("model", 1)
+
+    kh = getattr(cfg, "kh_eff", getattr(cfg, "n_kv_heads", 0)) \
+        if cfg is not None else 0
+    kv_div = bool(kh) and kh % model_n == 0
+
+    mapping = {
+        # ---- parameters (2D: FSDP x TP) ----
+        "embed": data_ax,            # FSDP axis
+        "vocab": "model",
+        "heads": "model",            # fused h*hd projection dim
+        "kv_heads": "model",         # fused kh*hd projection dim
+        "d_ff": "model",
+        "d_inner": "model",
+        # MoE: baseline = experts replicated, TP over d_ff; EP mode (needs
+        # n_experts % model == 0) = experts over 'model', d_ff unsharded
+        "experts": ("model" if getattr(cfg, "expert_parallel", False)
+                    else None),
+        "expert_ff": (None if getattr(cfg, "expert_parallel", False)
+                      else "model"),
+        "layers": None,
+        # ---- activations ----
+        "batch": data_ax,
+        "kv_seq": None,
+        "kv_heads_act": "model" if kv_div else None,
+        "kv_heads_cache": "model" if kv_div else None,
+        # sequence parallelism (residual stream seq dim over 'model');
+        # None = replicated residual (baseline, pure Megatron-TP)
+        "seq_act": ("model" if getattr(cfg, "seq_shard", False)
+                    and profile == "train" else None),
+    }
+    if profile == "decode" and not kv_div:
+        # flash-decode: split the 32k KV cache along SEQ over 'model'
+        mapping["kv_seq"] = "model"
+    if profile == "long":
+        mapping["batch"] = None              # global_batch = 1
+        mapping["kv_seq"] = (data_ax if kv_div
+                             else (("pod", "data", "model") if multi_pod
+                                   else ("data", "model")))
+    return Rules(mapping)
+
+
+def data_axis_size(mesh) -> int:
+    size = mesh.shape["data"]
+    if "pod" in mesh.shape:
+        size *= mesh.shape["pod"]
+    return size

@@ -1,0 +1,17 @@
+import numpy as np
+import pytest
+
+from repro.etl.ssb import generate
+
+
+@pytest.fixture(scope="session")
+def ssb_small():
+    """Small SSB dataset shared across engine tests."""
+    return generate(lineorder_rows=60_000, customers=2_000, suppliers=300,
+                    parts=1_500, seed=7)
+
+
+@pytest.fixture(scope="session")
+def ssb_tiny():
+    return generate(lineorder_rows=5_000, customers=300, suppliers=50,
+                    parts=200, seed=11)

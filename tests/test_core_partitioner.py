@@ -1,0 +1,156 @@
+"""Algorithm 1 (execution-tree partitioning): shape tests on the paper's
+figures + hypothesis property tests on random DAGs."""
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import ComponentType, Dataflow, partition
+from repro.core.component import (BlockComponent, Component,
+                                  SemiBlockComponent, SinkComponent,
+                                  SourceComponent)
+from repro.core.shared_cache import SharedCache, concat_caches
+from repro.etl.queries import build_q4
+from repro.etl.ssb import generate
+
+
+class _Src(SourceComponent):
+    def total_rows(self):
+        return 0
+
+    def chunks(self, chunk_rows):
+        return iter(())
+
+
+class _Row(Component):
+    def _run(self, cache):
+        return [cache]
+
+
+class _Blk(BlockComponent):
+    def finish(self, state):
+        return concat_caches(state)
+
+
+class _Semi(SemiBlockComponent):
+    def finish(self, state):
+        return concat_caches(state)
+
+
+class _Sink(SinkComponent):
+    def write(self, cache):
+        pass
+
+
+def test_figure6_shape():
+    """The paper's Figure 6: source -> row-syncs with a sort (block), a
+    semi-block union of two branches, and an aggregation -> 4 trees."""
+    f = Dataflow("fig6")
+    src = f.add(_Src("source"))
+    ext = f.add(_Row("extract"))
+    f.connect(src, ext)
+    filt = f.add(_Row("filter_rows"))
+    conv = f.add(_Row("convert"))
+    f.connect(ext, filt)
+    f.connect(ext, conv)
+    sort = f.add(_Blk("sort"))              # roots T (block)
+    f.connect(conv, sort)
+    look = f.add(_Row("lookup"))
+    f.connect(sort, look)
+    uni = f.add(_Semi("union"))             # roots T (semi-block)
+    f.connect(filt, uni)
+    f.connect(look, uni)
+    agg = f.add(_Blk("sum"))                # roots T (block)
+    f.connect(uni, agg)
+    s1 = f.add(_Sink("target1"))
+    f.connect(agg, s1)
+    s2 = f.add(_Sink("target2"))
+    f.connect(uni, s2)
+
+    g = partition(f)
+    assert len(g.trees) == 4
+    roots = {t.root for t in g.trees}
+    assert roots == {"source", "sort", "union", "sum"}
+    by_root = {t.root: t for t in g.trees}
+    assert set(by_root["source"].members) == {"source", "extract",
+                                              "filter_rows", "convert"}
+    assert set(by_root["sort"].members) == {"sort", "lookup"}
+    assert set(by_root["union"].members) == {"union", "target2"}
+    assert set(by_root["sum"].members) == {"sum", "target1"}
+    # inter-tree edges: source->sort, source->union, sort->union, union->sum
+    ids = {r: by_root[r].tree_id for r in roots}
+    assert set(g.edges) == {(ids["source"], ids["sort"]),
+                            (ids["source"], ids["union"]),
+                            (ids["sort"], ids["union"]),
+                            (ids["union"], ids["sum"])}
+
+
+def test_q41_paper_trees():
+    """Figure 11: Q4.1 partitions into T1 (src + 4 lookups + filter +
+    project + expr), T2 (groupby), T3 (sort + sink)."""
+    data = generate(lineorder_rows=100, customers=50, suppliers=20,
+                    parts=20)
+    qf = build_q4(data)
+    g = partition(qf.flow)
+    members = sorted([sorted(t.members) for t in g.trees], key=len)
+    assert len(g.trees) == 3
+    assert members[0] == ["groupby_sum"]
+    assert members[1] == ["sink", "sort"]
+    assert len(members[2]) == 8          # T1
+
+
+# ---------------------------------------------------------------------------
+#  property: random layered DAGs
+# ---------------------------------------------------------------------------
+@st.composite
+def random_flow(draw):
+    f = Dataflow("rand")
+    n_src = draw(st.integers(1, 3))
+    sources = [f.add(_Src(f"src{i}")) for i in range(n_src)]
+    frontier = [s.name for s in sources]
+    n_mid = draw(st.integers(1, 12))
+    for i in range(n_mid):
+        kind = draw(st.sampled_from(["row", "block", "semi"]))
+        if kind == "row":
+            c = f.add(_Row(f"row{i}"))
+            up = draw(st.sampled_from(frontier))
+            f.connect(up, c)
+        elif kind == "block":
+            c = f.add(_Blk(f"blk{i}"))
+            up = draw(st.sampled_from(frontier))
+            f.connect(up, c)
+        else:
+            c = f.add(_Semi(f"semi{i}"))
+            ups = draw(st.lists(st.sampled_from(frontier), min_size=1,
+                                max_size=3, unique=True))
+            for u in ups:
+                f.connect(u, c)
+        frontier.append(c.name)
+    # every sink-less leaf gets a sink
+    for leaf in list(f.sinks()):
+        if f.component(leaf).ctype != ComponentType.SINK:
+            s = f.add(_Sink(f"sink_{leaf}"))
+            f.connect(leaf, s)
+    return f
+
+
+@given(random_flow())
+@settings(max_examples=60, deadline=None)
+def test_partition_invariants(flow):
+    g = partition(flow)
+    # 1. every vertex is in exactly one tree
+    all_members = [m for t in g.trees for m in t.members]
+    assert sorted(all_members) == sorted(flow.vertices.keys())
+    for t in g.trees:
+        root_c = flow.component(t.root)
+        # 2. roots are sources or block/semi-block (paper §4.1)
+        assert (root_c.ctype.roots_tree
+                or flow.in_degree(t.root) == 0)
+        # 3. non-root members stream (row-sync or sink)
+        for m in t.members[1:]:
+            assert flow.component(m).ctype.streams
+    # 4. the tree graph is acyclic with consistent edges
+    order = g.topo_tree_order()
+    assert sorted(order) == sorted(t.tree_id for t in g.trees)
+    for a, b in g.edges:
+        assert a != b

@@ -1,0 +1,135 @@
+"""Algorithm 2 semantics: busy/wait/notify serialization, split-order
+enforcement, BlockingQueue admission bound, pipeline == sequential results."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import Dataflow, OptimizedEngine, OptimizeOptions
+from repro.core.component import Component, SinkComponent, SourceComponent
+from repro.core.pipeline import BlockingQueue, TreePipeline
+from repro.core.partitioner import partition
+from repro.core.shared_cache import SharedCache
+from repro.etl.components import ArraySource, CollectSink
+
+
+class ConcurrencyProbe(Component):
+    """Row-sync component that records its concurrent-entry count."""
+
+    def __init__(self, name, delay=0.001):
+        super().__init__(name)
+        self.delay = delay
+        self._active = 0
+        self._max_active = 0
+        self._lock = threading.Lock()
+        self.seen_splits = []
+
+    def _run(self, cache):
+        with self._lock:
+            self._active += 1
+            self._max_active = max(self._max_active, self._active)
+            self.seen_splits.append(cache.split_index)
+        time.sleep(self.delay)
+        with self._lock:
+            self._active -= 1
+        return [cache]
+
+
+def _flow(n_stages=3, rows=4000, order_sensitive=False):
+    flow = Dataflow("probe")
+    src = ArraySource("src", {"x": np.arange(rows, dtype=np.int64)})
+    flow.add(src)
+    prev = src
+    probes = []
+    for i in range(n_stages):
+        p = ConcurrencyProbe(f"p{i}")
+        p.order_sensitive = order_sensitive
+        flow.add(p)
+        flow.connect(prev, p)
+        probes.append(p)
+        prev = p
+    sink = CollectSink("sink")
+    flow.add(sink)
+    flow.connect(prev, sink)
+    return flow, probes, sink
+
+
+def test_activity_never_concurrent():
+    """Paper lines 6-11: one shared cache at a time per activity."""
+    flow, probes, sink = _flow()
+    OptimizedEngine(flow, OptimizeOptions(num_splits=8)).run()
+    for p in probes:
+        assert p._max_active == 1, p.name
+    got = np.sort(sink.result()["x"])
+    np.testing.assert_array_equal(got, np.arange(4000))
+
+
+def test_order_sensitive_components_see_splits_in_order():
+    flow, probes, sink = _flow(order_sensitive=True)
+    OptimizedEngine(flow, OptimizeOptions(num_splits=8)).run()
+    for p in probes:
+        assert p.seen_splits == sorted(p.seen_splits), p.name
+
+
+def test_pipeline_equals_sequential():
+    flow1, _, sink1 = _flow()
+    OptimizedEngine(flow1, OptimizeOptions(num_splits=8,
+                                           pipelined=True)).run()
+    flow2, _, sink2 = _flow()
+    OptimizedEngine(flow2, OptimizeOptions(num_splits=8,
+                                           pipelined=False)).run()
+    a = np.sort(sink1.result()["x"])
+    b = np.sort(sink2.result()["x"])
+    np.testing.assert_array_equal(a, b)
+
+
+def test_blocking_queue_bounds_inflight():
+    """BlockingQueue(m') blocks admission while m' threads are live."""
+    bq = BlockingQueue(2)
+    release = threading.Event()
+    threads = [threading.Thread(target=release.wait, daemon=True)
+               for _ in range(3)]
+    bq.add(threads[0]); threads[0].start()
+    bq.add(threads[1]); threads[1].start()
+    admitted_third = threading.Event()
+
+    def try_add():
+        bq.add(threads[2])
+        admitted_third.set()
+
+    t = threading.Thread(target=try_add, daemon=True)
+    t.start()
+    time.sleep(0.05)
+    assert not admitted_third.is_set()      # full: blocked
+    release.set()                           # threads finish
+    time.sleep(0.05)
+    bq.reap()                               # housekeeping frees slots
+    t.join(timeout=2)
+    assert admitted_third.is_set()
+
+
+def test_pipeline_degree_one_is_sequential_order():
+    """m'=1 degenerates to non-pipeline fashion (paper §4.2)."""
+    flow, probes, sink = _flow(n_stages=2, rows=1000)
+    OptimizedEngine(flow, OptimizeOptions(num_splits=4,
+                                          pipeline_degree=1)).run()
+    for p in probes:
+        assert p.seen_splits == sorted(p.seen_splits)
+    assert len(sink.result()["x"]) == 1000
+
+
+def test_error_in_activity_propagates():
+    flow = Dataflow("err")
+    src = flow.add(ArraySource("src", {"x": np.arange(100, dtype=np.int64)}))
+
+    class Boom(Component):
+        def _run(self, cache):
+            raise RuntimeError("boom")
+
+    b = flow.add(Boom("boom"))
+    flow.connect(src, b)
+    sink = flow.add(CollectSink("sink"))
+    flow.connect(b, sink)
+    with pytest.raises(RuntimeError, match="boom"):
+        OptimizedEngine(flow, OptimizeOptions(num_splits=2)).run()

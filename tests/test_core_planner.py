@@ -1,0 +1,88 @@
+"""Theorem 1 + Algorithm 3: the analytic optimum actually minimizes the cost
+model, and build_plan recovers parameters from synthetic measurements."""
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core.planner import (PipelinePlan, build_plan, choose_degree,
+                                theorem1_m_star)
+
+
+def T_p(m, c, lam, N, t0, n):
+    """Paper §4.2: T_p = (c - lam*N)/m + t0*m + lam*N + (n-1)*t0."""
+    return (c - lam * N) / m + t0 * m + lam * N + (n - 1) * t0
+
+
+@given(st.floats(0.5, 500.0),      # c: total net time
+       st.floats(1e-6, 1e-3),      # lam
+       st.integers(100, 100_000),  # N
+       st.floats(1e-4, 0.5),       # t0
+       st.integers(2, 12))         # n activities
+@settings(max_examples=200, deadline=None)
+def test_theorem1_minimizes_cost(c, lam, N, t0, n):
+    # keep the model well-posed: net time at the staggering activity
+    # cannot exceed the total net time
+    if lam * N >= c:
+        c = lam * N * 1.5
+    m_star = theorem1_m_star(c, lam, N, t0)
+    best_grid = min(T_p(m, c, lam, N, t0, n) for m in range(1, 2001))
+    got = T_p(max(m_star, 1.0), c, lam, N, t0, n)
+    # continuous optimum is never worse than 1.001x the best integer m
+    assert got <= best_grid * 1.001
+
+
+def test_theorem1_closed_form():
+    # hand-checked: c=100, lam*N=10, t0=0.1 -> m* = sqrt(90/0.1) = 30
+    assert theorem1_m_star(100.0, 0.1, 100, 0.1) == pytest.approx(30.0)
+
+
+def test_theorem1_clamps():
+    # huge inner term -> clamped to m_max
+    assert theorem1_m_star(100.0, 0.1, 10, 1e-9, m_max=64) == 64.0
+    # c <= lam*N -> inner clamps to 0 -> m = 1
+    assert theorem1_m_star(0.0, 1.0, 100, 1.0) == 1.0
+
+
+def test_build_plan_recovers_parameters():
+    """Synthesize Algorithm-3 measurements from known (c, lam, t0) and check
+    the plan reproduces them."""
+    n = 5
+    t0 = 0.01
+    lam = 2e-5
+    rows = 200_000
+    m_prime = 4
+    # activity i net time: staggering activity is index 2
+    nets = [0.5, 0.8, lam * rows, 0.6, 0.3]
+    times = {f"a{i}": nets[i] + t0 for i in range(n)}
+    plan = build_plan(times, misc_total=n * t0, sample_rows=rows,
+                      full_rows=rows, m_prime=m_prime)
+    assert plan.staggering == "a2"
+    assert plan.t0 == pytest.approx(t0)
+    assert plan.c == pytest.approx(sum(nets), rel=1e-6)
+    # lambda from the per-split staggering time: t_j/m' = t0 + lam*N/m'
+    lam_hat = plan.lam
+    assert lam_hat == pytest.approx((nets[2] + t0) / m_prime - t0, rel=0.1) \
+        or lam_hat * plan.N == pytest.approx(lam * rows, rel=0.35)
+    # the plan's m* matches the closed form on its own parameters
+    assert plan.m_star == pytest.approx(
+        theorem1_m_star(plan.c, plan.lam, plan.N, plan.t0,
+                        m_max=rows))
+
+
+def test_predicted_speedup_shape():
+    plan = PipelinePlan(n=4, t0=0.01, c=10.0, lam=1e-5, N=100_000,
+                        staggering="a1", m_star=30.0)
+    s1 = plan.predict_speedup(1)
+    s8 = plan.predict_speedup(8)
+    s_star = plan.predict_speedup(plan.m_star)
+    assert s1 == pytest.approx(1.0, rel=1e-6)
+    assert s8 > s1
+    assert s_star >= s8 * 0.99
+
+
+def test_choose_degree_caps():
+    plan = PipelinePlan(n=4, t0=1e-4, c=100.0, lam=1e-9, N=10,
+                        staggering="a0", m_star=1000.0)
+    assert choose_degree(plan, cores=8) == 8
+    assert choose_degree(plan, cores=None, cap=64) == 64

@@ -1,0 +1,119 @@
+"""ETL-based training input pipeline: packing correctness, determinism,
+window carry, prefetch semantics."""
+import numpy as np
+import pytest
+
+from repro.data import (InputPipeline, PipelineConfig, PrefetchQueue,
+                        SyntheticTokenSource, make_lm_batch_fn)
+from repro.data.pipeline import SequencePacker, build_lm_dataflow
+from repro.core import OptimizedEngine, OptimizeOptions, partition
+from repro.core.shared_cache import SharedCache
+from repro.configs import get_config
+
+
+def _pc(**kw):
+    base = dict(seq_len=64, global_batch=4, vocab_size=500,
+                docs_per_window=128, num_splits=4, pipeline_degree=2,
+                max_doc_len=96, min_doc_len=8, seed=3)
+    base.update(kw)
+    return PipelineConfig(**base)
+
+
+def test_batches_shape_and_range():
+    it = iter(InputPipeline(_pc()))
+    for _ in range(3):
+        b = next(it)
+        assert b.shape == (4, 65)
+        assert b.min() >= 0 and b.max() < 500
+
+
+def test_determinism_across_instances():
+    a = iter(InputPipeline(_pc()))
+    b = iter(InputPipeline(_pc()))
+    for _ in range(3):
+        np.testing.assert_array_equal(next(a), next(b))
+
+
+def test_packing_preserves_token_stream():
+    """Reassembling the packed blocks must reproduce doc tokens + EOS
+    separators in document order (the row-order synchronizer guarantee)."""
+    pc = _pc()
+    pipe = InputPipeline(pc)
+    it = iter(pipe)
+    blocks = [next(it) for _ in range(4)]
+    stream = np.concatenate([b.reshape(-1) for b in blocks])
+
+    # independently rebuild the expected stream from the filtered source,
+    # using the engine's chunking (docs_per_window / num_splits) — the
+    # source's RNG stream is chunk-granular
+    src = SyntheticTokenSource("s", pc, window=0)
+    parts = []
+    for cache in src.chunks(pc.docs_per_window // pc.num_splits):
+        toks, lens = cache.col("tokens"), cache.col("length")
+        for i in range(cache.n):
+            if lens[i] >= pc.min_doc_len:
+                parts.append(toks[i, : lens[i]])
+                parts.append(np.array([pc.eos_id], np.int32))
+    expect = np.concatenate(parts)[: len(stream)]
+    np.testing.assert_array_equal(stream, expect)
+
+
+def test_leftover_carry_across_windows():
+    pc = _pc(docs_per_window=4, global_batch=8)
+    pipe = InputPipeline(pc)
+    it = iter(pipe)
+    next(it)
+    assert len(pipe.engine_runs) >= 2     # needed multiple windows
+    # no tokens lost at window boundaries: covered by stream test above
+
+
+def test_dataflow_partitions_into_two_trees():
+    flow, _, _ = build_lm_dataflow(_pc(), window=0)
+    g = partition(flow)
+    assert len(g.trees) == 2              # packer (block) roots tree 2
+    roots = {t.root for t in g.trees}
+    assert roots == {"doc_source", "sequence_packer"}
+
+
+def test_prefetch_queue_yields_all_and_propagates_errors():
+    q = PrefetchQueue(iter(range(10)), depth=2, stage_fn=lambda x: x * 2)
+    assert sorted(q) == [0, 2, 4, 6, 8, 10, 12, 14, 16, 18]
+
+    def boom():
+        yield 1
+        raise ValueError("source died")
+
+    q2 = PrefetchQueue(boom(), depth=2)
+    assert next(q2) == 1
+    with pytest.raises(ValueError, match="source died"):
+        next(q2)
+        next(q2)
+
+
+def test_batch_fns_per_family():
+    blk = np.arange(4 * 33, dtype=np.int32).reshape(4, 33) % 100
+    lm = make_lm_batch_fn(get_config("stablelm-3b", smoke=True))(blk)
+    assert lm["tokens"].shape == (4, 32)
+    au_cfg = get_config("hubert-xlarge", smoke=True)
+    au = make_lm_batch_fn(au_cfg)(blk)
+    assert au["frames"].shape == (4, 32, au_cfg.d_model)
+    assert au["labels"].shape == (4, 32)
+    vl_cfg = get_config("llama-3.2-vision-11b", smoke=True)
+    vl = make_lm_batch_fn(vl_cfg)(blk)
+    assert vl["vision"].shape == (4, vl_cfg.n_vision_tokens, vl_cfg.d_model)
+
+
+def test_packer_block_component_semantics():
+    p = SequencePacker("p", seq_len=4, eos_id=9)
+    state = p.new_state()
+    p.accumulate(state, SharedCache({
+        "tokens": np.array([[1, 2, 3, 0]], np.int32),
+        "length": np.array([3], np.int32)}))
+    p.accumulate(state, SharedCache({
+        "tokens": np.array([[4, 5, 0, 0]], np.int32),
+        "length": np.array([2], np.int32)}))
+    out = p.finish(state)
+    # stream = 1 2 3 9 4 5 9 -> one row of 5, leftover [5 9]... seq_len+1=5
+    np.testing.assert_array_equal(out.col("tokens"),
+                                  [[1, 2, 3, 9, 4]])
+    np.testing.assert_array_equal(p.leftover, [5, 9])

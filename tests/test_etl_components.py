@@ -1,0 +1,158 @@
+"""Unit + property tests for the ETL component library."""
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core.shared_cache import SharedCache, concat_caches
+from repro.etl.components import (Aggregate, ArraySource, CollectSink,
+                                  Converter, DimTable, Expression, Filter,
+                                  Lookup, Merge, Project, Sort, Splitter,
+                                  Union)
+
+
+def _cache(**cols):
+    return SharedCache({k: np.asarray(v) for k, v in cols.items()})
+
+
+# ---------------------------------------------------------------- row sync
+def test_filter_compacts_in_place():
+    c = _cache(x=np.arange(10, dtype=np.int64))
+    buf = c.columns["x"]
+    Filter("f", lambda ca, r: ca.col("x")[r] % 2 == 0).process(c)
+    assert c.n == 5
+    np.testing.assert_array_equal(c.col("x"), [0, 2, 4, 6, 8])
+    assert c.columns["x"] is buf           # same buffer: shared caching
+
+
+def test_filter_multithreaded_ranges_equal_single():
+    rng = np.random.default_rng(0)
+    x = rng.integers(0, 100, 1000)
+    f = Filter("f", lambda ca, r: ca.col("x")[r] > 50)
+    c1 = _cache(x=x.copy())
+    f.process(c1)
+    c2 = _cache(x=x.copy())
+    ranges = c2.row_ranges(4)
+    parts = [f.process_range(c2, r) for r in ranges]
+    f.merge_ranges(c2, ranges, parts)
+    np.testing.assert_array_equal(c1.col("x"), c2.col("x"))
+
+
+def test_lookup_matched_and_unmatched():
+    dim = DimTable(np.array([1, 2, 3]), {"v": np.array([10, 20, 30])})
+    c = _cache(k=np.array([2, 9, 1, 3]))
+    Lookup("lk", dim, "k", {"v": "v"}).process(c)
+    np.testing.assert_array_equal(c.col("v"), [20, -1, 10, 30])
+
+
+def test_lookup_row_filter_marks_unqualified():
+    dim = DimTable(np.array([1, 2, 3]), {"v": np.array([10, 20, 30])},
+                   row_filter=np.array([True, False, True]))
+    c = _cache(k=np.array([1, 2, 3]))
+    Lookup("lk", dim, "k", {"v": "v"}).process(c)
+    np.testing.assert_array_equal(c.col("v"), [10, -1, 30])
+
+
+def test_expression_and_project_and_converter():
+    c = _cache(a=np.array([1, 2]), b=np.array([10, 20]))
+    Expression("e", "s", lambda ca, r: ca.col("a")[r] + ca.col("b")[r]
+               ).process(c)
+    np.testing.assert_array_equal(c.col("s"), [11, 22])
+    Converter("cv", {"s": np.float32}).process(c)
+    assert c.col("s").dtype == np.float32
+    Project("p", ["s"]).process(c)
+    assert c.names == ["s"]
+
+
+def test_splitter_two_ports():
+    c = _cache(x=np.arange(10))
+    outs = Splitter("sp", lambda ca, r: ca.col("x")[r] < 5).process(c)
+    np.testing.assert_array_equal(outs[0].col("x"), np.arange(5))
+    np.testing.assert_array_equal(outs[1].col("x"), np.arange(5, 10))
+
+
+# ------------------------------------------------------------------- block
+@given(st.lists(st.tuples(st.integers(0, 5), st.integers(-100, 100)),
+                min_size=1, max_size=300))
+@settings(max_examples=50, deadline=None)
+def test_aggregate_matches_numpy(pairs):
+    keys = np.array([p[0] for p in pairs], dtype=np.int64)
+    vals = np.array([p[1] for p in pairs], dtype=np.int64)
+    agg = Aggregate("a", ["k"], {"s": ("v", "sum"), "mn": ("v", "min"),
+                                 "mx": ("v", "max"), "av": ("v", "avg"),
+                                 "ct": ("v", "count")})
+    out = agg.finish([_cache(k=keys, v=vals)])
+    for i, k in enumerate(out.col("k")):
+        sel = vals[keys == k]
+        assert out.col("s")[i] == sel.sum()
+        assert out.col("mn")[i] == sel.min()
+        assert out.col("mx")[i] == sel.max()
+        assert out.col("av")[i] == pytest.approx(sel.mean())
+        assert out.col("ct")[i] == len(sel)
+    assert sorted(set(keys.tolist())) == out.col("k").tolist()
+
+
+def test_aggregate_global_no_groups():
+    out = Aggregate("a", [], {"s": ("v", "sum")}).finish(
+        [_cache(v=np.array([1.0, 2.0, 3.0]))])
+    assert out.n == 1
+    assert out.col("s")[0] == 6.0
+
+
+def test_aggregate_accumulates_multiple_caches():
+    agg = Aggregate("a", ["k"], {"s": ("v", "sum")})
+    state = agg.new_state()
+    agg.accumulate(state, _cache(k=np.array([0, 1]), v=np.array([1, 2])))
+    agg.accumulate(state, _cache(k=np.array([1, 0]), v=np.array([3, 4])))
+    out = agg.finish(state)
+    np.testing.assert_array_equal(out.col("s"), [5.0, 5.0])
+
+
+@given(st.lists(st.integers(-1000, 1000), min_size=1, max_size=200))
+@settings(max_examples=50, deadline=None)
+def test_sort_matches_numpy(xs):
+    arr = np.array(xs, dtype=np.int64)
+    out = Sort("s", ["x"]).finish([_cache(x=arr.copy())])
+    np.testing.assert_array_equal(out.col("x"), np.sort(arr))
+
+
+def test_sort_descending_and_multikey():
+    c = _cache(a=np.array([1, 0, 1, 0]), b=np.array([5, 6, 7, 8]))
+    out = Sort("s", ["a", "b"]).finish([c])
+    np.testing.assert_array_equal(out.col("a"), [0, 0, 1, 1])
+    np.testing.assert_array_equal(out.col("b"), [6, 8, 5, 7])
+
+
+# --------------------------------------------------------------- semi-block
+def test_union_concats_all_upstreams():
+    out = Union("u").finish([_cache(x=np.array([1, 2])),
+                             _cache(x=np.array([3]))])
+    assert sorted(out.col("x").tolist()) == [1, 2, 3]
+
+
+def test_merge_sorts_by_key():
+    out = Merge("m", ["x"]).finish([_cache(x=np.array([5, 1])),
+                                    _cache(x=np.array([3]))])
+    np.testing.assert_array_equal(out.col("x"), [1, 3, 5])
+
+
+# ---------------------------------------------------------------- caches
+def test_shared_cache_split_is_zero_copy_views():
+    c = _cache(x=np.arange(100))
+    splits = c.split(4)
+    assert [s.n for s in splits] == [25, 25, 25, 25]
+    splits[0].columns["x"][0] = 999
+    assert c.col("x")[0] == 999            # view, not copy
+
+
+def test_concat_restores_split_order():
+    a = SharedCache({"x": np.array([3, 4])}, split_index=1)
+    b = SharedCache({"x": np.array([1, 2])}, split_index=0)
+    out = concat_caches([a, b], ordered=True)
+    np.testing.assert_array_equal(out.col("x"), [1, 2, 3, 4])
+
+
+def test_source_chunking_covers_all_rows(ssb_tiny):
+    src = ArraySource("lo", ssb_tiny.lineorder)
+    total = sum(c.n for c in src.chunks(1024))
+    assert total == src.total_rows()

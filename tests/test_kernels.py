@@ -1,0 +1,129 @@
+"""Per-kernel interpret=True allclose sweeps against the pure-jnp oracles."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention, flash_attention_ref
+from repro.kernels.mamba_scan import mamba_scan, mamba_scan_ref
+from repro.kernels.segment_sum import segment_sum, segment_sum_ref
+
+RNG = np.random.default_rng(1234)
+
+
+# ------------------------------------------------------------- segment_sum
+@pytest.mark.parametrize("n,c,g,tile", [
+    (100, 1, 8, 32), (1000, 4, 37, 128), (513, 3, 64, 256),
+    (2048, 8, 128, 512), (7, 2, 4, 512),
+])
+def test_segment_sum_sweep(n, c, g, tile):
+    seg = RNG.integers(-1, g, n).astype(np.int32)
+    vals = RNG.normal(size=(n, c)).astype(np.float32)
+    ref = segment_sum_ref(jnp.array(seg), jnp.array(vals), g)
+    got = segment_sum(jnp.array(seg), jnp.array(vals), g,
+                      impl="interpret", rows_tile=tile)
+    np.testing.assert_allclose(np.array(got), np.array(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_segment_sum_all_padding():
+    seg = np.full(64, -1, np.int32)
+    vals = RNG.normal(size=(64, 2)).astype(np.float32)
+    got = segment_sum(jnp.array(seg), jnp.array(vals), 8, impl="interpret")
+    np.testing.assert_array_equal(np.array(got), np.zeros((8, 2)))
+
+
+def test_segment_sum_matches_paper_groupby(ssb_tiny):
+    """The kernel computes the paper's block component (Fig-11 groupby_sum)."""
+    lo = ssb_tiny.lineorder
+    year = lo["lo_orderdate"] // 10000 - 1992
+    profit = (lo["lo_revenue"] - lo["lo_supplycost"]).astype(np.float32)
+    got = segment_sum(jnp.array(year.astype(np.int32)),
+                      jnp.array(profit[:, None]), 7, impl="interpret")
+    expect = np.zeros(7)
+    np.add.at(expect, year, profit)
+    np.testing.assert_allclose(np.array(got)[:, 0], expect, rtol=1e-5)
+
+
+# --------------------------------------------------------- flash attention
+@pytest.mark.parametrize("B,Sq,Skv,Kh,G,hd,causal,window,softcap,bq,bk", [
+    (1, 64, 64, 1, 1, 32, True, 0, 0.0, 32, 32),
+    (2, 128, 128, 2, 2, 64, True, 0, 0.0, 32, 64),
+    (2, 128, 128, 2, 2, 64, False, 0, 0.0, 64, 32),
+    (1, 96, 96, 2, 4, 32, True, 24, 0.0, 32, 32),     # sliding window
+    (1, 64, 64, 4, 1, 64, True, 0, 30.0, 32, 32),     # grok softcap
+    (2, 80, 80, 1, 8, 16, True, 0, 0.0, 32, 32),      # ragged blocks (pad)
+    (1, 33, 57, 1, 2, 8, False, 0, 0.0, 16, 16),      # cross-attn shapes
+])
+def test_flash_attention_sweep(B, Sq, Skv, Kh, G, hd, causal, window,
+                               softcap, bq, bk):
+    q = jnp.array(RNG.normal(size=(B, Sq, Kh, G, hd)), jnp.float32)
+    k = jnp.array(RNG.normal(size=(B, Skv, Kh, hd)), jnp.float32)
+    v = jnp.array(RNG.normal(size=(B, Skv, Kh, hd)), jnp.float32)
+    ref = flash_attention_ref(q, k, v, causal=causal, window=window,
+                              softcap=softcap)
+    got = flash_attention(q, k, v, causal=causal, window=window,
+                          softcap=softcap, impl="interpret",
+                          block_q=bq, block_k=bk)
+    np.testing.assert_allclose(np.array(got), np.array(ref),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    B, S, Kh, G, hd = 1, 64, 2, 2, 32
+    q = jnp.array(RNG.normal(size=(B, S, Kh, G, hd)), jnp.bfloat16)
+    k = jnp.array(RNG.normal(size=(B, S, Kh, hd)), jnp.bfloat16)
+    v = jnp.array(RNG.normal(size=(B, S, Kh, hd)), jnp.bfloat16)
+    ref = flash_attention_ref(q, k, v, causal=True)
+    got = flash_attention(q, k, v, causal=True, impl="interpret",
+                          block_q=32, block_k=32)
+    np.testing.assert_allclose(np.array(got, np.float32),
+                               np.array(ref, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+# --------------------------------------------------------------- mamba scan
+@pytest.mark.parametrize("Bt,T,d,N,chunk,dblk", [
+    (1, 16, 8, 4, 8, 8),
+    (2, 48, 24, 8, 16, 16),
+    (2, 100, 32, 16, 32, 16),     # ragged T (pad)
+    (1, 64, 48, 16, 64, 512),     # d < d_block
+])
+def test_mamba_scan_sweep(Bt, T, d, N, chunk, dblk):
+    delta = jnp.array(np.abs(RNG.normal(size=(Bt, T, d))).clip(0.01, 1.0),
+                      jnp.float32)
+    x = jnp.array(RNG.normal(size=(Bt, T, d)), jnp.float32)
+    B = jnp.array(RNG.normal(size=(Bt, T, N)), jnp.float32)
+    C = jnp.array(RNG.normal(size=(Bt, T, N)), jnp.float32)
+    A = jnp.array(-np.abs(RNG.normal(size=(d, N))) - 0.05, jnp.float32)
+    h0 = jnp.array(RNG.normal(size=(Bt, d, N)), jnp.float32)
+    y_ref, hT_ref = mamba_scan_ref(delta, x, B, C, A, h0)
+    y, hT = mamba_scan(delta, x, B, C, A, h0, impl="interpret",
+                       chunk=chunk, d_block=dblk)
+    np.testing.assert_allclose(np.array(y), np.array(y_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.array(hT), np.array(hT_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_mamba_scan_continuation():
+    """Scanning [0:T1] then [T1:T] from hT equals scanning [0:T] — the
+    chunked-carry invariant the kernel's sequential grid relies on."""
+    Bt, T, d, N = 1, 32, 8, 4
+    delta = jnp.array(np.abs(RNG.normal(size=(Bt, T, d))).clip(0.01, 1.0),
+                      jnp.float32)
+    x = jnp.array(RNG.normal(size=(Bt, T, d)), jnp.float32)
+    B = jnp.array(RNG.normal(size=(Bt, T, N)), jnp.float32)
+    C = jnp.array(RNG.normal(size=(Bt, T, N)), jnp.float32)
+    A = jnp.array(-np.abs(RNG.normal(size=(d, N))) - 0.05, jnp.float32)
+    h0 = jnp.zeros((Bt, d, N), jnp.float32)
+    y_full, hT_full = mamba_scan_ref(delta, x, B, C, A, h0)
+    y1, h1 = mamba_scan(delta[:, :16], x[:, :16], B[:, :16], C[:, :16],
+                        A, h0, impl="interpret", chunk=8, d_block=8)
+    y2, h2 = mamba_scan(delta[:, 16:], x[:, 16:], B[:, 16:], C[:, 16:],
+                        A, h1, impl="interpret", chunk=8, d_block=8)
+    np.testing.assert_allclose(np.array(jnp.concatenate([y1, y2], 1)),
+                               np.array(y_full), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.array(h2), np.array(hT_full),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,96 @@
+"""Discrete-event simulator sanity + metadata store round trips."""
+import numpy as np
+import pytest
+
+from repro.core import (Dataflow, MetadataStore, partition, plan_schedule,
+                        simulate_tree, speedup_curve)
+from repro.core.simulate import cpu_usage_curve, multithreading_curve
+from repro.etl.queries import build_q4
+from repro.etl.ssb import generate
+
+
+def test_simulator_m1_equals_sequential():
+    costs = np.array([[1.0], [2.0], [0.5]])
+    res = simulate_tree(costs, cores=8, m_prime=1)
+    assert res.makespan == pytest.approx(3.5)
+    assert res.speedup == pytest.approx(1.0)
+
+
+def test_simulator_pipeline_bound_by_staggering_activity():
+    """The staggering activity serializes: makespan >= its total time, and
+    pipelining still beats sequential (paper §4.2 cost model)."""
+    n, m = 3, 8
+    per = np.array([0.1, 0.4, 0.1])
+    costs = np.tile((per / m)[:, None], (1, m))
+    res = simulate_tree(costs, cores=8)
+    lower = per[1] / m * m            # staggering activity total
+    assert res.makespan >= lower
+    assert res.makespan <= per.sum() / m + per[1] + 0.2
+    assert res.speedup >= 1.2
+
+
+def test_simulator_speedup_capped_by_cores():
+    per = [1.0] * 4
+    curve = speedup_curve(per, total_rows=1000, degrees=[1, 2, 4, 8, 16],
+                          cores=2, t0=0.0)
+    assert curve[1] == pytest.approx(1.0, rel=0.01)
+    for m, s in curve.items():
+        assert s <= 2.001 + 1e-6       # never beats the core count
+
+
+def test_simulator_overthreading_penalty():
+    """Paper Fig 12: speedup declines when pipelines exceed the cores."""
+    per = [1.0] * 4
+    c_no = speedup_curve(per, 1000, [16], cores=8, t0=0.01)[16]
+    c_pen = speedup_curve(per, 1000, [16], cores=8, t0=0.01,
+                          switch_cost=0.01)[16]
+    assert c_pen < c_no
+    # and the penalized curve peaks at/below the core count
+    curve = speedup_curve(per, 1000, [4, 8, 32], cores=8, t0=0.01,
+                          switch_cost=0.01)
+    assert curve[32] < curve[8]
+
+
+def test_cpu_usage_increases_with_degree():
+    per = [1.0] * 4
+    usage = cpu_usage_curve(per, degrees=[1, 4, 8], cores=8, t0=0.01)
+    assert usage[1] < usage[4] <= 1.0
+    assert usage[4] <= usage[8] + 0.05
+
+
+def test_multithreading_curve_peaks_at_cores():
+    curve = multithreading_curve(bottleneck_cost=8.0, other_cost=2.0,
+                                 thread_counts=[1, 2, 4, 8, 16],
+                                 cores=8, switch_cost=0.02)
+    assert curve[1] == pytest.approx(1.0, rel=0.05)
+    assert curve[8] > curve[2]
+    assert curve[16] < curve[8]        # paper Fig 14: decline past cores
+
+
+def test_plan_schedule_waves():
+    data = generate(lineorder_rows=200, customers=50, suppliers=20,
+                    parts=30)
+    qf = build_q4(data)
+    g = partition(qf.flow)
+    waves = plan_schedule(g)
+    assert waves[0] == [0]             # source tree first
+    assert sum(len(w) for w in waves) == len(g.trees)
+
+
+def test_metadata_xml_json_roundtrip():
+    data = generate(lineorder_rows=200, customers=50, suppliers=20,
+                    parts=30)
+    qf = build_q4(data)
+    store = MetadataStore()
+    store.register_flow(qf.flow)
+    store.register_partitioning(qf.flow, partition(qf.flow))
+    assert store.type_of("groupby_sum") == "block"
+    assert store.type_of("lookup_date") == "row-synchronized"
+
+    x = MetadataStore.from_xml(store.to_xml())
+    assert x.type_of("groupby_sum") == "block"
+    assert x.partitions["ssb-q4.1"]["trees"][0]["members"]
+
+    j = MetadataStore.from_json(store.to_json())
+    assert j.dataflows["ssb-q4.1"]["edges"] == \
+        store.dataflows["ssb-q4.1"]["edges"]

@@ -1,0 +1,128 @@
+"""launch/: sharding-spec divisibility, kv_repeat selection, HLO cost
+walker unit behaviour, serve server."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.launch.hlo_cost import (analyze_hlo_text, parse_computations,
+                                   shape_elems_bytes)
+from repro.launch.specs import kv_repeat_for, limit_spec
+
+
+class _FakeMesh:
+    shape = {"data": 16, "model": 16}
+
+
+def test_limit_spec_drops_indivisible_axes():
+    mesh = _FakeMesh()
+    sds = jax.ShapeDtypeStruct((1280, 504), jnp.float32)
+    spec = limit_spec(P("data", "model"), sds, mesh)
+    assert spec == P("data", None)          # 504 % 16 != 0
+    sds2 = jax.ShapeDtypeStruct((1280, 512), jnp.float32)
+    assert limit_spec(P("data", "model"), sds2, mesh) == P("data", "model")
+
+
+def test_limit_spec_tuple_axes():
+    mesh = _FakeMesh()
+    sds = jax.ShapeDtypeStruct((64, 8), jnp.float32)
+    # ('data','model') = 256 does not divide 64 -> dropped
+    assert limit_spec(P(("data", "model"), None), sds, mesh) == P(None, None)
+
+
+def test_kv_repeat_selection():
+    # kh=8, h=64 -> r=2 (kh_eff=16, G_eff stays even)
+    assert kv_repeat_for(get_config("qwen2-72b"), 16) == 2
+    # kh=8, h=40 -> kh*2=16 but 40 % 16 != 0 -> no replication
+    assert kv_repeat_for(get_config("qwen2.5-32b"), 16) == 1
+    # MQA kv=1, h=48 -> r=16 divides h (48 % 16 == 0)
+    assert kv_repeat_for(get_config("granite-20b"), 16) == 16
+    # already divisible
+    assert kv_repeat_for(get_config("stablelm-3b"), 16) == 1
+    assert kv_repeat_for(get_config("hubert-xlarge"), 16) == 1
+    # attn-free
+    assert kv_repeat_for(get_config("falcon-mamba-7b"), 16) == 1
+
+
+SAMPLE_HLO = """\
+HloModule test, num_partitions=4
+
+%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]{1,0}) parameter(0)
+  %c1 = s32[] constant(1)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,8]{1,0} get-tuple-element(%p), index=1
+  %ni = s32[] add(%i, %c1)
+  %ar = f32[8,8]{1,0} all-reduce(%x), replica_groups=[2,2]<=[4], to_apply=%sum
+  %d = f32[8,8]{1,0} dot(%ar, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %t = (s32[], f32[8,8]{1,0}) tuple(%ni, %d)
+}
+
+%cond (p: (s32[], f32[8,8])) -> pred[] {
+  %p = (s32[], f32[8,8]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(5)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (a: f32[8,8]) -> f32[8,8] {
+  %a = f32[8,8]{1,0} parameter(0)
+  %z = s32[] constant(0)
+  %t0 = (s32[], f32[8,8]{1,0}) tuple(%z, %a)
+  %w = (s32[], f32[8,8]{1,0}) while(%t0), condition=%cond, body=%body
+  ROOT %out = f32[8,8]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_hlo_walker_trip_counts_and_collectives():
+    cost = analyze_hlo_text(SAMPLE_HLO, 4)
+    # dot: 2*8*8*8 = 1024 flops/iter + add + compare, 5 iterations
+    assert cost.flops == pytest.approx((1024 + 1 + 1) * 5)
+    assert cost.while_trip_counts == [5]
+    # one all-reduce of 256 bytes per iteration: wire = 2*(g-1)/g*256 = 256
+    assert cost.collectives.counts["all-reduce"] == 5
+    assert cost.collectives.wire_bytes["all-reduce"] == pytest.approx(
+        5 * 2 * 256 * (2 - 1) / 2)
+    assert cost.collectives.operand_bytes["all-reduce"] == 5 * 256
+
+
+def test_hlo_walker_known_trip_count_attr():
+    txt = SAMPLE_HLO.replace(
+        'condition=%cond, body=%body',
+        'condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"9"}}')
+    cost = analyze_hlo_text(txt, 4)
+    assert cost.while_trip_counts == [9]
+
+
+def test_shape_elems_bytes():
+    assert shape_elems_bytes("f32[8,8]{1,0}") == (64, 256)
+    assert shape_elems_bytes("bf16[2,3]") == (6, 12)
+    assert shape_elems_bytes("(f32[4], s32[])") == (5, 20)
+    assert shape_elems_bytes("pred[]") == (1, 1)
+
+
+def test_parse_computations_entry_alias():
+    comps = parse_computations(SAMPLE_HLO)
+    assert "__entry__" in comps
+    assert comps["__entry__"].name == "main"
+
+
+def test_batched_server_matches_generate():
+    from repro.launch.serve import BatchedServer, Request
+    from repro.models import init_params
+    from repro.train.serve_step import generate
+
+    cfg = get_config("stablelm-3b", smoke=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(2, cfg.vocab_size, (2, 16)).astype(np.int32)
+    server = BatchedServer(cfg, params=params, batch=2)
+    reqs = [Request(rid=i, prompt=prompts[i], max_new=6) for i in range(2)]
+    done = server.run(reqs)
+    ref = np.array(generate(params, cfg, jnp.asarray(prompts), 6))
+    got = np.array([r.out_tokens for r in done])
+    np.testing.assert_array_equal(got, ref)

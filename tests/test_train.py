@@ -1,0 +1,101 @@
+"""Training substrate: optimizer, microbatch accumulation equivalence,
+gradient compression, end-to-end loss decrease."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import forward_train, init_params
+from repro.train.compression import (bf16_compress, compress_tree_int8,
+                                     int8_quantize,
+                                     make_error_feedback_state)
+from repro.train.optimizer import (OptConfig, adamw_update, init_opt_state,
+                                   lr_at)
+from repro.train.train_step import make_train_step
+
+
+def test_adamw_converges_on_quadratic():
+    cfg = get_config("stablelm-3b", smoke=True)      # dtype policy carrier
+    ocfg = OptConfig(lr=0.1, warmup_steps=1, total_steps=200,
+                     weight_decay=0.0, grad_clip=0.0)
+    params = {"w": jnp.array([3.0, -2.0, 1.0])}
+    opt = init_opt_state(params, cfg)
+    target = jnp.array([1.0, 1.0, 1.0])
+    for _ in range(150):
+        g = jax.grad(lambda p: jnp.sum((p["w"] - target) ** 2))(params)
+        params, opt, _ = adamw_update(g, params, opt, ocfg, cfg)
+    np.testing.assert_allclose(np.array(params["w"]), np.array(target),
+                               atol=0.05)
+
+
+def test_lr_schedule_shape():
+    ocfg = OptConfig(lr=1e-3, warmup_steps=10, total_steps=100,
+                     min_lr_frac=0.1)
+    lrs = [float(lr_at(jnp.asarray(s), ocfg)) for s in range(100)]
+    assert lrs[0] == pytest.approx(1e-4)
+    assert max(lrs) == pytest.approx(1e-3, rel=0.01)
+    assert lrs[-1] >= 1e-4 * 0.9
+    assert np.argmax(lrs) <= 11
+
+
+def test_grad_accum_equivalence():
+    """Medium-level horizontal partitioning: m microbatches of the same
+    global batch give (numerically) the same update as m=1."""
+    cfg1 = get_config("stablelm-3b", smoke=True).replace(
+        grad_accum=1, remat_policy="none")
+    cfg4 = cfg1.replace(grad_accum=4)
+    params = init_params(cfg1, jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (8, 32),
+                                          0, cfg1.vocab_size)}
+    ocfg = OptConfig(total_steps=10)
+    opt1 = init_opt_state(params, cfg1)
+    opt4 = init_opt_state(params, cfg4)
+    p1, _, m1 = make_train_step(cfg1, ocfg)(params, opt1, batch)
+    p4, _, m4 = make_train_step(cfg4, ocfg)(params, opt4, batch)
+    assert float(m1["loss"]) == pytest.approx(float(m4["loss"]), rel=2e-3)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p4)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-2, atol=2e-5)
+
+
+def test_loss_decreases_end_to_end():
+    from repro.launch.train import train_loop
+    cfg = get_config("stablelm-3b", smoke=True).replace(grad_accum=2)
+    res = train_loop(cfg, steps=30, batch=8, seq_len=64, log_every=100)
+    losses = res["losses"]
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.2
+
+
+def test_int8_error_feedback_reduces_bias():
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(size=(256,)).astype(np.float32))
+    grads = {"g": g}
+    err = make_error_feedback_state(grads)
+    # accumulated quantized updates track the accumulated true gradient
+    acc_q = np.zeros(256)
+    for _ in range(20):
+        deq, err = compress_tree_int8(grads, err)
+        acc_q += np.array(deq["g"])
+    acc_true = np.array(g) * 20
+    # with error feedback the accumulated bias stays bounded by one quantum
+    q_step = float(jnp.max(jnp.abs(g))) / 127.0
+    assert np.max(np.abs(acc_q - acc_true)) < 2 * q_step * 20 ** 0.5 + 1e-3
+
+
+def test_int8_quantize_roundtrip_error_bounded():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(1000,)).astype(np.float32))
+    q, scale = int8_quantize(x)
+    err = np.abs(np.array(x) - np.array(q, np.float32) * float(scale))
+    assert err.max() <= float(scale) * 0.5 + 1e-6
+
+
+def test_bf16_compress_is_2x_and_close():
+    x = {"a": jnp.linspace(-1, 1, 1000, dtype=jnp.float32)}
+    y = bf16_compress(x)
+    assert y["a"].dtype == jnp.float32
+    np.testing.assert_allclose(np.array(y["a"]), np.array(x["a"]),
+                               atol=0.01)
