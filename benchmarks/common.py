@@ -12,7 +12,8 @@ from typing import Callable, Dict, List
 
 import numpy as np
 
-from repro.core import OptimizedEngine, OptimizeOptions, OrdinaryEngine
+from repro.core import (OptimizedEngine, OptimizeOptions, OrdinaryEngine,
+                        StreamingEngine)
 from repro.etl import BUILDERS, KettleEngine
 from repro.etl.ssb import generate
 
@@ -41,6 +42,12 @@ def run_ordinary(qname: str, data, chunk_rows: int = 262_144):
 def run_optimized(qname: str, data, **opts):
     qf = BUILDERS[qname](data)
     run = OptimizedEngine(qf.flow, OptimizeOptions(**opts)).run()
+    return run, qf
+
+
+def run_streaming(qname: str, data, **opts):
+    qf = BUILDERS[qname](data)
+    run = StreamingEngine(qf.flow, OptimizeOptions(**opts)).run()
     return run, qf
 
 

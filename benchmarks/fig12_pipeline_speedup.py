@@ -12,8 +12,10 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.planner import build_plan
+from repro.core.partitioner import partition
+from repro.core.planner import build_plan, plan_runtime
 from repro.core.simulate import speedup_curve
+from repro.etl import BUILDERS
 
 from .common import BENCH_ROWS, activity_costs_from_sequential, ssb_data
 
@@ -40,6 +42,14 @@ def run(rows_scales=(0.5, 1.0, 2.0)) -> list:
         m_best = max(curve, key=curve.get)
         out.append(f"fig12.{scale}.best,m={m_best},"
                    f"{curve[m_best]:.3f},paper=4.7x@m8")
+        # runtime plan the streaming executor would use at the model optimum
+        qf = BUILDERS["Q4.1"](data)
+        g_tau = partition(qf.flow)
+        rt = plan_runtime(qf.flow, g_tau, num_splits=m_best, m_prime=m_best)
+        depths = ";".join(f"{a}->{b}:{d}"
+                          for (a, b), d in sorted(rt.channel_depth.items()))
+        out.append(f"fig12.{scale}.runtime_plan,pool_width={rt.pool_width},"
+                   f"channels={depths},")
     return out
 
 

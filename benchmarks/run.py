@@ -1,9 +1,16 @@
 """Benchmark aggregator — one section per paper table/figure + the roofline
-table.  Prints CSV lines (name,...).
+table and the streaming-executor comparison.  Prints CSV lines (name,...).
 
-  PYTHONPATH=src python -m benchmarks.run            # all
-  PYTHONPATH=src python -m benchmarks.run fig12 roofline
+  PYTHONPATH=src python -m benchmarks.run            # all sections
+  PYTHONPATH=src python -m benchmarks.run fig12 roofline streaming
+  PYTHONPATH=src python -m benchmarks.run --smoke    # fast CI equivalence guard
+
 Scale via env: BENCH_ROWS (default 2,000,000), BENCH_REPEATS.
+
+``--smoke`` runs the ordinary / optimized / streaming engines on tiny
+multi-tree SSB dataflows and asserts (1) identical sink rows, in order,
+across all three paths and (2) the shared-caching engines record fewer
+copies than the ordinary engine — a cheap guard for engine refactors.
 """
 from __future__ import annotations
 
@@ -13,7 +20,7 @@ import traceback
 
 from . import (fig12_pipeline_speedup, fig13_cpu_usage,
                fig14_multithreading, fig15_optimization,
-               fig16_fig17_vs_kettle, kernel_bench, roofline,
+               fig16_fig17_vs_kettle, kernel_bench, roofline, streaming,
                theorem1_accuracy)
 
 SECTIONS = {
@@ -24,11 +31,65 @@ SECTIONS = {
     "fig1617": fig16_fig17_vs_kettle.run,
     "theorem1": theorem1_accuracy.run,
     "kernels": kernel_bench.run,
+    "streaming": streaming.run,
     "roofline": lambda: roofline.run("16x16") + roofline.run("2x16x16"),
 }
 
+SMOKE_FLOWS = ("Q1.1", "Q2.1", "Q4.1", "Q4.1s")
+
+
+def smoke() -> int:
+    """Tiny-row engine equivalence: ordinary vs optimized vs streaming."""
+    import numpy as np
+
+    from repro.core import (OptimizedEngine, OptimizeOptions, OrdinaryEngine,
+                            StreamingEngine)
+    from repro.etl import BUILDERS
+    from repro.etl.ssb import generate
+
+    data = generate(lineorder_rows=50_000, customers=2_000, suppliers=200,
+                    parts=1_000, seed=5)
+    failures = 0
+    for qname in SMOKE_FLOWS:
+        qf = BUILDERS[qname](data)
+        expect = qf.oracle(data)
+        r_ord = OrdinaryEngine(qf.flow, chunk_rows=16_384).run()
+        baseline = qf.sink.result()
+
+        runs = {}
+        for label, engine_cls in (("optimized", OptimizedEngine),
+                                  ("streaming", StreamingEngine)):
+            qf2 = BUILDERS[qname](data)
+            runs[label] = engine_cls(
+                qf2.flow, OptimizeOptions(num_splits=4)).run()
+            got = qf2.sink.result()
+            try:
+                assert set(got.keys()) == set(baseline.keys()), "column set"
+                for k in baseline:   # identical rows, identical ORDER
+                    np.testing.assert_array_equal(
+                        got[k], baseline[k],
+                        err_msg=f"{qname} {label} column {k}")
+                for k in expect:     # and both match the independent oracle
+                    np.testing.assert_allclose(got[k], expect[k], rtol=1e-9)
+            except AssertionError:
+                traceback.print_exc()
+                failures += 1
+                print(f"smoke.{qname},{label},FAIL")
+                continue
+            print(f"smoke.{qname},{label},rows_ok,"
+                  f"copies={runs[label].copies},ord_copies={r_ord.copies}")
+        for label, r in runs.items():
+            if not r.copies < r_ord.copies:
+                print(f"smoke.{qname},{label},FAIL,copies {r.copies} !< "
+                      f"ordinary {r_ord.copies}")
+                failures += 1
+    print(f"smoke,{'FAIL' if failures else 'PASS'},{failures} failures")
+    return 1 if failures else 0
+
 
 def main() -> int:
+    if "--smoke" in sys.argv[1:]:
+        return smoke()
     names = [a for a in sys.argv[1:] if a in SECTIONS] or list(SECTIONS)
     failures = []
     for name in names:

@@ -1,0 +1,49 @@
+"""Streaming inter-tree executor vs the accumulate-then-start planner on the
+multi-tree SSB dataflows.
+
+Q4.1  — the paper's Figure-11 flow: 3 trees, both boundaries blocked
+        (groupby, sort), so streaming can only match the planner.
+Q4.1s — Q4.1 with an explicit StageBoundary between the lookup stage and the
+        filter/project/expression stage: the T1->T2 boundary is
+        ROW-SYNCHRONIZED, so the streaming executor overlaps the two trees
+        through a bounded split channel while the planner waits for T1 to
+        finish before starting T2.
+
+Emits CSV: flow,engine,wall_s,copies,pool_width,streamed_edges
+and a speedup line per flow (optimized wall / streaming wall).
+"""
+from __future__ import annotations
+
+from .common import BENCH_ROWS, run_optimized, run_streaming, ssb_data
+
+FLOWS = ("Q4.1", "Q4.1s")
+NUM_SPLITS = 8
+
+
+def run(rows: int = None) -> list:
+    rows = rows or max(200_000, BENCH_ROWS // 4)
+    data = ssb_data(rows)
+    out = ["streaming.flow,engine,wall_s,copies,pool_width,streamed_edges"]
+    for flow in FLOWS:
+        results = {}
+        for engine, runner in (("optimized", run_optimized),
+                               ("streaming", run_streaming)):
+            best = None
+            for _ in range(3):
+                r, _qf = runner(flow, data, num_splits=NUM_SPLITS)
+                if best is None or r.wall_time < best.wall_time:
+                    best = r
+            results[engine] = best
+            out.append(
+                f"streaming.{flow},{engine},{best.wall_time:.4f},"
+                f"{best.copies},{best.runtime_plan.pool_width},"
+                f"{len(best.streamed_edges)}")
+        speedup = (results["optimized"].wall_time
+                   / max(results["streaming"].wall_time, 1e-9))
+        out.append(f"streaming.{flow}.speedup,stream_vs_planner,"
+                   f"{speedup:.3f},,,")
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -9,7 +9,7 @@ import argparse
 import numpy as np
 
 from repro.core import (OptimizedEngine, OptimizeOptions, OrdinaryEngine,
-                        partition)
+                        StreamingEngine, partition)
 from repro.etl import BUILDERS, KettleEngine
 from repro.etl.ssb import generate
 
@@ -46,6 +46,11 @@ def main():
             num_splits=args.splits)).run()
         _check(qf.sink.result(), expect)
         rows.append(("optimized", r))
+        qf = build(data)
+        r = StreamingEngine(qf.flow, OptimizeOptions(
+            num_splits=args.splits)).run()
+        _check(qf.sink.result(), expect)
+        rows.append(("streaming", r))
         for name, rr in rows:
             print(f"  {name:12s} wall {rr.wall_time:6.2f}s  "
                   f"copies {rr.copies:4d}  "

@@ -1,17 +1,22 @@
 # The paper's primary contribution: component classification (§3),
 # execution-tree partitioning (Algorithm 1), shared caching scheme (§3),
 # pipeline parallelization (Algorithm 2 + Theorem 1), inside-component
-# multithreading (§4.3), and the dataflow task planner (§2).
+# multithreading (§4.3), and the dataflow task planner (§2) — extended with
+# a streaming inter-tree executor on one shared worker pool (executor.py).
 from .component import (BlockComponent, Component, ComponentType, FnComponent,
-                        SemiBlockComponent, SinkComponent, SourceComponent)
+                        SemiBlockComponent, SinkComponent, SourceComponent,
+                        StageBoundary)
 from .engine import (EngineRun, OptimizedEngine, OptimizeOptions,
-                     OrdinaryEngine)
+                     OrdinaryEngine, StreamingEngine)
+from .executor import (ChannelGroup, ExecutionAborted, RunAbort,
+                       SharedWorkerPool, StreamingExecutor, TaskFuture)
 from .graph import Dataflow
 from .metadata import MetadataStore
 from .partitioner import ExecutionTree, ExecutionTreeGraph, partition
 from .pipeline import TreePipeline
-from .planner import (PipelinePlan, build_plan, choose_degree,
-                      theorem1_m_star)
+from .planner import (PipelinePlan, RuntimePlan, build_plan,
+                      choose_channel_depth, choose_degree, choose_pool_width,
+                      estimate_edge_bytes, plan_runtime, theorem1_m_star)
 from .scheduler import plan_schedule, run_tree_graph
 from .shared_cache import (GLOBAL_CACHE_STATS, CacheStats, SharedCache,
                            concat_caches)
@@ -20,12 +25,17 @@ from .simulate import (SimResult, cpu_usage_curve, multithreading_curve,
 
 __all__ = [
     "BlockComponent", "Component", "ComponentType", "FnComponent",
-    "SemiBlockComponent", "SinkComponent", "SourceComponent",
+    "SemiBlockComponent", "SinkComponent", "SourceComponent", "StageBoundary",
     "EngineRun", "OptimizedEngine", "OptimizeOptions", "OrdinaryEngine",
+    "StreamingEngine",
+    "ChannelGroup", "ExecutionAborted", "RunAbort", "SharedWorkerPool",
+    "StreamingExecutor", "TaskFuture",
     "Dataflow", "MetadataStore",
     "ExecutionTree", "ExecutionTreeGraph", "partition",
     "TreePipeline",
-    "PipelinePlan", "build_plan", "choose_degree", "theorem1_m_star",
+    "PipelinePlan", "RuntimePlan", "build_plan", "choose_channel_depth",
+    "choose_degree", "choose_pool_width", "estimate_edge_bytes",
+    "plan_runtime", "theorem1_m_star",
     "plan_schedule", "run_tree_graph",
     "GLOBAL_CACHE_STATS", "CacheStats", "SharedCache", "concat_caches",
     "SimResult", "cpu_usage_curve", "multithreading_curve", "simulate_tree",

@@ -53,6 +53,10 @@ class Component:
     #: True if downstream semantics require split arrival order (e.g. before a
     #: Merge) — the pipeline then hands caches to this component in order.
     order_sensitive: bool = False
+    #: True forces this component to root a new execution tree even when it is
+    #: row-synchronized (an explicit stage cut — see StageBoundary).  The
+    #: streaming executor pipes splits across such a boundary as they arrive.
+    tree_boundary: bool = False
 
     def __init__(self, name: str):
         self.name = name
@@ -109,6 +113,13 @@ class Component:
         raise NotImplementedError
 
     # ------------------------------------------------------------------ misc
+    def est_output_bytes(self) -> Optional[int]:
+        """Cache-size metadata: estimated total bytes this component emits
+        over a full run, when knowable up front (sources know their table
+        size).  ``None`` means unknown — the planner then falls back to the
+        component's input estimate."""
+        return None
+
     def reset_stats(self) -> None:
         self.rows_in = self.rows_out = 0
         self.busy_time = 0.0
@@ -177,4 +188,22 @@ class FnComponent(Component):
 
     def _run(self, cache: SharedCache) -> List[SharedCache]:
         self.fn(cache)
+        return [cache]
+
+
+class StageBoundary(Component):
+    """Explicit execution-tree boundary: a row-synchronized pass-through that
+    the partitioner roots a new tree at (Algorithm 1 extended).
+
+    Marks a stage cut in the dataflow — DOD-ETL-style stage decoupling.  The
+    streaming executor connects the two trees with a bounded split channel
+    and the downstream tree consumes splits AS THEY ARRIVE, overlapping the
+    stages; the cut costs one copy per split (paper §4.1 tree->tree
+    transition).  Useful to bound a stage's working set, isolate a slow
+    stage behind backpressure, or (eventually) place stages on different
+    workers."""
+
+    tree_boundary = True
+
+    def _run(self, cache: SharedCache) -> List[SharedCache]:
         return [cache]

@@ -7,24 +7,29 @@ downstream component's input cache; execution is sequential.
 `OptimizedEngine` — the paper's framework: Algorithm-1 partitioning into
 execution trees, shared caching inside each tree (zero copies), Algorithm-2
 pipeline parallelization per tree, §4.3 inside-component multithreading, and
-concurrent execution of independent trees (the dataflow task planner).
+concurrent execution of independent trees (the dataflow task planner).  All
+work — tree coordination, pipeline split consumers and §4.3 row ranges —
+runs on ONE shared, size-bounded worker pool (executor.py) sized by the
+runtime planner.
+
+`StreamingEngine` — `OptimizedEngine` with inter-tree split streaming turned
+on: bounded channels replace accumulate-then-start on every tree->tree edge,
+so a downstream tree whose root is row-synchronized (an explicit
+StageBoundary) consumes splits as they arrive and overlaps with its
+upstream; block / semi-block roots keep accumulate-then-finish semantics.
 """
 from __future__ import annotations
 
-import threading
 import time
-from concurrent.futures import ThreadPoolExecutor
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from dataclasses import dataclass, field, replace
+from typing import Dict, List, Optional, Tuple
 
-import numpy as np
-
-from .component import (Component, ComponentType, SinkComponent,
-                        SourceComponent)
+from .component import ComponentType, SourceComponent
+from .executor import StreamingExecutor
 from .graph import Dataflow
+from .metadata import MetadataStore
 from .partitioner import ExecutionTreeGraph, partition
-from .pipeline import TreePipeline
-from .planner import PipelinePlan, build_plan, choose_degree
+from .planner import PipelinePlan, RuntimePlan, build_plan, plan_runtime
 from .shared_cache import GLOBAL_CACHE_STATS, SharedCache
 
 
@@ -37,6 +42,9 @@ class EngineRun:
     activity_times: Dict[str, float] = field(default_factory=dict)
     trees: Optional[List[List[str]]] = None
     plans: Dict[int, PipelinePlan] = field(default_factory=dict)
+    runtime_plan: Optional[RuntimePlan] = None
+    streamed_edges: List[Tuple[int, int]] = field(default_factory=list)
+    pool_stats: Dict[str, int] = field(default_factory=dict)
 
     def summary(self) -> str:
         return (f"[{self.engine}] wall={self.wall_time:.3f}s copies={self.copies} "
@@ -106,7 +114,7 @@ class OrdinaryEngine:
 
 
 # --------------------------------------------------------------------------
-#  Optimized engine (the paper's framework)
+#  Optimized engine (the paper's framework on the streaming runtime)
 # --------------------------------------------------------------------------
 @dataclass
 class OptimizeOptions:
@@ -117,67 +125,24 @@ class OptimizeOptions:
     mt_threads: Dict[str, int] = field(default_factory=dict)  # §4.3 per component
     concurrent_trees: bool = True      # dataflow task planner concurrency
     chunk_rows: Optional[int] = None   # source chunking; None => total/num_splits
+    streaming: bool = False            # inter-tree split streaming (executor.py)
+    pool_width: Optional[int] = None   # shared pool size; None => planner
+    channel_capacity: Optional[int] = None  # per-edge depth; None => planner
+    cores: Optional[int] = None        # cap pool width at core count if set
 
 
 class OptimizedEngine:
-    def __init__(self, flow: Dataflow, options: Optional[OptimizeOptions] = None):
+    def __init__(self, flow: Dataflow, options: Optional[OptimizeOptions] = None,
+                 metadata: Optional["MetadataStore"] = None):
         self.flow = flow
         self.options = options or OptimizeOptions()
+        self.metadata = metadata       # §2 store: records flow/partition/plan
         self.g_tau: Optional[ExecutionTreeGraph] = None
-        # tree_id -> list of (src_tree_id, split_index, cache)
-        self._inputs: Dict[int, List[Tuple[int, int, SharedCache]]] = {}
-        self._inputs_lock = threading.Lock()
-        self._root2tree: Dict[str, int] = {}
+        self.runtime_plan: Optional[RuntimePlan] = None
 
-    # ----------------------------------------------------------- deliveries
-    def _deliver(self, dst_root: str, cache: SharedCache, split_index: int,
-                 src_tree: int) -> None:
-        tid = self._root2tree[dst_root]
-        with self._inputs_lock:
-            self._inputs[tid].append((src_tree, split_index, cache))
-
-    # ----------------------------------------------------------- tree runs
-    def _tree_splits(self, tree, opts: OptimizeOptions):
-        """Produce the horizontal splits of the root output (medium-level
-        partitioning)."""
-        root = self.flow.component(tree.root)
-        if isinstance(root, SourceComponent):
-            total = root.total_rows()
-            chunk = opts.chunk_rows or max(1, -(-total // max(opts.num_splits, 1)))
-            def gen():
-                for i, c in enumerate(root.chunks(chunk)):
-                    c.split_index = i
-                    yield c
-            return gen()
-        # block / semi-block root: accumulate delivered caches, finish, split
-        entries = sorted(self._inputs[tree.tree_id], key=lambda e: (e[0], e[1]))
-        state = root.new_state()
-        for _, _, cache in entries:
-            root.accumulate(state, cache)
-        out = root.finish(state)
-        return out.split(opts.num_splits)
-
-    def _run_tree(self, tree, pool: Optional[ThreadPoolExecutor]) -> None:
-        opts = self.options
-        tp = TreePipeline(self.flow, tree, self.g_tau.tree_of, self._deliver,
-                          mt_config=opts.mt_threads, pool=pool,
-                          shared=opts.shared_cache)
-        splits = self._tree_splits(tree, opts)
-        if not opts.shared_cache:
-            # separate-cache mode inside the tree: copy on every hop
-            splits = (self._copy_split(s) for s in splits)
-        if opts.pipelined:
-            m_prime = opts.pipeline_degree or opts.num_splits
-            tp.run(splits, m_prime=m_prime, process_root=False)
-        else:
-            tp.run_sequential(splits, process_root=False)
-
-    @staticmethod
-    def _copy_split(s: SharedCache) -> SharedCache:
-        c = s.copy()
-        GLOBAL_CACHE_STATS.record(s)
-        c.split_index = s.split_index
-        return c
+    @property
+    def engine_name(self) -> str:
+        return "streaming" if self.options.streaming else "optimized"
 
     # ---------------------------------------------------------------- run
     def run(self) -> EngineRun:
@@ -185,29 +150,47 @@ class OptimizedEngine:
         self.flow.validate()
         self.flow.reset_stats()
         self.g_tau = partition(self.flow)
-        self._inputs = {t.tree_id: [] for t in self.g_tau.trees}
-        self._root2tree = {t.root: t.tree_id for t in self.g_tau.trees}
 
-        mt_max = max([1] + list(opts.mt_threads.values()))
-        pool = ThreadPoolExecutor(max_workers=mt_max) if mt_max > 1 else None
+        m_prime = opts.pipeline_degree or opts.num_splits
+        self.runtime_plan = plan_runtime(
+            self.flow, self.g_tau,
+            num_splits=opts.num_splits, m_prime=m_prime,
+            mt_threads=opts.mt_threads, cores=opts.cores,
+            pool_width=opts.pool_width,
+            channel_capacity=opts.channel_capacity,
+            streaming=opts.streaming and opts.concurrent_trees)
+        if self.metadata is not None:
+            self.metadata.register_flow(self.flow)
+            self.metadata.register_partitioning(self.flow, self.g_tau)
+            self.metadata.register_runtime_plan(self.flow, self.runtime_plan)
 
-        from .scheduler import run_tree_graph
-
+        executor = StreamingExecutor(self.flow, self.g_tau, opts,
+                                     self.runtime_plan)
         before = GLOBAL_CACHE_STATS.snapshot()
         t_start = time.perf_counter()
         try:
-            run_tree_graph(self.g_tau,
-                           lambda tree: self._run_tree(tree, pool),
-                           concurrent=opts.concurrent_trees)
+            executor.execute()
         finally:
-            if pool is not None:
-                pool.shutdown()
+            pool_stats = executor.pool.stats()
+            executor.shutdown()
         wall = time.perf_counter() - t_start
         after = GLOBAL_CACHE_STATS.snapshot()
         return EngineRun(
             wall_time=wall,
             copies=after["copies"] - before["copies"],
             bytes_copied=after["bytes_copied"] - before["bytes_copied"],
-            engine="optimized",
+            engine=self.engine_name,
             activity_times={n: c.busy_time for n, c in self.flow.vertices.items()},
-            trees=[list(t.members) for t in self.g_tau.trees])
+            trees=[list(t.members) for t in self.g_tau.trees],
+            runtime_plan=self.runtime_plan,
+            streamed_edges=list(executor.streamed_edges),
+            pool_stats=pool_stats)
+
+
+class StreamingEngine(OptimizedEngine):
+    """OptimizedEngine with inter-tree split streaming enabled."""
+
+    def __init__(self, flow: Dataflow, options: Optional[OptimizeOptions] = None,
+                 metadata: Optional["MetadataStore"] = None):
+        options = replace(options or OptimizeOptions(), streaming=True)
+        super().__init__(flow, options, metadata=metadata)

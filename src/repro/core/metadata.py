@@ -16,6 +16,7 @@ class MetadataStore:
         self.component_specs: Dict[str, Dict[str, str]] = {}
         self.dataflows: Dict[str, dict] = {}
         self.partitions: Dict[str, dict] = {}
+        self.runtime_plans: Dict[str, dict] = {}
 
     # ----------------------------------------------------------- register
     def register_flow(self, flow: Dataflow) -> None:
@@ -34,6 +35,11 @@ class MetadataStore:
                       for t in g_tau.trees],
             "edges": [list(e) for e in g_tau.edges],
         }
+
+    def register_runtime_plan(self, flow: Dataflow, plan) -> None:
+        """Record the executor sizing plan (pool width, per-edge channel
+        depths + cache-size estimates) chosen for a run of ``flow``."""
+        self.runtime_plans[flow.name] = plan.spec()
 
     def type_of(self, component_name: str) -> Optional[str]:
         spec = self.component_specs.get(component_name)
@@ -88,7 +94,8 @@ class MetadataStore:
     def to_json(self) -> str:
         return json.dumps({"components": self.component_specs,
                            "dataflows": self.dataflows,
-                           "partitions": self.partitions}, indent=2)
+                           "partitions": self.partitions,
+                           "runtime_plans": self.runtime_plans}, indent=2)
 
     @classmethod
     def from_json(cls, text: str) -> "MetadataStore":
@@ -97,4 +104,5 @@ class MetadataStore:
         store.component_specs = d.get("components", {})
         store.dataflows = d.get("dataflows", {})
         store.partitions = d.get("partitions", {})
+        store.runtime_plans = d.get("runtime_plans", {})
         return store

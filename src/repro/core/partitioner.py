@@ -5,7 +5,9 @@ in-degree 0 *within the tree*; vertices with out-degree 0 are leaves.  Block
 and semi-block components always ROOT a new tree, because they must
 accumulate rows in their own cache before processing (paper §3/§4.1);
 everything row-synchronized streams inside its parent's tree on a shared
-cache.
+cache.  Extension: a component with ``tree_boundary`` set (StageBoundary)
+also roots a new tree even though it is row-synchronized — an explicit stage
+cut that the streaming executor pipes splits across as they arrive.
 
 Faithfulness note: the paper's pseudocode recurses `DFS(G, G_tau, u, T)` even
 after rooting a new tree T' at u (line 17-21).  Taken literally that would
@@ -91,6 +93,30 @@ class ExecutionTreeGraph:
         return f"ExecutionTreeGraph(|V_tau|={len(self.trees)}, E_tau={self.edges})"
 
 
+def streamable_tree_ids(flow: Dataflow, g_tau: ExecutionTreeGraph) -> set:
+    """Trees whose input splits may be consumed AS THEY ARRIVE by the
+    streaming executor: the root streams (row-sync / sink — an explicit
+    stage boundary, not a source and not block/semi-block), exactly one
+    cross-tree dataflow edge feeds the tree and it targets the root (unique,
+    consecutive split indices), and no member is ``order_sensitive`` —
+    arrival order is arbitrary, and an order-sensitive activity fed out of
+    order could fill the admission gate with later splits and stall."""
+    out = set()
+    for tree in g_tau.trees:
+        root = flow.component(tree.root)
+        if root.ctype.roots_tree or flow.in_degree(tree.root) == 0:
+            continue
+        inbound = [(u, v) for (u, v) in flow.edges
+                   if g_tau.tree_of.get(u) != tree.tree_id
+                   and g_tau.tree_of.get(v) == tree.tree_id]
+        if len(inbound) != 1 or inbound[0][1] != tree.root:
+            continue
+        if any(flow.component(n).order_sensitive for n in tree.members):
+            continue
+        out.add(tree.tree_id)
+    return out
+
+
 def partition(flow: Dataflow) -> ExecutionTreeGraph:
     """Algorithm 1.  DFS from every in-degree-0 vertex; block/semi-block
     vertices root new trees; row-synchronized vertices join the current tree.
@@ -105,8 +131,9 @@ def partition(flow: Dataflow) -> ExecutionTreeGraph:
     def dfs(v: str, tree: ExecutionTree) -> None:
         visited[v] = True
         for u in flow.succ(v):
-            u_type = flow.component(u).ctype
-            if not u_type.roots_tree:
+            u_comp = flow.component(u)
+            u_type = u_comp.ctype
+            if not (u_type.roots_tree or u_comp.tree_boundary):
                 # row-synchronized (or sink): joins the current tree
                 if not visited[u]:
                     tree.add_member(u, parent=v)
@@ -118,7 +145,8 @@ def partition(flow: Dataflow) -> ExecutionTreeGraph:
                     # so this can only happen across trees; record the edge.
                     g_tau.add_edge(tree.tree_id, g_tau.tree_of[u])
             else:
-                # block/semi-block: roots a new execution tree
+                # block/semi-block (or an explicit stage boundary): roots a
+                # new execution tree
                 if not visited[u]:
                     visited[u] = True
                     t_new = g_tau.new_tree(u)

@@ -1,38 +1,46 @@
 """Algorithm 2 — pipeline parallelization within an execution tree.
 
-A *pipeline consumer thread* carries ONE shared cache (one horizontal split)
+A *pipeline consumer task* carries ONE shared cache (one horizontal split)
 through the tree's activities in sequence.  Each activity has a `busy` flag
 guarded by a Condition: a consumer `wait()`s while the activity is processing
 another split and is woken by `notify_all()` when it frees up — exactly the
-paper's Algorithm 2 lines 6-11.  A fix-sized BlockingQueue(m') bounds the
-number of in-flight shared caches (memory bound) and a housekeeping thread
-removes finished consumers from the queue (lines 14-15).
+paper's Algorithm 2 lines 6-11.
+
+Admission is bounded to m' in-flight shared caches (the paper's fix-sized
+BlockingQueue, lines 14-21).  Consumers run as tasks on the run's
+``SharedWorkerPool`` (see executor.py) instead of a thread per split: the
+pool is shared with tree-coordination tasks and §4.3 row-range work, and
+every blocking wait (admission, busy/order wait, row-range join, cross-tree
+channel put) is a managed-blocking region so a size-bounded pool cannot
+deadlock.  ``BlockingQueue``/``HouseKeepingThread`` below keep the paper's
+literal thread-queue formulation for reference and tests.
 
 Inside-component parallelization (§4.3) hooks in here too: activities with a
 configured thread count split their cache into row ranges, process the ranges
-on a worker pool and merge with the row-order synchronizer.
+on the shared pool and merge with the row-order synchronizer.
 """
 from __future__ import annotations
 
 import queue
 import threading
 import time
-from concurrent.futures import ThreadPoolExecutor
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from contextlib import nullcontext
+from typing import Callable, Dict, List, Optional
 
-import numpy as np
-
-from .component import Component, ComponentType
+from .component import Component
+from .executor import AdmissionGate, RunAbort, SharedWorkerPool, TaskFuture
 from .graph import Dataflow
 from .partitioner import ExecutionTree
 from .shared_cache import GLOBAL_CACHE_STATS, SharedCache
 
-# deliver_fn(dst_root_component_name, cache, split_index, src_tree_id)
+# deliver_fn(dst_component_name, cache, split_index, src_tree_id)
 DeliverFn = Callable[[str, SharedCache, int, int], None]
 
 
 class BlockingQueue:
-    """Fix-sized queue of live consumer threads (paper line 14)."""
+    """Fix-sized queue of live consumer threads (paper line 14).  Kept as the
+    paper's literal formulation; the engine path now bounds admission with
+    ``executor.AdmissionGate`` on the shared pool instead."""
 
     def __init__(self, capacity: int):
         self.q: "queue.Queue" = queue.Queue(maxsize=max(1, capacity))
@@ -81,18 +89,36 @@ class ActivityRunner:
     protocol plus optional §4.3 multithreading."""
 
     def __init__(self, comp: Component, mt_threads: int = 1,
-                 pool: Optional[ThreadPoolExecutor] = None):
+                 pool: Optional[SharedWorkerPool] = None,
+                 abort: Optional[RunAbort] = None):
         self.comp = comp
         self.mt_threads = mt_threads
         self.pool = pool
+        self.abort = abort
+
+    def _ready(self, cache: SharedCache) -> bool:
+        comp = self.comp
+        return not comp.busy and (not comp.order_sensitive
+                                  or comp.next_split == cache.split_index)
+
+    def _acquire(self, cache: SharedCache) -> None:
+        comp = self.comp
+        with comp.cond:                         # fast path, no managed block
+            if self._ready(cache):
+                comp.busy = True                # paper line 8
+                return
+        ctx = self.pool.blocking() if self.pool is not None else nullcontext()
+        with ctx:
+            with comp.cond:
+                while not self._ready(cache):
+                    if self.abort is not None and self.abort.aborted:
+                        self.abort.check()
+                    comp.cond.wait(0.2)         # paper line 7
+                comp.busy = True                # paper line 8
 
     def process(self, cache: SharedCache, shared: bool) -> List[SharedCache]:
         comp = self.comp
-        with comp.cond:
-            while comp.busy or (comp.order_sensitive and
-                                comp.next_split != cache.split_index):
-                comp.cond.wait()            # paper line 7
-            comp.busy = True                # paper line 8
+        self._acquire(cache)
         try:
             if (self.mt_threads > 1 and comp.supports_multithreading
                     and self.pool is not None and cache.n > self.mt_threads):
@@ -101,9 +127,9 @@ class ActivityRunner:
                 out = comp.process(cache, shared=shared)    # paper line 9
         finally:
             with comp.cond:
-                comp.busy = False           # paper line 10
+                comp.busy = False               # paper line 10
                 comp.next_split += 1
-                comp.cond.notify_all()      # paper line 11
+                comp.cond.notify_all()          # paper line 11
         return out
 
     # -------------------------------------------------- §4.3 multithreading
@@ -111,7 +137,8 @@ class ActivityRunner:
         comp = self.comp
         t0 = time.perf_counter()
         ranges = cache.row_ranges(self.mt_threads)
-        futures = [self.pool.submit(comp.process_range, cache, r) for r in ranges]
+        futures = [self.pool.submit(comp.process_range, cache, r)
+                   for r in ranges]
         parts = [f.result() for f in futures]       # row-order synchronizer:
         out = comp.merge_ranges(cache, ranges, parts)   # merge in input order
         comp.busy_time += time.perf_counter() - t0
@@ -128,8 +155,9 @@ class TreePipeline:
                  tree_of: Dict[str, int],
                  deliver: DeliverFn,
                  mt_config: Optional[Dict[str, int]] = None,
-                 pool: Optional[ThreadPoolExecutor] = None,
-                 shared: bool = True):
+                 pool: Optional[SharedWorkerPool] = None,
+                 shared: bool = True,
+                 abort: Optional[RunAbort] = None):
         self.flow = flow
         self.tree = tree
         self.tree_of = tree_of
@@ -137,8 +165,10 @@ class TreePipeline:
         self.mt_config = mt_config or {}
         self.pool = pool
         self.shared = shared
+        self.abort = abort
         self.runners: Dict[str, ActivityRunner] = {
-            n: ActivityRunner(flow.component(n), self.mt_config.get(n, 1), pool)
+            n: ActivityRunner(flow.component(n), self.mt_config.get(n, 1),
+                              pool, abort)
             for n in tree.members
         }
         self.errors: List[BaseException] = []
@@ -166,7 +196,8 @@ class TreePipeline:
                         branch.split_index = split_index
                         self._walk(u, branch)
             else:
-                # tree -> tree transition: COPY edge (paper §4.1)
+                # tree -> tree transition: COPY edge (paper §4.1); the
+                # deliver fn may block on a bounded channel (backpressure)
                 copied = out.copy()
                 GLOBAL_CACHE_STATS.record(out)
                 copied.split_index = split_index
@@ -176,6 +207,12 @@ class TreePipeline:
         outs = self.runners[node].process(cache, shared=self.shared)
         self._route(node, outs, cache.split_index)
 
+    def consume_at(self, node: str, cache: SharedCache) -> None:
+        """Process one delivered cache starting at an arbitrary tree member
+        (cross-tree deliveries that target a non-root member, e.g. a shared
+        sink)."""
+        self._walk(node, cache)
+
     def _consume(self, cache: SharedCache, process_root: bool) -> None:
         try:
             if process_root:
@@ -184,29 +221,35 @@ class TreePipeline:
                 self._route(self.tree.root, [cache], cache.split_index)
         except BaseException as e:
             self.errors.append(e)
+            if self.abort is not None:
+                self.abort.trip(e)
+
+    def _consume_task(self, cache: SharedCache, process_root: bool,
+                      gate: AdmissionGate) -> None:
+        try:
+            if self.abort is not None and self.abort.aborted:
+                return
+            self._consume(cache, process_root)
+        finally:
+            gate.release()
 
     # ------------------------------------------------------------ execution
     def run(self, splits, m_prime: int, process_root: bool = False) -> None:
-        """Pipeline-parallel: one consumer thread per split, bounded by
-        BlockingQueue(m') (paper lines 13-21)."""
-        bq = BlockingQueue(m_prime)
-        stop = threading.Event()
-        hk = HouseKeepingThread(bq, stop)
-        hk.start()
-        threads: List[threading.Thread] = []
+        """Pipeline-parallel: one consumer task per split on the shared pool,
+        admission bounded to m' in flight (paper lines 13-21)."""
+        if self.pool is None:
+            # no pool (direct library use): degenerate to sequential
+            return self.run_sequential(splits, process_root)
+        gate = AdmissionGate(m_prime, self.abort)
+        futures: List[TaskFuture] = []
         try:
             for sc in splits:                                 # line 16
-                th = threading.Thread(
-                    target=self._consume, args=(sc, process_root), daemon=True,
-                    name=f"pipe-t{self.tree.tree_id}-s{sc.split_index}")
-                bq.add(th)       # line 20: blocks if m' caches in flight
-                th.start()       # line 21
-                threads.append(th)
-            for th in threads:
-                th.join()
+                gate.acquire(self.pool)   # line 20: blocks at m' in flight
+                futures.append(self.pool.submit(
+                    self._consume_task, sc, process_root, gate))  # line 21
         finally:
-            stop.set()
-            hk.join()
+            for f in futures:
+                f.wait()
         if self.errors:
             raise self.errors[0]
 
@@ -214,6 +257,8 @@ class TreePipeline:
         """Non-pipeline fashion: each split flows through all activities
         before the next is admitted (the m'=1 degenerate case)."""
         for sc in splits:
+            if self.abort is not None and self.abort.aborted:
+                break
             self._consume(sc, process_root)
         if self.errors:
             raise self.errors[0]

@@ -1,5 +1,5 @@
 """Algorithm 3 + Theorem 1 — estimate the optimal degree of pipeline
-parallelization.
+parallelization, plus the runtime plan for the streaming executor.
 
 Cost model (paper §4.2): with m splits, staggering activity A_j of
 per-split time t_j = t0 + lambda*N/m, and per-activity miscellaneous time
@@ -12,14 +12,22 @@ minimized at  m* = sqrt((c - lambda*N) / t0)          (Theorem 1)
 
 where c = m * sum_i (t_i - t0) is the total *net* processing time of the
 full input (independent of m) and N is the number of rows through A_j.
+
+Beyond the paper: ``plan_runtime`` sizes the shared worker pool and the
+per-inter-tree-edge channel depths from cache-size metadata (estimated bytes
+crossing each tree boundary), so backpressure bounds in-flight copies to a
+memory budget while keeping enough depth to decouple producer bursts.
 """
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
+
+from .graph import Dataflow
+from .partitioner import ExecutionTreeGraph
 
 
 @dataclass
@@ -97,11 +105,128 @@ def build_plan(activity_times: Dict[str, float],
 
 
 def choose_degree(plan: PipelinePlan, cores: Optional[int] = None,
-                  cap: int = 64) -> int:
+                  cap: int = 64, split_bytes: Optional[int] = None,
+                  memory_budget_bytes: Optional[int] = None) -> int:
     """Practical degree: Theorem-1 optimum, bounded by a configured cap and
     (when known) by available cores — the paper observed the decline past the
-    core count (Fig 12/13)."""
+    core count (Fig 12/13).  When cache-size metadata is available
+    (``split_bytes``), the degree is additionally capped so m' in-flight
+    shared caches fit the memory budget."""
     m = int(round(plan.m_star))
     if cores is not None:
         m = min(m, max(1, cores))
+    if split_bytes and memory_budget_bytes:
+        m = min(m, max(1, memory_budget_bytes // max(split_bytes, 1)))
     return int(min(max(m, 1), cap))
+
+
+# ---------------------------------------------------------------------------
+#  Runtime plan — shared pool width + per-edge channel depths (executor.py)
+# ---------------------------------------------------------------------------
+#: default memory budget for in-flight cross-tree copies, per edge
+DEFAULT_CHANNEL_BUDGET_BYTES = 256 * 1024 * 1024
+
+
+@dataclass
+class RuntimePlan:
+    """Sizing decisions for one engine run of the streaming executor."""
+    pool_width: int
+    # (src_tree_id, dst_tree_id) -> bounded queue depth (splits in flight)
+    channel_depth: Dict[Tuple[int, int], int] = field(default_factory=dict)
+    # (src_tree_id, dst_tree_id) -> estimated bytes crossing the edge
+    edge_bytes: Dict[Tuple[int, int], int] = field(default_factory=dict)
+
+    def spec(self) -> dict:
+        """Metadata-store representation (cache-size planning info)."""
+        return {
+            "pool_width": self.pool_width,
+            "channels": [{"edge": list(k), "depth": d,
+                          "est_bytes": self.edge_bytes.get(k, 0)}
+                         for k, d in sorted(self.channel_depth.items())],
+        }
+
+
+def estimate_edge_bytes(flow: Dataflow,
+                        g_tau: ExecutionTreeGraph) -> Dict[Tuple[int, int], int]:
+    """Cache-size metadata per inter-tree edge: estimated bytes of the split
+    stream crossing each tree->tree transition.  Source trees report their
+    source's total bytes (``Component.est_output_bytes``); downstream trees
+    inherit the sum of their inputs (a conservative no-attenuation bound —
+    filters only shrink it).  Every out-edge carries the FULL replicated
+    stream (the pipeline copies the output to each cross-tree successor),
+    so fan-out does not divide the estimate."""
+    tree_bytes: Dict[int, int] = {}
+    for tid in g_tau.topo_tree_order():
+        tree = g_tau.tree(tid)
+        root = flow.component(tree.root)
+        est = root.est_output_bytes()
+        if est is None:
+            ups = g_tau.upstream_trees(tid)
+            est = sum(tree_bytes.get(u, 0) for u in ups)
+        tree_bytes[tid] = int(est)
+    return {(a, b): tree_bytes.get(a, 0) for (a, b) in g_tau.edges}
+
+
+def choose_channel_depth(edge_nbytes: int, num_splits: int, m_prime: int,
+                         memory_budget_bytes: int = DEFAULT_CHANNEL_BUDGET_BYTES
+                         ) -> int:
+    """Per-edge queue depth m'': deep enough to decouple producer bursts
+    (>= 2), never deeper than m' (upstream admission already bounds in-flight
+    splits), and shallow enough that the buffered cross-tree COPIES stay
+    within the memory budget."""
+    depth = max(1, int(m_prime))
+    split_bytes = edge_nbytes // max(1, int(num_splits))
+    if split_bytes > 0:
+        by_mem = memory_budget_bytes // split_bytes
+        depth = min(depth, max(2, int(by_mem)))
+    return max(1, depth)
+
+
+def choose_pool_width(num_trees: int, m_prime: int,
+                      mt_threads: Optional[Dict[str, int]] = None,
+                      wave_width: int = 1,
+                      cores: Optional[int] = None, cap: int = 64) -> int:
+    """Width of the single shared worker pool: enough runnable workers for
+    m' in-flight splits per concurrently-active tree plus the widest §4.3
+    row-range fan-out, capped (and capped at cores when known — the paper's
+    Fig 12/13 decline past the core count).  ``wave_width`` is the number
+    of trees active at once — the widest schedule wave, plus any streamed
+    trees that overlap their upstream wave — and never exceeds
+    ``num_trees``."""
+    mt_max = max([1] + list((mt_threads or {}).values()))
+    concurrency = max(1, min(wave_width, max(num_trees, 1)))
+    want = max(2, m_prime * concurrency, mt_max)
+    if cores is not None:
+        want = min(want, max(1, cores))
+    return int(min(want, cap))
+
+
+def plan_runtime(flow: Dataflow, g_tau: ExecutionTreeGraph, *,
+                 num_splits: int, m_prime: int,
+                 mt_threads: Optional[Dict[str, int]] = None,
+                 cores: Optional[int] = None,
+                 pool_width: Optional[int] = None,
+                 channel_capacity: Optional[int] = None,
+                 memory_budget_bytes: int = DEFAULT_CHANNEL_BUDGET_BYTES,
+                 streaming: bool = False) -> RuntimePlan:
+    """Build the executor sizing plan for one run.  Explicit ``pool_width`` /
+    ``channel_capacity`` overrides win; otherwise widths come from the
+    schedule's widest wave (plus streamed-boundary overlap when
+    ``streaming``) and depths from cache-size metadata."""
+    from .partitioner import streamable_tree_ids
+    from .scheduler import plan_schedule     # local import (module cycle)
+    wave_width = max((len(w) for w in plan_schedule(g_tau)), default=1)
+    if streaming:
+        # a streamed stage-boundary tree runs concurrently with its
+        # upstream wave rather than after it
+        wave_width += len(streamable_tree_ids(flow, g_tau))
+    width = pool_width if pool_width is not None else choose_pool_width(
+        len(g_tau.trees), m_prime, mt_threads, wave_width, cores=cores)
+    edge_bytes = estimate_edge_bytes(flow, g_tau)
+    depths: Dict[Tuple[int, int], int] = {}
+    for edge, nbytes in edge_bytes.items():
+        depths[edge] = (channel_capacity if channel_capacity is not None
+                        else choose_channel_depth(nbytes, num_splits, m_prime,
+                                                  memory_budget_bytes))
+    return RuntimePlan(pool_width=max(1, int(width)),
+                       channel_depth=depths, edge_bytes=edge_bytes)

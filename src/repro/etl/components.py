@@ -41,6 +41,10 @@ class ArraySource(SourceComponent):
     def total_rows(self) -> int:
         return self._n
 
+    def est_output_bytes(self) -> int:
+        """Cache-size metadata for the runtime planner (channel sizing)."""
+        return int(sum(v.nbytes for v in self.columns.values()))
+
     def chunks(self, chunk_rows: int) -> Iterator[SharedCache]:
         i = 0
         idx = 0

@@ -17,6 +17,7 @@ from typing import Callable, Dict, Tuple
 
 import numpy as np
 
+from ..core.component import StageBoundary
 from ..core.graph import Dataflow
 from .components import (Aggregate, ArraySource, CollectSink, DimTable,
                          Expression, Filter, Lookup, Project, Sort)
@@ -185,7 +186,11 @@ def build_q3(data: SSBData) -> QueryFlow:
 # ---------------------------------------------------------------------------
 #  Q4.1 — the paper's Figure-11 dataflow (profit by year, customer nation)
 # ---------------------------------------------------------------------------
-def build_q4(data: SSBData) -> QueryFlow:
+def build_q4(data: SSBData, staged: bool = False) -> QueryFlow:
+    """``staged=True`` inserts an explicit StageBoundary between the lookup
+    stage and the filter/project/expression stage — the multi-tree variant
+    whose trees are connected by a ROW-SYNCHRONIZED boundary, which the
+    streaming executor overlaps (Q4.1s in BUILDERS)."""
     AMERICA = region_id("AMERICA")
     M1, M2 = mfgr_id("MFGR#1"), mfgr_id("MFGR#2")
     cust_f = DimTable(data.customer["c_custkey"],
@@ -221,8 +226,13 @@ def build_q4(data: SSBData) -> QueryFlow:
                     {"profit": ("profit", "sum")})                    # 9
     srt = Sort("sort", ["d_year", "c_nation"])                        # 10
     sink = CollectSink("sink")                                        # 11
-    flow.chain(src, lk_cust, lk_supp, lk_part, lk_date, filt, proj,
-               expr, agg, srt, sink)
+    if staged:
+        cut = StageBoundary("stage_cut")
+        flow.chain(src, lk_cust, lk_supp, lk_part, lk_date, cut, filt,
+                   proj, expr, agg, srt, sink)
+    else:
+        flow.chain(src, lk_cust, lk_supp, lk_part, lk_date, filt, proj,
+                   expr, agg, srt, sink)
 
     def oracle(d: SSBData) -> Dict[str, np.ndarray]:
         lo = d.lineorder
@@ -237,7 +247,11 @@ def build_q4(data: SSBData) -> QueryFlow:
         return _group_sum_oracle({"d_year": year[m], "c_nation": cn[m]},
                                  profit[m], "profit")
 
-    return QueryFlow("Q4.1", flow, sink, oracle)
+    return QueryFlow("Q4.1s" if staged else "Q4.1", flow, sink, oracle)
+
+
+def build_q4_staged(data: SSBData) -> QueryFlow:
+    return build_q4(data, staged=True)
 
 
 # ---------------------------------------------------------------------------
@@ -261,4 +275,4 @@ def _group_sum_oracle(groups: Dict[str, np.ndarray], vals: np.ndarray,
 
 
 BUILDERS = {"Q1.1": build_q1, "Q2.1": build_q2, "Q3.1": build_q3,
-            "Q4.1": build_q4}
+            "Q4.1": build_q4, "Q4.1s": build_q4_staged}

@@ -1,0 +1,63 @@
+"""Compatibility shims for jax API drift.
+
+``axis_types=`` on ``jax.make_mesh`` and ``jax.set_mesh`` landed after the
+0.4.x series; this repo must run both on the container's pinned jax and on
+current releases installed by CI, so mesh construction goes through these
+helpers instead of the raw API.
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Optional, Sequence
+
+import jax
+
+_make_mesh = getattr(jax, "make_mesh", None)     # absent before jax 0.4.35
+HAS_AXIS_TYPES = (
+    _make_mesh is not None
+    and "axis_types" in inspect.signature(_make_mesh).parameters
+    and hasattr(jax.sharding, "AxisType"))
+
+
+def axis_types_kwargs(n_axes: int) -> dict:
+    """``{"axis_types": (Auto,) * n}`` where supported, ``{}`` otherwise."""
+    if HAS_AXIS_TYPES:
+        return {"axis_types": (jax.sharding.AxisType.Auto,) * n_axes}
+    return {}
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str], devices=None):
+    """``jax.make_mesh`` with Auto axis types when the API supports them;
+    falls back to ``jax.sharding.Mesh`` over a device grid on older jax."""
+    axes = tuple(axes)
+    if _make_mesh is not None:
+        return _make_mesh(tuple(shape), axes, devices=devices,
+                          **axis_types_kwargs(len(axes)))
+    import numpy as np
+    devices = list(devices) if devices is not None else jax.devices()
+    n = 1
+    for s in shape:
+        n *= s
+    grid = np.array(devices[:n]).reshape(tuple(shape))
+    return jax.sharding.Mesh(grid, axes)
+
+
+def set_mesh(mesh):
+    """``jax.set_mesh(mesh)`` where available; otherwise the mesh's own
+    context manager (sufficient for jit-with-NamedSharding paths)."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: Optional[bool] = None):
+    """``jax.shard_map`` (new API, ``check_vma=``) falling back to
+    ``jax.experimental.shard_map`` (old API, ``check_rep=``)."""
+    if hasattr(jax, "shard_map"):
+        kw = {} if check_vma is None else {"check_vma": check_vma}
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    kw = {} if check_vma is None else {"check_rep": check_vma}
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **kw)

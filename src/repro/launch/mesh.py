@@ -26,8 +26,9 @@ def make_production_mesh(*, multi_pod: bool = False):
         raise RuntimeError(
             f"need {n} devices for mesh {shape}, have {len(devices)} — "
             f"run via launch/dryrun.py (it forces 512 host devices)")
-    auto = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, devices=devices[:n], axis_types=auto)
+    from .jax_compat import axis_types_kwargs
+    return jax.make_mesh(shape, axes, devices=devices[:n],
+                         **axis_types_kwargs(len(axes)))
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
@@ -35,10 +36,10 @@ def make_host_mesh(data: int = 1, model: int = 1):
     n = len(jax.devices())
     if data * model > n:
         raise ValueError(f"need {data*model} devices, have {n}")
-    auto = (jax.sharding.AxisType.Auto,) * 2
+    from .jax_compat import axis_types_kwargs
     return jax.make_mesh((data, model), ("data", "model"),
                          devices=jax.devices()[: data * model],
-                         axis_types=auto)
+                         **axis_types_kwargs(2))
 
 
 # TPU v5e hardware constants (roofline denominators)

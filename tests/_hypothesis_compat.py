@@ -1,0 +1,103 @@
+"""Minimal stand-in for the parts of `hypothesis` these tests use, so the
+tier-1 suite still runs (property tests become seeded random sampling) in
+environments where the `test` extra is not installed.  Install the real
+thing with ``pip install -e .[test]`` — when available it is always
+preferred (see the try/except import in each test module)."""
+from __future__ import annotations
+
+import functools
+import random
+from typing import Any, Callable, List, Optional
+
+_DEFAULT_MAX_EXAMPLES = 30
+_SEED = 0xC0FFEE
+
+
+class _Strategy:
+    def __init__(self, draw_fn: Callable[[random.Random], Any]):
+        self._draw = draw_fn
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda r: r.randint(min_value, max_value))
+
+
+def floats(min_value: float, max_value: float) -> _Strategy:
+    return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+
+def sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(lambda r: r.choice(elements))
+
+
+def tuples(*strategies: _Strategy) -> _Strategy:
+    return _Strategy(lambda r: tuple(s._draw(r) for s in strategies))
+
+
+def lists(elements: _Strategy, min_size: int = 0, max_size: int = 10,
+          unique: bool = False) -> _Strategy:
+    def draw(r: random.Random):
+        n = r.randint(min_size, max(min_size, max_size))
+        if not unique:
+            return [elements._draw(r) for _ in range(n)]
+        out: List[Any] = []
+        seen = set()
+        for _ in range(20 * max(n, 1)):
+            v = elements._draw(r)
+            if v not in seen:
+                seen.add(v)
+                out.append(v)
+            if len(out) >= n:
+                break
+        return out
+    return _Strategy(draw)
+
+
+def composite(fn: Callable) -> Callable[..., _Strategy]:
+    @functools.wraps(fn)
+    def build(*args, **kwargs) -> _Strategy:
+        def draw_outer(r: random.Random):
+            def draw(strategy: _Strategy):
+                return strategy._draw(r)
+            return fn(draw, *args, **kwargs)
+        return _Strategy(draw_outer)
+    return build
+
+
+class _StrategiesModule:
+    integers = staticmethod(integers)
+    floats = staticmethod(floats)
+    sampled_from = staticmethod(sampled_from)
+    tuples = staticmethod(tuples)
+    lists = staticmethod(lists)
+    composite = staticmethod(composite)
+
+
+st = _StrategiesModule()
+
+
+def settings(max_examples: Optional[int] = None, deadline=None, **_ignored):
+    def deco(fn):
+        if max_examples is not None:
+            fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strategies: _Strategy):
+    def deco(fn):
+        # deliberately NOT functools.wraps: the wrapper must expose a
+        # zero-parameter signature or pytest asks for fixtures matching the
+        # wrapped function's drawn arguments
+        def runner():
+            n = getattr(runner, "_max_examples", None) or \
+                getattr(fn, "_max_examples", _DEFAULT_MAX_EXAMPLES)
+            for i in range(n):
+                rnd = random.Random(_SEED + i)
+                drawn = [s._draw(rnd) for s in strategies]
+                fn(*drawn)
+        runner.__name__ = fn.__name__
+        runner.__doc__ = fn.__doc__
+        return runner
+    return deco

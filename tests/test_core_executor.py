@@ -1,0 +1,382 @@
+"""Streaming executor: shared worker pool semantics (size bound, managed
+blocking), bounded inter-tree channels (backpressure, close), scheduler
+failure paths (prompt cancel + re-raise, cycle detection), and ordinary /
+optimized / streaming engine equivalence incl. row order."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (Dataflow, OptimizedEngine, OptimizeOptions,
+                        OrdinaryEngine, StageBoundary, StreamingEngine,
+                        partition, plan_schedule, run_tree_graph)
+from repro.core.component import Component
+from repro.core.executor import (CLOSED, ChannelGroup, ExecutionAborted,
+                                 RunAbort, SharedWorkerPool)
+from repro.core.partitioner import ExecutionTreeGraph
+from repro.core.planner import (choose_channel_depth, choose_pool_width,
+                                estimate_edge_bytes, plan_runtime)
+from repro.etl import BUILDERS
+from repro.etl.components import ArraySource, CollectSink, Filter
+
+
+# ---------------------------------------------------------------------------
+#  SharedWorkerPool
+# ---------------------------------------------------------------------------
+def test_pool_bounds_runnable_concurrency():
+    pool = SharedWorkerPool(width=3)
+    active, peak = [0], [0]
+    lock = threading.Lock()
+
+    def task():
+        with lock:
+            active[0] += 1
+            peak[0] = max(peak[0], active[0])
+        time.sleep(0.02)
+        with lock:
+            active[0] -= 1
+
+    futs = [pool.submit(task) for _ in range(12)]
+    for f in futs:
+        f.result()
+    pool.shutdown()
+    assert peak[0] <= 3
+
+
+def test_pool_managed_blocking_avoids_deadlock_at_width_one():
+    """A width-1 pool whose only worker blocks on a child future must spawn
+    a compensation worker instead of deadlocking (ManagedBlocker style)."""
+    pool = SharedWorkerPool(width=1)
+
+    def child():
+        return 21
+
+    def parent():
+        return pool.submit(child).result() * 2   # joins inside a pool task
+
+    assert pool.submit(parent).result(timeout=10) == 42
+    pool.shutdown()
+
+
+def test_pool_future_propagates_exception():
+    pool = SharedWorkerPool(width=2)
+
+    def boom():
+        raise ValueError("kapow")
+
+    fut = pool.submit(boom)
+    with pytest.raises(ValueError, match="kapow"):
+        fut.result(timeout=10)
+    pool.shutdown()
+
+
+# ---------------------------------------------------------------------------
+#  Bounded channels
+# ---------------------------------------------------------------------------
+def test_channel_backpressure_blocks_until_consumed():
+    grp = ChannelGroup()
+    grp.add_edge((0, 1), capacity=2)
+    grp.put((0, 1), (0, 0, "x", None))
+    grp.put((0, 1), (0, 1, "x", None))
+    third_in = threading.Event()
+
+    def producer():
+        grp.put((0, 1), (0, 2, "x", None))    # blocks: buffer full
+        third_in.set()
+
+    t = threading.Thread(target=producer, daemon=True)
+    t.start()
+    time.sleep(0.05)
+    assert not third_in.is_set()              # backpressure holds
+    assert grp.get()[1] == 0                  # consumer frees a slot
+    t.join(timeout=5)
+    assert third_in.is_set()
+    assert grp.get()[1] == 1
+    assert grp.get()[1] == 2
+    grp.close((0, 1))
+    assert grp.get() is CLOSED
+
+
+def test_channel_close_ends_iteration():
+    grp = ChannelGroup()
+    grp.add_edge((0, 1), capacity=4)
+    for i in range(3):
+        grp.put((0, 1), (0, i, "x", None))
+    grp.close((0, 1))
+    assert [item[1] for item in grp] == [0, 1, 2]
+
+
+def test_abort_wakes_blocked_producer():
+    abort = RunAbort()
+    grp = ChannelGroup(abort=abort)
+    grp.add_edge((0, 1), capacity=1)
+    grp.put((0, 1), (0, 0, "x", None))
+    raised = threading.Event()
+
+    def producer():
+        try:
+            grp.put((0, 1), (0, 1, "x", None))   # blocks forever without abort
+        except ExecutionAborted:
+            raised.set()
+
+    t = threading.Thread(target=producer, daemon=True)
+    t.start()
+    time.sleep(0.05)
+    abort.trip(RuntimeError("stop"))
+    t.join(timeout=5)
+    assert raised.is_set()
+
+
+# ---------------------------------------------------------------------------
+#  Scheduler failure paths
+# ---------------------------------------------------------------------------
+def _two_tree_graph():
+    """flow: src -> boundary tree (so g_tau has 2 trees, edge 0->1)."""
+    flow = Dataflow("two")
+    src = flow.add(ArraySource("src", {"x": np.arange(100, dtype=np.int64)}))
+    cut = flow.add(StageBoundary("cut"))
+    sink = flow.add(CollectSink("sink"))
+    flow.connect(src, cut)
+    flow.connect(cut, sink)
+    return partition(flow)
+
+
+def test_tree_error_cancels_run_and_reraises():
+    """The first failing tree task aborts the whole run promptly and the
+    ORIGINAL exception surfaces; downstream trees never start."""
+    g = _two_tree_graph()
+    ran = []
+
+    def run_tree(tree):
+        if tree.tree_id == 0:
+            raise RuntimeError("tree zero exploded")
+        ran.append(tree.tree_id)
+
+    t0 = time.perf_counter()
+    with pytest.raises(RuntimeError, match="tree zero exploded"):
+        run_tree_graph(g, run_tree, concurrent=True)
+    assert time.perf_counter() - t0 < 5.0
+    assert ran == []                       # downstream cancelled, never ran
+
+
+def test_plan_schedule_raises_on_cycle():
+    flow = Dataflow("cyc")
+    g = ExecutionTreeGraph(flow)
+    g.new_tree("a")
+    g.new_tree("b")
+    g.add_edge(0, 1)
+    g.add_edge(1, 0)
+    with pytest.raises(ValueError, match="cycle"):
+        plan_schedule(g)
+
+
+def test_plan_schedule_waves_ok():
+    g = _two_tree_graph()
+    assert plan_schedule(g) == [[0], [1]]
+
+
+# ---------------------------------------------------------------------------
+#  Runtime planner
+# ---------------------------------------------------------------------------
+def test_choose_channel_depth_caps_by_memory_and_m_prime():
+    # tiny splits: depth = m'
+    assert choose_channel_depth(1024, num_splits=8, m_prime=8) == 8
+    # huge splits: depth clamps toward 2 under the budget
+    assert choose_channel_depth(8 * (1 << 30), num_splits=8, m_prime=8,
+                                memory_budget_bytes=1 << 30) == 2
+    assert choose_channel_depth(0, num_splits=8, m_prime=6) == 6
+
+
+def test_choose_pool_width_scales_with_wave_and_mt():
+    assert choose_pool_width(3, m_prime=8, wave_width=1) == 8
+    assert choose_pool_width(3, m_prime=8, wave_width=2) == 16
+    assert choose_pool_width(3, m_prime=2,
+                             mt_threads={"lookup": 6}) == 6
+    assert choose_pool_width(3, m_prime=8, cores=4) == 4
+    assert choose_pool_width(3, m_prime=1000, wave_width=1, cap=64) == 64
+    # concurrency can never exceed the tree count
+    assert choose_pool_width(2, m_prime=4, wave_width=10, cap=64) == 8
+
+
+def test_plan_runtime_widens_pool_for_streamed_boundaries(ssb_tiny):
+    qf = BUILDERS["Q4.1s"](ssb_tiny)
+    g = partition(qf.flow)
+    gated = plan_runtime(qf.flow, g, num_splits=4, m_prime=4)
+    streamed = plan_runtime(qf.flow, g, num_splits=4, m_prime=4,
+                            streaming=True)
+    assert streamed.pool_width > gated.pool_width
+
+
+def test_estimate_edge_bytes_propagates_source_size(ssb_tiny):
+    qf = BUILDERS["Q4.1s"](ssb_tiny)
+    g = partition(qf.flow)
+    eb = estimate_edge_bytes(qf.flow, g)
+    assert set(eb) == set(g.edges)
+    src_bytes = qf.flow.component("lineorder").est_output_bytes()
+    assert all(0 < b <= src_bytes for b in eb.values())
+    rt = plan_runtime(qf.flow, g, num_splits=4, m_prime=4)
+    assert rt.pool_width >= 2
+    assert set(rt.channel_depth) == set(g.edges)
+    assert all(d >= 1 for d in rt.channel_depth.values())
+
+
+# ---------------------------------------------------------------------------
+#  Engine equivalence incl. row order (the --smoke contract, as a test)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("qname", ["Q2.1", "Q4.1", "Q4.1s"])
+def test_streaming_engine_matches_ordinary_rows_in_order(qname, ssb_tiny):
+    qf = BUILDERS[qname](ssb_tiny)
+    OrdinaryEngine(qf.flow, chunk_rows=1024).run()
+    baseline = qf.sink.result()
+
+    qf2 = BUILDERS[qname](ssb_tiny)
+    r = StreamingEngine(qf2.flow, OptimizeOptions(num_splits=4)).run()
+    got = qf2.sink.result()
+    assert r.engine == "streaming"
+    assert set(got.keys()) == set(baseline.keys())
+    for k in baseline:
+        np.testing.assert_array_equal(got[k], baseline[k])
+
+
+def test_streaming_overlaps_row_synchronized_boundary(ssb_tiny):
+    """Q4.1s has a row-sync tree boundary; the streaming engine must
+    actually stream it (streamed_edges non-empty), and the non-streaming
+    planner must not."""
+    qf = BUILDERS["Q4.1s"](ssb_tiny)
+    r_stream = StreamingEngine(qf.flow, OptimizeOptions(num_splits=4)).run()
+    assert len(r_stream.streamed_edges) == 1
+
+    qf2 = BUILDERS["Q4.1s"](ssb_tiny)
+    r_plan = OptimizedEngine(qf2.flow, OptimizeOptions(num_splits=4)).run()
+    assert r_plan.streamed_edges == []
+    assert r_plan.copies == r_stream.copies
+
+
+def test_streaming_preserves_order_on_pure_rowsync_staged_flow():
+    rows = 20_000
+    flow = Dataflow("staged")
+    src = flow.add(ArraySource("src", {"x": np.arange(rows, dtype=np.int64)}))
+    f1 = flow.add(Filter("keep_even", lambda c, r: c.col("x")[r] % 2 == 0))
+    cut = flow.add(StageBoundary("cut"))
+    f2 = flow.add(Filter("keep_div4", lambda c, r: c.col("x")[r] % 4 == 0))
+    sink = flow.add(CollectSink("sink"))
+    flow.connect(src, f1)
+    flow.connect(f1, cut)
+    flow.connect(cut, f2)
+    flow.connect(f2, sink)
+    r = StreamingEngine(flow, OptimizeOptions(num_splits=8)).run()
+    np.testing.assert_array_equal(sink.result()["x"], np.arange(0, rows, 4))
+    assert len(r.streamed_edges) == 1
+
+
+def test_order_sensitive_member_disables_streaming_not_correctness():
+    """A streamed tree may receive splits out of order; an order_sensitive
+    member must force the ordered-drain fallback instead of risking the
+    admission gate filling with later splits (deadlock)."""
+    rows = 20_000
+
+    class OrderedProbe(Component):
+        order_sensitive = True
+
+        def __init__(self, name):
+            super().__init__(name)
+            self.seen = []
+
+        def _run(self, cache):
+            self.seen.append(cache.split_index)
+            return [cache]
+
+    flow = Dataflow("ordered")
+    src = flow.add(ArraySource("src", {"x": np.arange(rows, dtype=np.int64)}))
+    cut = flow.add(StageBoundary("cut"))
+    probe = flow.add(OrderedProbe("probe"))
+    sink = flow.add(CollectSink("sink"))
+    flow.connect(src, cut)
+    flow.connect(cut, probe)
+    flow.connect(probe, sink)
+    r = StreamingEngine(flow, OptimizeOptions(num_splits=8)).run()
+    assert r.streamed_edges == []               # fell back to ordered drain
+    assert probe.seen == sorted(probe.seen)
+    np.testing.assert_array_equal(sink.result()["x"], np.arange(rows))
+
+
+def test_engine_registers_metadata_when_given_a_store(ssb_tiny):
+    from repro.core import MetadataStore
+
+    store = MetadataStore()
+    qf = BUILDERS["Q4.1s"](ssb_tiny)
+    StreamingEngine(qf.flow, OptimizeOptions(num_splits=4),
+                    metadata=store).run()
+    assert qf.flow.name in store.partitions
+    plan = store.runtime_plans[qf.flow.name]
+    assert plan["pool_width"] >= 2
+    assert len(plan["channels"]) == len(store.partitions[qf.flow.name]["edges"])
+    # survives the JSON round-trip
+    assert MetadataStore.from_json(store.to_json()).runtime_plans \
+        == store.runtime_plans
+
+
+def test_error_in_downstream_tree_cancels_blocked_producer():
+    """Producer blocked on a bounded channel must not hang when the consumer
+    tree dies — the abort wakes it and the original error re-raises."""
+    rows = 50_000
+
+    class Boom(Component):
+        def _run(self, cache):
+            raise RuntimeError("downstream boom")
+
+    flow = Dataflow("err")
+    src = flow.add(ArraySource("src", {"x": np.arange(rows, dtype=np.int64)}))
+    cut = flow.add(StageBoundary("cut"))
+    boom = flow.add(Boom("boom"))
+    sink = flow.add(CollectSink("sink"))
+    flow.connect(src, cut)
+    flow.connect(cut, boom)
+    flow.connect(boom, sink)
+    t0 = time.perf_counter()
+    with pytest.raises(RuntimeError, match="downstream boom"):
+        StreamingEngine(flow, OptimizeOptions(
+            num_splits=16, channel_capacity=1)).run()
+    assert time.perf_counter() - t0 < 10.0
+
+
+def test_shared_sink_across_trees_receives_all_rows():
+    """A sink fed by its own source tree AND another tree (cross-tree
+    delivery to a non-root member) — previously unsupported."""
+    from repro.etl.components import Aggregate
+
+    flow = Dataflow("shared-sink")
+    s1 = flow.add(ArraySource("s1", {"k": np.zeros(10, dtype=np.int64),
+                                     "v": np.arange(10, dtype=np.float64)}))
+    s2 = flow.add(ArraySource("s2", {"k": np.ones(6, dtype=np.int64),
+                                     "v": np.ones(6, dtype=np.float64)}))
+    agg = flow.add(Aggregate("agg", ["k"], {"v": ("v", "sum")}))
+    sink = flow.add(CollectSink("sink"))
+    flow.connect(s1, sink)
+    flow.connect(s2, agg)
+    flow.connect(agg, sink)
+    for engine_cls in (OptimizedEngine, StreamingEngine):
+        sink.clear()
+        r = engine_cls(flow, OptimizeOptions(num_splits=2)).run()
+        got = sink.result()
+        # 10 rows from s1 directly + 1 aggregated row from the s2->agg tree
+        assert len(got["v"]) == 11, r.engine
+        assert got["v"].sum() == pytest.approx(np.arange(10).sum() + 6.0)
+
+
+def test_error_in_upstream_tree_reraises_via_streaming():
+    class Boom(Component):
+        def _run(self, cache):
+            raise RuntimeError("upstream boom")
+
+    flow = Dataflow("err-up")
+    src = flow.add(ArraySource("src", {"x": np.arange(1000, dtype=np.int64)}))
+    boom = flow.add(Boom("boom"))
+    cut = flow.add(StageBoundary("cut"))
+    sink = flow.add(CollectSink("sink"))
+    flow.connect(src, boom)
+    flow.connect(boom, cut)
+    flow.connect(cut, sink)
+    with pytest.raises(RuntimeError, match="upstream boom"):
+        StreamingEngine(flow, OptimizeOptions(num_splits=4)).run()

@@ -1,9 +1,13 @@
 """Algorithm 1 (execution-tree partitioning): shape tests on the paper's
 figures + hypothesis property tests on random DAGs."""
-import hypothesis.strategies as st
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:        # pragma: no cover — env without the `test` extra
+    from _hypothesis_compat import given, settings, st
 
 from repro.core import ComponentType, Dataflow, partition
 from repro.core.component import (BlockComponent, Component,

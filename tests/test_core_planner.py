@@ -1,9 +1,13 @@
 """Theorem 1 + Algorithm 3: the analytic optimum actually minimizes the cost
 model, and build_plan recovers parameters from synthetic measurements."""
-import hypothesis.strategies as st
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:        # pragma: no cover — env without the `test` extra
+    from _hypothesis_compat import given, settings, st
 
 from repro.core.planner import (PipelinePlan, build_plan, choose_degree,
                                 theorem1_m_star)

@@ -1,8 +1,12 @@
 """Unit + property tests for the ETL component library."""
-import hypothesis.strategies as st
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:        # pragma: no cover — env without the `test` extra
+    from _hypothesis_compat import given, settings, st
 
 from repro.core.shared_cache import SharedCache, concat_caches
 from repro.etl.components import (Aggregate, ArraySource, CollectSink,

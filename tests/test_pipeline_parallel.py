@@ -29,9 +29,10 @@ GPIPE_PROG = textwrap.dedent("""
     from repro.train.pipeline_parallel import gpipe_spmd, stack_stage_params
 
     n_stages, m, mb, d = 4, 6, 2, 16
+    from repro.launch.jax_compat import axis_types_kwargs
     mesh = jax.make_mesh((n_stages,), ("stage",),
                          devices=jax.devices()[:n_stages],
-                         axis_types=(jax.sharding.AxisType.Auto,))
+                         **axis_types_kwargs(1))
 
     def stage_fn(w, h):
         return jnp.tanh(h @ w)
@@ -43,7 +44,8 @@ GPIPE_PROG = textwrap.dedent("""
     xs = jax.random.normal(jax.random.fold_in(key, 99), (m, mb, d))
 
     pipelined = gpipe_spmd(stage_fn, mesh, n_stages, m, axis="stage")
-    with jax.set_mesh(mesh):
+    from repro.launch.jax_compat import set_mesh
+    with set_mesh(mesh):
         got = jax.jit(pipelined)(stacked, xs)
 
     # reference: sequential stage composition per microbatch
