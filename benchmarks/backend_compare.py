@@ -1,0 +1,75 @@
+"""numpy vs jax operator backend on the multi-tree SSB flows.
+
+Runs Q4.1 and Q4.1s through the streaming engine once per registered
+backend, ENFORCING engine-vs-oracle equality for every run (group keys
+exact, float aggregates within the backend's ``oracle_rtol`` — the jax
+backend accumulates sums in float32 through the ``kernels/segment_sum``
+Pallas op, so float64 exactness is not expected), then cross-checks the two
+backends against each other.
+
+Emits CSV:
+    backend.flow,backend,wall_s,copies,h2d_MB,d2h_MB,chunk_rows
+    backend.<flow>.speedup,numpy_vs_jax,<ratio>,,,
+
+Select a backend outside this section with ``OptimizeOptions(backend=...)``
+or the ``REPRO_BACKEND`` env var ("numpy" / "jax").
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import OptimizeOptions, StreamingEngine, get_backend
+
+from .common import BENCH_ROWS, ssb_data
+
+FLOWS = ("Q4.1", "Q4.1s")
+BACKENDS = ("numpy", "jax")
+NUM_SPLITS = 8
+
+
+def _assert_oracle(got, expect, rtol, label):
+    assert set(got.keys()) == set(expect.keys()), f"{label}: column set"
+    for k in expect:
+        np.testing.assert_allclose(got[k], expect[k], rtol=rtol,
+                                   err_msg=f"{label} column {k}")
+
+
+def run(rows: int = None) -> list:
+    from repro.etl import BUILDERS
+
+    rows = rows or max(100_000, BENCH_ROWS // 8)
+    data = ssb_data(rows)
+    out = ["backend.flow,backend,wall_s,copies,h2d_MB,d2h_MB,chunk_rows"]
+    for flow in FLOWS:
+        expect = BUILDERS[flow](data).oracle(data)
+        walls, results = {}, {}
+        for bname in BACKENDS:
+            bk = get_backend(bname)
+            best = None
+            for _ in range(2):          # second run = warm jit caches
+                qf = BUILDERS[flow](data)
+                r = StreamingEngine(qf.flow, OptimizeOptions(
+                    num_splits=NUM_SPLITS, backend=bname)).run()
+                got = qf.sink.result()
+                # engine-vs-oracle equality is ENFORCED for every backend
+                _assert_oracle(got, expect, bk.oracle_rtol,
+                               f"{flow}/{bname}")
+                if best is None or r.wall_time < best.wall_time:
+                    best = r
+            walls[bname] = best.wall_time
+            results[bname] = got
+            out.append(f"backend.{flow},{bname},{best.wall_time:.4f},"
+                       f"{best.copies},{best.h2d_bytes/1e6:.1f},"
+                       f"{best.d2h_bytes/1e6:.1f},"
+                       f"{best.runtime_plan.chunk_rows or ''}")
+        # cross-backend agreement at the loosest tolerance involved
+        rtol = max(get_backend(b).oracle_rtol for b in BACKENDS)
+        _assert_oracle(results["jax"], results["numpy"], rtol,
+                       f"{flow} jax-vs-numpy")
+        out.append(f"backend.{flow}.speedup,numpy_vs_jax,"
+                   f"{walls['numpy'] / max(walls['jax'], 1e-9):.3f},,,")
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -10,7 +10,11 @@ Scale via env: BENCH_ROWS (default 2,000,000), BENCH_REPEATS.
 ``--smoke`` runs the ordinary / optimized / streaming engines on tiny
 multi-tree SSB dataflows and asserts (1) identical sink rows, in order,
 across all three paths and (2) the shared-caching engines record fewer
-copies than the ordinary engine — a cheap guard for engine refactors.
+copies than the ordinary engine — a cheap guard for engine refactors.  It
+then repeats Q4.1/Q4.1s under BOTH operator backends (numpy and jax),
+enforcing engine-vs-oracle equality per backend and numpy-vs-jax agreement
+— the accelerated path's refactor guard.  Select a backend for the
+engine runs themselves with ``REPRO_BACKEND=jax``.
 """
 from __future__ import annotations
 
@@ -18,7 +22,7 @@ import sys
 import time
 import traceback
 
-from . import (fig12_pipeline_speedup, fig13_cpu_usage,
+from . import (backend_compare, fig12_pipeline_speedup, fig13_cpu_usage,
                fig14_multithreading, fig15_optimization,
                fig16_fig17_vs_kettle, kernel_bench, roofline, streaming,
                theorem1_accuracy)
@@ -32,6 +36,7 @@ SECTIONS = {
     "theorem1": theorem1_accuracy.run,
     "kernels": kernel_bench.run,
     "streaming": streaming.run,
+    "backend": backend_compare.run,
     "roofline": lambda: roofline.run("16x16") + roofline.run("2x16x16"),
 }
 
@@ -39,16 +44,20 @@ SMOKE_FLOWS = ("Q1.1", "Q2.1", "Q4.1", "Q4.1s")
 
 
 def smoke() -> int:
-    """Tiny-row engine equivalence: ordinary vs optimized vs streaming."""
+    """Tiny-row engine equivalence: ordinary vs optimized vs streaming,
+    then numpy-vs-jax operator-backend equivalence on the multi-tree flows."""
     import numpy as np
 
     from repro.core import (OptimizedEngine, OptimizeOptions, OrdinaryEngine,
-                            StreamingEngine)
+                            StreamingEngine, get_default_backend)
     from repro.etl import BUILDERS
     from repro.etl.ssb import generate
 
     data = generate(lineorder_rows=50_000, customers=2_000, suppliers=200,
                     parts=1_000, seed=5)
+    # oracle tolerance follows the active backend: float64 numpy is exact to
+    # 1e-9; the jax backend accumulates sums in float32 (segment_sum kernel)
+    oracle_rtol = get_default_backend().oracle_rtol
     failures = 0
     for qname in SMOKE_FLOWS:
         qf = BUILDERS[qname](data)
@@ -70,7 +79,8 @@ def smoke() -> int:
                         got[k], baseline[k],
                         err_msg=f"{qname} {label} column {k}")
                 for k in expect:     # and both match the independent oracle
-                    np.testing.assert_allclose(got[k], expect[k], rtol=1e-9)
+                    np.testing.assert_allclose(got[k], expect[k],
+                                               rtol=oracle_rtol)
             except AssertionError:
                 traceback.print_exc()
                 failures += 1
@@ -83,8 +93,59 @@ def smoke() -> int:
                 print(f"smoke.{qname},{label},FAIL,copies {r.copies} !< "
                       f"ordinary {r_ord.copies}")
                 failures += 1
+    if get_default_backend().name == "numpy":
+        failures += _smoke_backends(data)
+    else:
+        # the comparison below runs BOTH backends explicitly, so a non-numpy
+        # engine leg (REPRO_BACKEND=jax in the CI matrix) would repeat the
+        # numpy leg's most expensive work for no added coverage
+        print("smoke.backend,skipped,covered by the numpy leg")
     print(f"smoke,{'FAIL' if failures else 'PASS'},{failures} failures")
     return 1 if failures else 0
+
+
+def _smoke_backends(data) -> int:
+    """numpy-vs-jax operator backend comparison on the multi-tree flows:
+    per-backend engine-vs-oracle equality + cross-backend agreement.  The
+    equality harness (flows, tolerance rules, assertions) is shared with the
+    `backend` section so the two cannot drift."""
+    from repro.core import OptimizeOptions, StreamingEngine, get_backend
+    from repro.etl import BUILDERS
+
+    from .backend_compare import BACKENDS, FLOWS, _assert_oracle
+
+    failures = 0
+    for qname in FLOWS:
+        expect = BUILDERS[qname](data).oracle(data)
+        results = {}
+        for bname in BACKENDS:
+            qf = BUILDERS[qname](data)
+            try:
+                r = StreamingEngine(qf.flow, OptimizeOptions(
+                    num_splits=4, backend=bname)).run()
+                got = qf.sink.result()
+                _assert_oracle(got, expect, get_backend(bname).oracle_rtol,
+                               f"{qname} backend={bname}")
+            except Exception:
+                traceback.print_exc()
+                failures += 1
+                print(f"smoke.backend.{qname},{bname},FAIL")
+                continue
+            results[bname] = got
+            print(f"smoke.backend.{qname},{bname},oracle_ok,"
+                  f"wall={r.wall_time:.3f},h2d_MB={r.h2d_bytes/1e6:.1f}")
+        if len(results) == len(BACKENDS):
+            rtol = max(get_backend(b).oracle_rtol for b in BACKENDS)
+            try:
+                _assert_oracle(results["jax"], results["numpy"], rtol,
+                               f"{qname} jax-vs-numpy")
+            except AssertionError:
+                traceback.print_exc()
+                failures += 1
+                print(f"smoke.backend.{qname},jax_vs_numpy,FAIL")
+                continue
+            print(f"smoke.backend.{qname},jax_vs_numpy,rows_agree")
+    return failures
 
 
 def main() -> int:

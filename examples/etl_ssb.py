@@ -9,7 +9,7 @@ import argparse
 import numpy as np
 
 from repro.core import (OptimizedEngine, OptimizeOptions, OrdinaryEngine,
-                        StreamingEngine, partition)
+                        StreamingEngine, partition, resolve_backend)
 from repro.etl import BUILDERS, KettleEngine
 from repro.etl.ssb import generate
 
@@ -18,7 +18,12 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--rows", type=int, default=1_000_000)
     ap.add_argument("--splits", type=int, default=8)
+    ap.add_argument("--backend", default=None,
+                    help="operator backend: numpy (default) or jax; "
+                         "REPRO_BACKEND env var also works")
     args = ap.parse_args()
+    # float32 device accumulation cannot hit the float64 oracles exactly
+    rtol = resolve_backend(args.backend).oracle_rtol
 
     data = generate(lineorder_rows=args.rows)
     print(f"SSB data: {data.nbytes()/1e6:.0f} MB columnar, "
@@ -34,22 +39,22 @@ def main():
 
         rows = []
         qf = build(data)
-        r = OrdinaryEngine(qf.flow).run()
-        _check(qf.sink.result(), expect)
+        r = OrdinaryEngine(qf.flow, backend=args.backend).run()
+        _check(qf.sink.result(), expect, rtol)
         rows.append(("ordinary", r))
         qf = build(data)
-        r = KettleEngine(qf.flow).run()
-        _check(qf.sink.result(), expect)
+        r = KettleEngine(qf.flow, backend=args.backend).run()
+        _check(qf.sink.result(), expect, rtol)
         rows.append(("kettle-like", r))
         qf = build(data)
         r = OptimizedEngine(qf.flow, OptimizeOptions(
-            num_splits=args.splits)).run()
-        _check(qf.sink.result(), expect)
+            num_splits=args.splits, backend=args.backend)).run()
+        _check(qf.sink.result(), expect, rtol)
         rows.append(("optimized", r))
         qf = build(data)
         r = StreamingEngine(qf.flow, OptimizeOptions(
-            num_splits=args.splits)).run()
-        _check(qf.sink.result(), expect)
+            num_splits=args.splits, backend=args.backend)).run()
+        _check(qf.sink.result(), expect, rtol)
         rows.append(("streaming", r))
         for name, rr in rows:
             print(f"  {name:12s} wall {rr.wall_time:6.2f}s  "
@@ -58,9 +63,9 @@ def main():
     print("\nall results match the independent oracles — OK")
 
 
-def _check(got, expect):
+def _check(got, expect, rtol):
     for k in expect:
-        np.testing.assert_allclose(got[k], expect[k], rtol=1e-9)
+        np.testing.assert_allclose(got[k], expect[k], rtol=rtol)
 
 
 if __name__ == "__main__":

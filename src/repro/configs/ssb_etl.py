@@ -16,7 +16,23 @@ class ETLConfig:
     num_splits: int = 8                  # m  (paper's best: 8 pipelines)
     pipeline_degree: int = 8             # m'
     chunk_rows: int = 262_144
+    #: operator backend for the heavy components ("numpy" reference or "jax"
+    #: accelerated — see src/repro/core/backend/); consumed via
+    #: ``engine_options()``
+    backend: str = "numpy"
     queries: tuple = ("Q1.1", "Q2.1", "Q3.1", "Q4.1")
+
+    def engine_options(self, **overrides):
+        """OptimizeOptions preconfigured from this workload config —
+        including the operator backend — for OptimizedEngine/StreamingEngine.
+        Keyword overrides win."""
+        from ..core.engine import OptimizeOptions    # deferred (light module)
+        kw = dict(num_splits=self.num_splits,
+                  pipeline_degree=self.pipeline_degree,
+                  chunk_rows=self.chunk_rows,
+                  backend=self.backend)
+        kw.update(overrides)
+        return OptimizeOptions(**kw)
 
 
 CONFIG = ETLConfig()

@@ -3,6 +3,9 @@
 # pipeline parallelization (Algorithm 2 + Theorem 1), inside-component
 # multithreading (§4.3), and the dataflow task planner (§2) — extended with
 # a streaming inter-tree executor on one shared worker pool (executor.py).
+from .backend import (Backend, available_backends, get_backend,
+                      get_default_backend, register_backend, resolve_backend,
+                      set_default_backend)
 from .component import (BlockComponent, Component, ComponentType, FnComponent,
                         SemiBlockComponent, SinkComponent, SourceComponent,
                         StageBoundary)
@@ -14,9 +17,10 @@ from .graph import Dataflow
 from .metadata import MetadataStore
 from .partitioner import ExecutionTree, ExecutionTreeGraph, partition
 from .pipeline import TreePipeline
-from .planner import (PipelinePlan, RuntimePlan, build_plan,
-                      choose_channel_depth, choose_degree, choose_pool_width,
-                      estimate_edge_bytes, plan_runtime, theorem1_m_star)
+from .planner import (PipelinePlan, RuntimePlan, backend_chunk_rows,
+                      build_plan, choose_channel_depth, choose_degree,
+                      choose_pool_width, estimate_edge_bytes, plan_runtime,
+                      theorem1_m_star)
 from .scheduler import plan_schedule, run_tree_graph
 from .shared_cache import (GLOBAL_CACHE_STATS, CacheStats, SharedCache,
                            concat_caches)
@@ -24,6 +28,8 @@ from .simulate import (SimResult, cpu_usage_curve, multithreading_curve,
                        simulate_tree, speedup_curve)
 
 __all__ = [
+    "Backend", "available_backends", "get_backend", "get_default_backend",
+    "register_backend", "resolve_backend", "set_default_backend",
     "BlockComponent", "Component", "ComponentType", "FnComponent",
     "SemiBlockComponent", "SinkComponent", "SourceComponent", "StageBoundary",
     "EngineRun", "OptimizedEngine", "OptimizeOptions", "OrdinaryEngine",
@@ -33,9 +39,9 @@ __all__ = [
     "Dataflow", "MetadataStore",
     "ExecutionTree", "ExecutionTreeGraph", "partition",
     "TreePipeline",
-    "PipelinePlan", "RuntimePlan", "build_plan", "choose_channel_depth",
-    "choose_degree", "choose_pool_width", "estimate_edge_bytes",
-    "plan_runtime", "theorem1_m_star",
+    "PipelinePlan", "RuntimePlan", "backend_chunk_rows", "build_plan",
+    "choose_channel_depth", "choose_degree", "choose_pool_width",
+    "estimate_edge_bytes", "plan_runtime", "theorem1_m_star",
     "plan_schedule", "run_tree_graph",
     "GLOBAL_CACHE_STATS", "CacheStats", "SharedCache", "concat_caches",
     "SimResult", "cpu_usage_curve", "multithreading_curve", "simulate_tree",

@@ -1,0 +1,183 @@
+"""Operator-backend interface + registry.
+
+A ``Backend`` supplies the heavy per-operator kernels the ETL component
+library dispatches through (`etl/components.py`):
+
+    filter_mask          row predicate -> boolean keep-mask
+    searchsorted_probe   dimension-table probe (sorted keys + searchsorted)
+    lookup_gather        payload gather with unmatched-default substitution
+    eval_expression      derived-column computation
+    groupby_reduce       group-by aggregation (sum/avg/min/max/count)
+    sort_rows            stable multi-key row ordering (lexsort)
+
+plus the array plumbing the shared-cache layer needs (``asarray`` /
+``to_host`` / ``concat``) and the sizing metadata the runtime planner uses
+(``dtype_width`` / ``batch_align``).
+
+Two implementations ship: the ``numpy`` reference backend (bit-identical to
+the historical inlined component code) and the ``jax`` accelerated backend
+(jitted kernels, device-resident columns, ``groupby_reduce`` routed through
+the ``kernels/segment_sum`` Pallas op).  Selection order:
+
+    OptimizeOptions(backend=...)  >  REPRO_BACKEND env var  >  "numpy"
+
+Backends are process-wide singletons created lazily, so importing this
+module never imports jax.
+"""
+from __future__ import annotations
+
+import os
+import threading
+from typing import (Callable, Dict, List, Mapping, Optional, Sequence, Tuple,
+                    TYPE_CHECKING)
+
+import numpy as np
+
+if TYPE_CHECKING:  # pragma: no cover
+    from ..shared_cache import SharedCache
+
+#: aggregation ops every backend must implement in groupby_reduce
+AGG_OPS = ("sum", "avg", "min", "max", "count")
+
+#: environment variable naming the default backend for the process
+BACKEND_ENV_VAR = "REPRO_BACKEND"
+
+DEFAULT_BACKEND = "numpy"
+
+
+class Backend:
+    """Abstract operator backend.  Subclasses implement the kernel set; the
+    base class carries the sizing/precision metadata with safe defaults."""
+
+    #: registry key ("numpy", "jax", ...)
+    name: str = "abstract"
+    #: planner hint: round source chunk sizes up to a multiple of this (the
+    #: jax backend aligns to its segment-sum row tile so jitted kernels see
+    #: few distinct shapes; 1 means no preference)
+    batch_align: int = 1
+    #: expected relative error of float aggregation vs a float64 oracle —
+    #: engine-vs-oracle equality checks use this per-backend tolerance
+    #: (float32 device accumulation cannot hit float64 exactness)
+    oracle_rtol: float = 1e-9
+
+    # ------------------------------------------------------------ array ops
+    def asarray(self, x) -> object:
+        """Convert to this backend's native array type (may record a
+        host->device transfer in CacheStats)."""
+        raise NotImplementedError
+
+    def to_host(self, x) -> np.ndarray:
+        """Convert a backend array to numpy (may record device->host)."""
+        raise NotImplementedError
+
+    def concat(self, parts: Sequence) -> object:
+        """Concatenate row-range outputs (the row-order synchronizer's merge
+        step) into one backend-native column."""
+        raise NotImplementedError
+
+    # --------------------------------------------------------------- sizing
+    def dtype_width(self, dtype) -> int:
+        """Bytes per element this backend stores for ``dtype`` (device
+        backends may canonicalize, e.g. 64-bit -> 32-bit)."""
+        return int(np.dtype(dtype).itemsize)
+
+    def est_nbytes(self, columns: Mapping[str, np.ndarray]) -> int:
+        """Estimated bytes of a columnar table under this backend's dtype
+        widths — feeds ``Component.est_output_bytes`` so ``plan_runtime``
+        channel sizing stays correct when columns are device arrays.
+        ``v.size`` (total elements) keeps multi-dimensional columns (e.g. a
+        [n, doc_len] token table) counted in full."""
+        return int(sum(self.dtype_width(v.dtype) * v.size
+                       for v in columns.values()))
+
+    # ------------------------------------------------------- operator kernels
+    def filter_mask(self, predicate: Callable, cache: "SharedCache",
+                    rows: slice):
+        """Evaluate ``predicate(cache_view, rows)`` to a boolean keep-mask."""
+        raise NotImplementedError
+
+    def eval_expression(self, fn: Callable, cache: "SharedCache",
+                        rows: slice):
+        """Evaluate ``fn(cache_view, rows)`` to a derived column."""
+        raise NotImplementedError
+
+    def searchsorted_probe(self, dim, vals) -> Tuple[object, object]:
+        """Probe a ``DimTable``: returns (row_idx, matched_mask)."""
+        raise NotImplementedError
+
+    def lookup_gather(self, dim, dim_col: str, idx, matched, default):
+        """Gather a payload column at ``idx``; unmatched rows get
+        ``default``."""
+        raise NotImplementedError
+
+    def groupby_reduce(self, keys: Sequence, values: Mapping[str, Tuple[object, str]],
+                       n_rows: int) -> Tuple[List[object], Dict[str, object]]:
+        """Group-by aggregation.  ``keys`` are the group-by columns (empty =>
+        one global group over ``n_rows`` rows); ``values`` maps output name
+        -> (value column, op) with op in AGG_OPS.  Returns (group key
+        columns in lexicographic ascending group order, aggregate columns in
+        the same group order)."""
+        raise NotImplementedError
+
+    def sort_rows(self, keys: Sequence, ascending: bool = True):
+        """Stable multi-key row order (last key major — lexsort semantics on
+        ``keys[::-1]``); returns the permutation index array."""
+        raise NotImplementedError
+
+    def __repr__(self) -> str:
+        return f"<{type(self).__name__} {self.name!r}>"
+
+
+# ---------------------------------------------------------------------------
+#  Registry
+# ---------------------------------------------------------------------------
+_lock = threading.Lock()
+_factories: Dict[str, Callable[[], Backend]] = {}
+_instances: Dict[str, Backend] = {}
+_default_override: Optional[str] = None
+
+
+def register_backend(name: str, factory: Callable[[], Backend]) -> None:
+    """Register a backend factory (instantiated lazily, cached)."""
+    with _lock:
+        _factories[name] = factory
+        _instances.pop(name, None)
+
+
+def available_backends() -> List[str]:
+    with _lock:
+        return sorted(_factories)
+
+
+def get_backend(name: str) -> Backend:
+    """Resolve a backend by name (lazy singleton)."""
+    with _lock:
+        if name not in _factories:
+            raise ValueError(
+                f"unknown backend {name!r}; available: {sorted(_factories)}")
+        inst = _instances.get(name)
+        if inst is None:
+            inst = _instances[name] = _factories[name]()
+        return inst
+
+
+def set_default_backend(name: Optional[str]) -> None:
+    """Process-wide default override (None restores env/builtin order)."""
+    global _default_override
+    if name is not None:
+        get_backend(name)                      # validate eagerly
+    _default_override = name
+
+
+def resolve_backend(name: Optional[str] = None) -> Backend:
+    """Selection order: explicit ``name`` > set_default_backend override >
+    ``REPRO_BACKEND`` env var > "numpy"."""
+    if name is None:
+        name = (_default_override
+                or os.environ.get(BACKEND_ENV_VAR, "").strip()
+                or DEFAULT_BACKEND)
+    return get_backend(name)
+
+
+def get_default_backend() -> Backend:
+    return resolve_backend(None)

@@ -1,0 +1,270 @@
+"""Accelerated operator backend: jitted JAX kernels + device-resident columns.
+
+Kernels:
+  - ``searchsorted_probe`` / ``lookup_gather`` — jitted probe over a
+    device-cached dimension table (keys/qualifies/payload are device_put once
+    per table and reused across every chunk).
+  - ``groupby_reduce`` — routed through the repo's ``kernels/segment_sum``
+    Pallas op (MXU one-hot matmul on TPU, jnp reference elsewhere; set
+    ``REPRO_SEGSUM_IMPL=interpret`` to exercise the Pallas kernel body on
+    CPU).  Sums accumulate in float32 — the MXU-native width — so
+    engine-vs-oracle checks use ``oracle_rtol`` instead of float64 exactness.
+  - ``filter_mask`` / ``eval_expression`` — user lambdas evaluated over a
+    device view of the shared cache, so `c.col(...)` hands back jax arrays
+    and the whole expression runs on device.
+  - ``sort_rows`` — stable ``jnp.lexsort``.
+
+Every host->device / device->host crossing is recorded in
+``CacheStats`` (``GLOBAL_CACHE_STATS.record_transfer``) — the copy-cost
+analogue of the paper's §3 scheme for the device tier.
+
+Note: x64 stays disabled (jax default), so 64-bit host columns are
+canonicalized to 32-bit on device; ``dtype_width`` reports the canonical
+width so planner channel sizing matches what actually crosses an edge.
+"""
+from __future__ import annotations
+
+import os
+import threading
+import weakref
+from typing import Callable, Dict, List, Mapping, Sequence, Tuple
+
+import numpy as np
+
+from ..shared_cache import GLOBAL_CACHE_STATS
+from .base import AGG_OPS, Backend
+
+
+class _DeviceCacheView:
+    """Read-only view of a SharedCache whose ``col`` returns device arrays
+    (converted+cached on first touch), so user predicates/expressions written
+    against the cache API compute on device.  One view is shared across a
+    component's §4.3 row-range calls (see ``JaxBackend._view``), so each
+    column is uploaded once per cache version, not once per range."""
+
+    __slots__ = ("_backend", "_cache", "_cols", "_lock")
+
+    def __init__(self, backend: "JaxBackend", cache):
+        self._backend = backend
+        self._cache = cache
+        self._cols: Dict[str, object] = {}
+        self._lock = threading.Lock()
+
+    @property
+    def n(self) -> int:
+        return self._cache.n
+
+    @property
+    def names(self):
+        return self._cache.names
+
+    def col(self, name: str):
+        got = self._cols.get(name)
+        if got is None:
+            with self._lock:       # concurrent row ranges: upload once
+                got = self._cols.get(name)
+                if got is None:
+                    got = self._cols[name] = self._backend.asarray(
+                        self._cache.col(name))
+        return got
+
+    def __getattr__(self, name):
+        # API parity with SharedCache: anything beyond col/n/names
+        # (split_index, columns, to_dict, ...) falls back to the underlying
+        # cache — host compute, but the numpy-backend contract still holds
+        return getattr(self._cache, name)
+
+
+class JaxBackend(Backend):
+    name = "jax"
+    #: align chunks to the segment-sum row tile so jitted kernels see few
+    #: distinct shapes (bounds retracing) and the Pallas grid has no ragged
+    #: final tile in the common case
+    batch_align = 512
+    #: float32 accumulation (MXU width) vs the float64 oracles
+    oracle_rtol = 1e-3
+
+    def __init__(self) -> None:
+        import jax                       # deferred: registry creates lazily
+        import jax.numpy as jnp
+        from ...kernels.segment_sum import segment_sum
+        self._jax = jax
+        self._jnp = jnp
+        self._segment_sum = segment_sum
+        self._segsum_impl = os.environ.get("REPRO_SEGSUM_IMPL", "auto")
+
+        def _probe(keys, qualifies, vals):
+            idx = jnp.searchsorted(keys, vals)
+            idx = jnp.clip(idx, 0, keys.shape[0] - 1)
+            matched = (keys[idx] == vals) & qualifies[idx]
+            return idx, matched
+
+        def _gather(payload, idx, matched, default):
+            return jnp.where(matched, payload[idx],
+                             jnp.asarray(default, payload.dtype))
+
+        self._probe_jit = jax.jit(_probe)
+        self._gather_jit = jax.jit(_gather)
+        # device views keyed by cache, invalidated by cache.version — a
+        # stale view (pre-compact/add_column) is never reused
+        self._views: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+        self._views_lock = threading.Lock()
+        self._dims_lock = threading.Lock()
+
+    def _view(self, cache) -> _DeviceCacheView:
+        with self._views_lock:
+            got = self._views.get(cache)
+            if got is not None and got[0] == cache.version:
+                return got[1]
+            view = _DeviceCacheView(self, cache)
+            self._views[cache] = (cache.version, view)
+            return view
+
+    # ------------------------------------------------------------ array ops
+    def asarray(self, x):
+        if isinstance(x, np.ndarray):
+            out = self._jnp.asarray(x)
+            GLOBAL_CACHE_STATS.record_transfer("h2d", x.nbytes)
+            return out
+        if isinstance(x, self._jax.Array):
+            return x
+        return self._jnp.asarray(x)
+
+    def to_host(self, x) -> np.ndarray:
+        if isinstance(x, np.ndarray):
+            return x
+        out = np.asarray(x)
+        GLOBAL_CACHE_STATS.record_transfer("d2h", out.nbytes)
+        return out
+
+    def concat(self, parts: Sequence):
+        parts = list(parts)
+        if len(parts) == 1:
+            return self.asarray(parts[0])
+        return self._jnp.concatenate([self.asarray(p) for p in parts])
+
+    # --------------------------------------------------------------- sizing
+    def dtype_width(self, dtype) -> int:
+        # x64 disabled => int64/float64 host columns live as 4-byte device
+        return int(np.dtype(self._jax.dtypes.canonicalize_dtype(dtype)).itemsize)
+
+    # ------------------------------------------------------- dim-table cache
+    def _dim_device(self, dim) -> Dict[str, object]:
+        """Device-resident mirror of a DimTable, device_put once per table
+        (payload columns lazily) and cached on the table itself.  Locked:
+        concurrent §4.3 probes of one table must not duplicate uploads (or
+        double-count h2d bytes)."""
+        dev = dim.__dict__.get("_jax_device_cache")
+        if dev is None:
+            with self._dims_lock:
+                dev = dim.__dict__.get("_jax_device_cache")
+                if dev is None:
+                    dev = dim.__dict__["_jax_device_cache"] = {
+                        "keys": self.asarray(dim.keys),
+                        "qualifies": self.asarray(dim.qualifies),
+                        "payload": {},
+                    }
+        return dev
+
+    def _dim_payload(self, dim, col: str):
+        dev = self._dim_device(dim)
+        got = dev["payload"].get(col)
+        if got is None:
+            with self._dims_lock:
+                got = dev["payload"].get(col)
+                if got is None:
+                    got = dev["payload"][col] = self.asarray(dim.payload[col])
+        return got
+
+    # ------------------------------------------------------- operator kernels
+    def filter_mask(self, predicate: Callable, cache, rows: slice):
+        mask = predicate(self._view(cache), rows)
+        if isinstance(mask, np.ndarray):
+            return mask.astype(bool)       # host-computed mask stays host
+        # device array, or any sequence the numpy reference would accept
+        return self._jnp.asarray(mask, dtype=bool)
+
+    def eval_expression(self, fn: Callable, cache, rows: slice):
+        out = fn(self._view(cache), rows)
+        return out if isinstance(out, np.ndarray) else self._jnp.asarray(out)
+
+    def searchsorted_probe(self, dim, vals):
+        if len(dim.keys) == 0:
+            n = len(vals)
+            return (np.zeros(n, dtype=np.int64),
+                    np.zeros(n, dtype=bool))
+        dev = self._dim_device(dim)
+        v = self.asarray(vals)
+        n = v.shape[0]
+        pad = (-n) % self.batch_align          # bound jit retraces per shape
+        if pad:
+            v = self._jnp.concatenate([v, self._jnp.full((pad,), dim.keys[0],
+                                                         dtype=v.dtype)])
+        idx, matched = self._probe_jit(dev["keys"], dev["qualifies"], v)
+        return idx[:n], matched[:n]
+
+    def lookup_gather(self, dim, dim_col: str, idx, matched, default):
+        payload = self._dim_payload(dim, dim_col)
+        return self._gather_jit(payload, idx, matched, default)
+
+    def groupby_reduce(self, keys: Sequence, values: Mapping[str, Tuple[object, str]],
+                       n_rows: int) -> Tuple[List[object], Dict[str, object]]:
+        for out, (col, op) in values.items():
+            if op not in AGG_OPS:
+                raise ValueError(f"unknown agg op {op!r} for {out!r}")
+        jnp = self._jnp
+        n = int(n_rows)
+        if not keys:
+            aggs: Dict[str, object] = {}
+            zeros = jnp.zeros((n,), dtype=jnp.int32)
+            for out, (col, op) in values.items():
+                if op == "count":
+                    aggs[out] = np.array([n], dtype=np.int64)
+                    continue
+                vals = self.asarray(col)
+                if op in ("sum", "avg"):
+                    s = self._segment_sum(zeros,
+                                          vals.astype(jnp.float32)[:, None],
+                                          1, impl=self._segsum_impl)[:, 0]
+                    aggs[out] = s / n if op == "avg" else s
+                elif op == "min":
+                    aggs[out] = jnp.min(vals)[None]
+                elif op == "max":
+                    aggs[out] = jnp.max(vals)[None]
+            return [], aggs
+        keys_d = [self.asarray(k) for k in keys]
+        order = jnp.lexsort(tuple(keys_d[::-1]))
+        sk = [k[order] for k in keys_d]
+        boundary = jnp.zeros((n,), dtype=bool).at[0].set(True)
+        for k in sk:
+            boundary = boundary.at[1:].set(boundary[1:] | (k[1:] != k[:-1]))
+        seg = (jnp.cumsum(boundary) - 1).astype(jnp.int32)
+        starts_h = np.flatnonzero(self.to_host(boundary))
+        n_groups = len(starts_h)
+        counts_h = np.diff(np.append(starts_h, n))
+        starts = jnp.asarray(starts_h)
+        group_cols = [k[starts] for k in sk]
+        counts_d = jnp.asarray(counts_h)
+        aggs = {}
+        for out, (col, op) in values.items():
+            if op == "count":
+                aggs[out] = counts_h.astype(np.int64)
+                continue
+            vals = self.asarray(col)[order]
+            if op in ("sum", "avg"):
+                # the repo's Pallas segment-sum op: one-hot matmul per row
+                # tile on TPU, jnp segment_sum reference on CPU
+                s = self._segment_sum(seg, vals.astype(jnp.float32)[:, None],
+                                      n_groups, impl=self._segsum_impl)[:, 0]
+                aggs[out] = s / counts_d if op == "avg" else s
+            elif op == "min":
+                aggs[out] = self._jax.ops.segment_min(vals, seg,
+                                                      num_segments=n_groups)
+            elif op == "max":
+                aggs[out] = self._jax.ops.segment_max(vals, seg,
+                                                      num_segments=n_groups)
+        return group_cols, aggs
+
+    def sort_rows(self, keys: Sequence, ascending: bool = True):
+        order = self._jnp.lexsort(tuple(self.asarray(k) for k in keys)[::-1])
+        return order if ascending else order[::-1]

@@ -63,11 +63,22 @@ class Component:
         self.busy = False
         self.cond = threading.Condition()
         self.next_split = 0          # order enforcement for order_sensitive
+        #: operator backend this component dispatches its kernels through;
+        #: None => the process default (REPRO_BACKEND env var / "numpy").
+        #: Engines assign the run's backend here before executing.
+        self.backend = None
         # instrumentation
         self.rows_in = 0
         self.rows_out = 0
         self.busy_time = 0.0
         self.calls = 0
+
+    def get_backend(self):
+        """The active operator backend (core/backend/) for this component."""
+        if self.backend is not None:
+            return self.backend
+        from .backend import get_default_backend     # deferred (cycle-free)
+        return get_default_backend()
 
     # ------------------------------------------------------------ row-sync
     def process(self, cache: SharedCache, shared: bool = True) -> List[SharedCache]:
@@ -139,6 +150,13 @@ class SourceComponent(Component):
     """Emits the input row set as a stream of caches (chunks)."""
 
     ctype = ComponentType.SOURCE
+
+    #: True when the DATA this source emits depends on chunk boundaries
+    #: (e.g. an RNG-per-chunk synthetic source).  The executor then never
+    #: realigns the chunk size to a backend's preferred batch size
+    #: (RuntimePlan.chunk_rows) — only an explicit OptimizeOptions.chunk_rows
+    #: may change it.
+    chunk_sensitive: bool = False
 
     def chunks(self, chunk_rows: int) -> Iterator[SharedCache]:  # pragma: no cover
         raise NotImplementedError

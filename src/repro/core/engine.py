@@ -24,6 +24,7 @@ import time
 from dataclasses import dataclass, field, replace
 from typing import Dict, List, Optional, Tuple
 
+from .backend import Backend, resolve_backend
 from .component import ComponentType, SourceComponent
 from .executor import StreamingExecutor
 from .graph import Dataflow
@@ -39,6 +40,9 @@ class EngineRun:
     copies: int
     bytes_copied: int
     engine: str
+    backend: str = "numpy"
+    h2d_bytes: int = 0              # host->device bytes moved by the backend
+    d2h_bytes: int = 0              # device->host bytes (sinks / host merges)
     activity_times: Dict[str, float] = field(default_factory=dict)
     trees: Optional[List[List[str]]] = None
     plans: Dict[int, PipelinePlan] = field(default_factory=dict)
@@ -47,8 +51,19 @@ class EngineRun:
     pool_stats: Dict[str, int] = field(default_factory=dict)
 
     def summary(self) -> str:
-        return (f"[{self.engine}] wall={self.wall_time:.3f}s copies={self.copies} "
-                f"bytes_copied={self.bytes_copied/1e6:.1f}MB")
+        s = (f"[{self.engine}/{self.backend}] wall={self.wall_time:.3f}s "
+             f"copies={self.copies} "
+             f"bytes_copied={self.bytes_copied/1e6:.1f}MB")
+        if self.h2d_bytes or self.d2h_bytes:
+            s += (f" h2d={self.h2d_bytes/1e6:.1f}MB"
+                  f" d2h={self.d2h_bytes/1e6:.1f}MB")
+        return s
+
+
+def _assign_backend(flow: Dataflow, backend: Backend) -> None:
+    """Point every component of the flow at the run's operator backend."""
+    for comp in flow.vertices.values():
+        comp.backend = backend
 
 
 # --------------------------------------------------------------------------
@@ -57,9 +72,11 @@ class EngineRun:
 class OrdinaryEngine:
     """Separate input/output caches, copy on every edge, sequential."""
 
-    def __init__(self, flow: Dataflow, chunk_rows: int = 65536):
+    def __init__(self, flow: Dataflow, chunk_rows: int = 65536,
+                 backend: Optional[str] = None):
         self.flow = flow
         self.chunk_rows = chunk_rows
+        self.backend = backend        # None => REPRO_BACKEND env / "numpy"
 
     def _push(self, name: str, cache: SharedCache,
               states: Dict[str, list]) -> None:
@@ -84,6 +101,8 @@ class OrdinaryEngine:
     def run(self) -> EngineRun:
         self.flow.validate()
         self.flow.reset_stats()
+        bk = resolve_backend(self.backend)
+        _assign_backend(self.flow, bk)
         before = GLOBAL_CACHE_STATS.snapshot()
         t_start = time.perf_counter()
         states: Dict[str, list] = {
@@ -110,6 +129,9 @@ class OrdinaryEngine:
             copies=after["copies"] - before["copies"],
             bytes_copied=after["bytes_copied"] - before["bytes_copied"],
             engine="ordinary",
+            backend=bk.name,
+            h2d_bytes=after["h2d_bytes"] - before["h2d_bytes"],
+            d2h_bytes=after["d2h_bytes"] - before["d2h_bytes"],
             activity_times={n: c.busy_time for n, c in self.flow.vertices.items()})
 
 
@@ -129,6 +151,8 @@ class OptimizeOptions:
     pool_width: Optional[int] = None   # shared pool size; None => planner
     channel_capacity: Optional[int] = None  # per-edge depth; None => planner
     cores: Optional[int] = None        # cap pool width at core count if set
+    backend: Optional[str] = None      # operator backend ("numpy"/"jax");
+    #                                    None => REPRO_BACKEND env / "numpy"
 
 
 class OptimizedEngine:
@@ -149,6 +173,8 @@ class OptimizedEngine:
         opts = self.options
         self.flow.validate()
         self.flow.reset_stats()
+        bk = resolve_backend(opts.backend)
+        _assign_backend(self.flow, bk)      # before planning: est_output_bytes
         self.g_tau = partition(self.flow)
 
         m_prime = opts.pipeline_degree or opts.num_splits
@@ -158,7 +184,8 @@ class OptimizedEngine:
             mt_threads=opts.mt_threads, cores=opts.cores,
             pool_width=opts.pool_width,
             channel_capacity=opts.channel_capacity,
-            streaming=opts.streaming and opts.concurrent_trees)
+            streaming=opts.streaming and opts.concurrent_trees,
+            backend=bk)
         if self.metadata is not None:
             self.metadata.register_flow(self.flow)
             self.metadata.register_partitioning(self.flow, self.g_tau)
@@ -180,6 +207,9 @@ class OptimizedEngine:
             copies=after["copies"] - before["copies"],
             bytes_copied=after["bytes_copied"] - before["bytes_copied"],
             engine=self.engine_name,
+            backend=bk.name,
+            h2d_bytes=after["h2d_bytes"] - before["h2d_bytes"],
+            d2h_bytes=after["d2h_bytes"] - before["d2h_bytes"],
             activity_times={n: c.busy_time for n, c in self.flow.vertices.items()},
             trees=[list(t.members) for t in self.g_tau.trees],
             runtime_plan=self.runtime_plan,

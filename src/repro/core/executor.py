@@ -505,7 +505,12 @@ class StreamingExecutor:
     def _source_splits(self, root: SourceComponent) -> Iterator[SharedCache]:
         opts = self.options
         total = root.total_rows()
-        chunk = opts.chunk_rows or max(1, -(-total // max(opts.num_splits, 1)))
+        # explicit option wins; else the runtime plan's backend-aligned batch
+        # size (unless this source's data is chunk-sensitive); else an even
+        # split of the source
+        planned = None if root.chunk_sensitive else self.plan.chunk_rows
+        chunk = (opts.chunk_rows or planned
+                 or max(1, -(-total // max(opts.num_splits, 1))))
         for i, c in enumerate(root.chunks(chunk)):
             c.split_index = i
             yield c

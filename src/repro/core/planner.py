@@ -135,11 +135,16 @@ class RuntimePlan:
     channel_depth: Dict[Tuple[int, int], int] = field(default_factory=dict)
     # (src_tree_id, dst_tree_id) -> estimated bytes crossing the edge
     edge_bytes: Dict[Tuple[int, int], int] = field(default_factory=dict)
+    # source chunk rows aligned to the backend's preferred batch size; None
+    # when no backend preference was planned (executor falls back to
+    # total/num_splits)
+    chunk_rows: Optional[int] = None
 
     def spec(self) -> dict:
         """Metadata-store representation (cache-size planning info)."""
         return {
             "pool_width": self.pool_width,
+            "chunk_rows": self.chunk_rows,
             "channels": [{"edge": list(k), "depth": d,
                           "est_bytes": self.edge_bytes.get(k, 0)}
                          for k, d in sorted(self.channel_depth.items())],
@@ -201,6 +206,26 @@ def choose_pool_width(num_trees: int, m_prime: int,
     return int(min(want, cap))
 
 
+def backend_chunk_rows(flow: Dataflow, num_splits: int, backend) -> Optional[int]:
+    """Source chunk size honouring the backend's preferred batch alignment:
+    total/num_splits rounded UP to a multiple of ``backend.batch_align`` so
+    jitted device kernels see few distinct shapes (and the segment-sum Pallas
+    grid has no ragged final tile in the common case)."""
+    align = max(1, int(getattr(backend, "batch_align", 1)))
+    if align == 1:
+        return None          # no preference: keep per-source even splits
+    total = 0
+    from .component import SourceComponent   # local import (module cycle)
+    for sname in flow.sources():
+        comp = flow.component(sname)
+        if isinstance(comp, SourceComponent):
+            total = max(total, comp.total_rows())
+    if total <= 0:
+        return None
+    base = -(-total // max(1, int(num_splits)))
+    return int(-(-base // align) * align)
+
+
 def plan_runtime(flow: Dataflow, g_tau: ExecutionTreeGraph, *,
                  num_splits: int, m_prime: int,
                  mt_threads: Optional[Dict[str, int]] = None,
@@ -208,11 +233,15 @@ def plan_runtime(flow: Dataflow, g_tau: ExecutionTreeGraph, *,
                  pool_width: Optional[int] = None,
                  channel_capacity: Optional[int] = None,
                  memory_budget_bytes: int = DEFAULT_CHANNEL_BUDGET_BYTES,
-                 streaming: bool = False) -> RuntimePlan:
+                 streaming: bool = False,
+                 backend=None) -> RuntimePlan:
     """Build the executor sizing plan for one run.  Explicit ``pool_width`` /
     ``channel_capacity`` overrides win; otherwise widths come from the
     schedule's widest wave (plus streamed-boundary overlap when
-    ``streaming``) and depths from cache-size metadata."""
+    ``streaming``) and depths from cache-size metadata.  When an operator
+    ``backend`` is given, source splits are batched to its preferred size
+    (``RuntimePlan.chunk_rows``) and edge-byte estimates already reflect its
+    dtype widths via ``Component.est_output_bytes``."""
     from .partitioner import streamable_tree_ids
     from .scheduler import plan_schedule     # local import (module cycle)
     wave_width = max((len(w) for w in plan_schedule(g_tau)), default=1)
@@ -228,5 +257,8 @@ def plan_runtime(flow: Dataflow, g_tau: ExecutionTreeGraph, *,
         depths[edge] = (channel_capacity if channel_capacity is not None
                         else choose_channel_depth(nbytes, num_splits, m_prime,
                                                   memory_budget_bytes))
+    chunk = (backend_chunk_rows(flow, num_splits, backend)
+             if backend is not None else None)
     return RuntimePlan(pool_width=max(1, int(width)),
-                       channel_depth=depths, edge_bytes=edge_bytes)
+                       channel_depth=depths, edge_bytes=edge_bytes,
+                       chunk_rows=chunk)

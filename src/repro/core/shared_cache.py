@@ -1,6 +1,6 @@
 """Shared cache — the paper's §3 caching scheme.
 
-A cache is a columnar row buffer (dict of equal-length numpy arrays plus a
+A cache is a columnar row buffer (dict of equal-length arrays plus a
 valid-row count).  The *shared caching scheme* means one cache object is
 reused in place by every row-synchronized component of an execution tree:
 components add/drop/overwrite columns and compact rows inside the same
@@ -8,6 +8,14 @@ object, so no output-cache -> input-cache copy ever happens.
 
 The *ordinary* scheme (`copy()`) physically duplicates every column, which is
 what the paper's baseline (Figure 3, "Copy") does on every edge.
+
+Columns are host numpy arrays by default, but a cache may also hold
+**device-resident columns** (jax.Array) produced by an accelerated operator
+backend (`core/backend/`).  Device arrays are immutable, so the in-place row
+mutators (``compact`` / ``take``) replace those column objects functionally
+instead of writing into the buffer head; host columns keep the historical
+in-place behaviour.  Every device->host crossing made here is recorded in
+``CacheStats`` — the copy-cost analogue of §3 for the device tier.
 """
 from __future__ import annotations
 
@@ -16,7 +24,23 @@ from typing import Callable, Dict, Iterator, List, Optional
 
 import numpy as np
 
+# a column is np.ndarray (host) or a device array (e.g. jax.Array)
 Columns = Dict[str, np.ndarray]
+
+
+def is_host_column(v) -> bool:
+    """True for mutable host (numpy) columns; device columns are anything
+    else array-like (immutable, updated functionally)."""
+    return isinstance(v, np.ndarray)
+
+
+def _to_host(v) -> np.ndarray:
+    """Materialize on host, recording the d2h transfer for device arrays."""
+    if is_host_column(v):
+        return v
+    out = np.asarray(v)
+    GLOBAL_CACHE_STATS.record_transfer("d2h", out.nbytes)
+    return out
 
 
 class SharedCache:
@@ -27,7 +51,8 @@ class SharedCache:
     row order at tree leaves).
     """
 
-    __slots__ = ("columns", "n", "split_index", "copies", "lock")
+    __slots__ = ("columns", "n", "split_index", "copies", "lock", "version",
+                 "__weakref__")
 
     def __init__(self, columns: Optional[Columns] = None, n: Optional[int] = None,
                  split_index: int = 0):
@@ -37,6 +62,9 @@ class SharedCache:
         self.n = int(n)
         self.split_index = split_index
         self.copies = 0          # instrumentation: number of physical copies taken
+        #: bumped on every mutation — device backends key cached device views
+        #: of this cache on it, so a stale view is never reused
+        self.version = 0
         self.lock = threading.Lock()
         self._check()
 
@@ -53,60 +81,101 @@ class SharedCache:
     def nbytes(self) -> int:
         return sum(v[: self.n].nbytes for v in self.columns.values())
 
-    def col(self, name: str) -> np.ndarray:
+    def col(self, name: str):
         """Valid slice of a column (view, no copy)."""
         return self.columns[name][: self.n]
 
     def to_dict(self) -> Columns:
-        """Materialized dict of valid rows (copies — for sinks/tests)."""
-        return {k: np.array(v[: self.n]) for k, v in self.columns.items()}
+        """Materialized host dict of valid rows (copies — for sinks/tests)."""
+        return {k: np.array(_to_host(v[: self.n]))
+                for k, v in self.columns.items()}
 
     # --------------------------------------------------------- ordinary path
     def copy(self) -> "SharedCache":
-        """Physical copy — the operation the shared caching scheme removes."""
-        out = SharedCache({k: np.array(v[: self.n]) for k, v in self.columns.items()},
-                          self.n, self.split_index)
+        """Physical copy — the operation the shared caching scheme removes.
+        Device columns are immutable, so sharing the same array IS a safe
+        copy (copy-on-write); only host buffers are duplicated."""
+        out = SharedCache(
+            {k: (np.array(v[: self.n]) if is_host_column(v) else v[: self.n])
+             for k, v in self.columns.items()},
+            self.n, self.split_index)
         self.copies += 1
         return out
 
     # ------------------------------------------------------- in-place mutators
-    def add_column(self, name: str, values: np.ndarray) -> None:
+    def add_column(self, name: str, values) -> None:
         if len(values) < self.n:
             raise ValueError(f"add_column {name!r}: {len(values)} < n={self.n}")
         self.columns[name] = values
+        self.version += 1
 
     def drop_columns(self, names) -> None:
         for name in names:
             self.columns.pop(name, None)
+        self.version += 1
 
     def keep_columns(self, names) -> None:
         names = set(names)
         for k in list(self.columns.keys()):
             if k not in names:
                 del self.columns[k]
+        self.version += 1
 
-    def compact(self, mask: np.ndarray) -> None:
+    def compact(self, mask) -> None:
         """Keep rows where ``mask`` is True, in place (row filter)."""
         if mask.dtype != np.bool_:
             raise TypeError("compact expects a boolean mask")
         if len(mask) < self.n:
             raise ValueError("mask shorter than valid rows")
-        mask = mask[: self.n]
-        k = int(mask.sum())
+        mask_h = _to_host(mask)[: self.n]
+        k = int(mask_h.sum())
         for name, vals in self.columns.items():
-            # write the surviving rows into the head of the SAME buffer
-            vals[:k] = vals[: self.n][mask]
+            if is_host_column(vals):
+                # write the surviving rows into the head of the SAME buffer
+                vals[:k] = vals[: self.n][mask_h]
+            else:
+                # device column: immutable — replace functionally
+                self.columns[name] = vals[: self.n][mask_h]
         self.n = k
+        self.version += 1
 
-    def take(self, idx: np.ndarray) -> None:
-        """Reorder/select rows by integer index, in place."""
-        k = len(idx)
+    def take(self, idx) -> None:
+        """Reorder/select rows by integer index, in place.
+
+        ``idx`` must address the valid row window ``[0, n)`` (negative
+        indices count from ``n``).  It may contain duplicates and be LONGER
+        than ``n``; a host buffer too small for the gather is grown by
+        allocating a fresh buffer explicitly (never by silently writing into
+        the stale tail beyond the valid window)."""
+        idx_h = _to_host(np.asarray(idx) if isinstance(idx, (list, tuple))
+                         else idx)
+        if idx_h.dtype == np.bool_:
+            raise TypeError("take expects integer indices (use compact for "
+                            "boolean masks)")
+        k = len(idx_h)
+        if k:
+            lo, hi = int(idx_h.min()), int(idx_h.max())
+            if lo < -self.n or hi >= self.n:
+                raise IndexError(
+                    f"take: index range [{lo}, {hi}] outside the valid row "
+                    f"window [0, {self.n})")
         for name, vals in self.columns.items():
-            vals[:k] = vals[: self.n][idx]
+            if not is_host_column(vals):
+                self.columns[name] = vals[: self.n][idx_h]
+                continue
+            gathered = vals[: self.n][idx_h]     # fancy index: fresh array
+            if k <= self.n:
+                vals[:k] = gathered
+            else:
+                # gather larger than the valid window: grow explicitly with a
+                # fresh buffer instead of overwriting the stale tail
+                self.columns[name] = gathered
         self.n = k
+        self.version += 1
 
     def truncate(self, n: int) -> None:
         self.n = min(self.n, int(n))
+        self.version += 1
 
     # ----------------------------------------------------------- partitioning
     def split(self, m: int) -> List["SharedCache"]:
@@ -133,41 +202,98 @@ class SharedCache:
         return f"SharedCache(n={self.n}, cols={self.names}, split={self.split_index})"
 
 
+def _concat_column(parts: List):
+    """Concatenate column parts, staying on device if any part lives there."""
+    if all(is_host_column(p) for p in parts):
+        return np.concatenate(parts)
+    import jax.numpy as jnp              # deferred: only on device columns
+    for p in parts:
+        if is_host_column(p):
+            GLOBAL_CACHE_STATS.record_transfer("h2d", p.nbytes)
+    return jnp.concatenate([jnp.asarray(p) for p in parts])
+
+
 def concat_caches(caches: List[SharedCache], ordered: bool = True) -> SharedCache:
     """Row-order synchronizer: merge caches back into one, restoring the
     original split order (paper §4.3 — 'maintains the row order of the output
-    to be the same of the input')."""
+    to be the same of the input').
+
+    All caches must carry the same column set; a mismatch raises a
+    ``ValueError`` naming the offending cache and columns instead of
+    ``KeyError``-ing on the first cache's schema."""
     caches = [c for c in caches if c is not None]
     if not caches:
         return SharedCache({}, 0)
     if ordered:
         caches = sorted(caches, key=lambda c: c.split_index)
     names = caches[0].names
-    cols = {k: np.concatenate([c.col(k) for c in caches]) for k in names}
+    expected = set(names)
+    for i, c in enumerate(caches[1:], start=1):
+        got = set(c.names)
+        if got != expected:
+            missing = sorted(expected - got)
+            extra = sorted(got - expected)
+            detail = []
+            if missing:
+                detail.append(f"missing {missing}")
+            if extra:
+                detail.append(f"unexpected {extra}")
+            raise ValueError(
+                f"concat_caches: cache #{i} (split {c.split_index}) column "
+                f"set differs from cache #0 (split {caches[0].split_index}): "
+                + ", ".join(detail))
+    cols = {k: _concat_column([c.col(k) for c in caches]) for k in names}
     return SharedCache(cols, sum(c.n for c in caches))
 
 
 class CacheStats:
-    """Global instrumentation for copies / bytes moved (thread-safe)."""
+    """Global instrumentation for copies / bytes moved (thread-safe).
+
+    Besides host-side cache copies (the paper's §3 metric), tracks explicit
+    host<->device transfers made by accelerated operator backends — the
+    copy-cost analogue for the device tier."""
 
     def __init__(self) -> None:
         self._lock = threading.Lock()
         self.copies = 0
         self.bytes_copied = 0
+        self.h2d_transfers = 0
+        self.h2d_bytes = 0
+        self.d2h_transfers = 0
+        self.d2h_bytes = 0
 
     def record(self, cache: SharedCache) -> None:
         with self._lock:
             self.copies += 1
             self.bytes_copied += cache.nbytes()
 
+    def record_transfer(self, direction: str, nbytes: int) -> None:
+        with self._lock:
+            if direction == "h2d":
+                self.h2d_transfers += 1
+                self.h2d_bytes += int(nbytes)
+            elif direction == "d2h":
+                self.d2h_transfers += 1
+                self.d2h_bytes += int(nbytes)
+            else:
+                raise ValueError(f"unknown transfer direction {direction!r}")
+
     def reset(self) -> None:
         with self._lock:
             self.copies = 0
             self.bytes_copied = 0
+            self.h2d_transfers = 0
+            self.h2d_bytes = 0
+            self.d2h_transfers = 0
+            self.d2h_bytes = 0
 
     def snapshot(self):
         with self._lock:
-            return {"copies": self.copies, "bytes_copied": self.bytes_copied}
+            return {"copies": self.copies, "bytes_copied": self.bytes_copied,
+                    "h2d_transfers": self.h2d_transfers,
+                    "h2d_bytes": self.h2d_bytes,
+                    "d2h_transfers": self.d2h_transfers,
+                    "d2h_bytes": self.d2h_bytes}
 
 
 GLOBAL_CACHE_STATS = CacheStats()

@@ -48,6 +48,10 @@ class SyntheticTokenSource(SourceComponent):
     """Documents of random length with a Zipf-ish token distribution.
     Columns: tokens [n, max_doc_len] int32 (padded), length [n] int32."""
 
+    # the RNG stream is chunk-granular: the emitted documents change with the
+    # chunk size, so the executor must not realign it to a backend preference
+    chunk_sensitive = True
+
     def __init__(self, name: str, cfg: PipelineConfig, window: int):
         super().__init__(name)
         self.cfg = cfg

@@ -10,6 +10,11 @@ Row-synchronized components mutate the shared cache IN PLACE (shared caching
 scheme).  Heavy row-synchronized components (Filter/Lookup/Expression)
 implement `process_range` + `merge_ranges` for §4.3 inside-component
 multithreading with a row-order synchronizer.
+
+Heavy components do not inline their kernels: they dispatch through the
+active operator backend (``core/backend/``) — ``numpy`` reference or ``jax``
+accelerated — via ``Component.get_backend()``.  Engines assign the run's
+backend on every component before executing.
 """
 from __future__ import annotations
 
@@ -18,6 +23,7 @@ from typing import Callable, Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..core.backend import AGG_OPS
 from ..core.component import (BlockComponent, Component, ComponentType,
                               SemiBlockComponent, SinkComponent,
                               SourceComponent)
@@ -42,8 +48,11 @@ class ArraySource(SourceComponent):
         return self._n
 
     def est_output_bytes(self) -> int:
-        """Cache-size metadata for the runtime planner (channel sizing)."""
-        return int(sum(v.nbytes for v in self.columns.values()))
+        """Cache-size metadata for the runtime planner (channel sizing),
+        computed with the active backend's dtype widths so the estimate stays
+        correct when columns live on device (e.g. 64-bit host columns
+        canonicalized to 32-bit jax arrays)."""
+        return self.get_backend().est_nbytes(self.columns)
 
     def chunks(self, chunk_rows: int) -> Iterator[SharedCache]:
         i = 0
@@ -86,11 +95,12 @@ class Filter(RowSyncMT):
         self.predicate = predicate
 
     def process_range(self, cache: SharedCache, rows: slice) -> dict:
-        return {"__mask__": np.asarray(self.predicate(cache, rows), dtype=bool)}
+        return {"__mask__": self.get_backend().filter_mask(self.predicate,
+                                                           cache, rows)}
 
     def merge_ranges(self, cache: SharedCache, ranges: List[slice],
                      parts: List[dict]) -> List[SharedCache]:
-        mask = np.concatenate([p["__mask__"] for p in parts])
+        mask = self.get_backend().concat([p["__mask__"] for p in parts])
         cache.compact(mask)          # row order preserved (synchronizer)
         return [cache]
 
@@ -135,22 +145,23 @@ class Lookup(RowSyncMT):
         self.matched_flag = matched_flag     # optional bool col with match bit
 
     def process_range(self, cache: SharedCache, rows: slice) -> dict:
+        bk = self.get_backend()
         vals = cache.col(self.key_col)[rows]
-        idx, matched = self.dim.probe(vals)
+        idx, matched = bk.searchsorted_probe(self.dim, vals)
         out: Dict[str, np.ndarray] = {}
         for out_name, dim_col in self.return_cols.items():
-            got = self.dim.payload[dim_col][idx]
-            got = np.where(matched, got, np.asarray(self.default, got.dtype))
-            out[out_name] = got
+            out[out_name] = bk.lookup_gather(self.dim, dim_col, idx, matched,
+                                             self.default)
         if self.matched_flag:
             out[self.matched_flag] = matched
         return out
 
     def merge_ranges(self, cache: SharedCache, ranges: List[slice],
                      parts: List[dict]) -> List[SharedCache]:
+        bk = self.get_backend()
         names = parts[0].keys()
         for name in names:                     # merge in input-range order
-            cache.add_column(name, np.concatenate([p[name] for p in parts]))
+            cache.add_column(name, bk.concat([p[name] for p in parts]))
         return [cache]
 
 
@@ -164,12 +175,13 @@ class Expression(RowSyncMT):
         self.fn = fn
 
     def process_range(self, cache: SharedCache, rows: slice) -> dict:
-        return {self.out_col: np.asarray(self.fn(cache, rows))}
+        return {self.out_col: self.get_backend().eval_expression(self.fn,
+                                                                 cache, rows)}
 
     def merge_ranges(self, cache: SharedCache, ranges: List[slice],
                      parts: List[dict]) -> List[SharedCache]:
-        cache.add_column(self.out_col,
-                         np.concatenate([p[self.out_col] for p in parts]))
+        cache.add_column(self.out_col, self.get_backend().concat(
+            [p[self.out_col] for p in parts]))
         return [cache]
 
 
@@ -195,7 +207,9 @@ class Converter(Component):
 
     def _run(self, cache: SharedCache) -> List[SharedCache]:
         for col, dt in self.conversions.items():
-            cache.columns[col] = cache.col(col).astype(dt)
+            # add_column (not a raw columns[] write) bumps cache.version so
+            # backends drop any cached device view of the old column
+            cache.add_column(col, cache.col(col).astype(dt))
         return [cache]
 
 
@@ -219,9 +233,6 @@ class Splitter(Component):
 # ---------------------------------------------------------------------------
 #  Block components
 # ---------------------------------------------------------------------------
-_AGG_OPS = {"sum", "avg", "min", "max", "count"}
-
-
 class Aggregate(BlockComponent):
     """Group-by aggregation — the paper's canonical block component
     (sum/avg/min/max).  Accumulates all input caches, then reduces."""
@@ -232,7 +243,7 @@ class Aggregate(BlockComponent):
         super().__init__(name)
         self.group_by = list(group_by)
         for out, (col, op) in aggs.items():
-            if op not in _AGG_OPS:
+            if op not in AGG_OPS:     # same set every backend validates
                 raise ValueError(f"unknown agg op {op!r}")
         self.aggs = dict(aggs)
 
@@ -244,48 +255,18 @@ class Aggregate(BlockComponent):
             for out in self.aggs:
                 cols[out] = np.array([], dtype=np.float64)
             return SharedCache(cols, 0)
-        if not self.group_by:
-            # global aggregation: one group
-            cols = {}
-            for out, (col, op) in self.aggs.items():
-                vals = merged.col(col)
-                if op == "count":
-                    cols[out] = np.array([n], dtype=np.int64)
-                elif op == "sum":
-                    cols[out] = np.array([vals.astype(np.float64).sum()])
-                elif op == "avg":
-                    cols[out] = np.array([vals.astype(np.float64).mean()])
-                elif op == "min":
-                    cols[out] = np.array([vals.min()])
-                elif op == "max":
-                    cols[out] = np.array([vals.max()])
-            self.rows_out += 1
-            return SharedCache(cols, 1)
-        keys = [merged.col(g) for g in self.group_by]
-        order = np.lexsort(keys[::-1])
-        sk = [k[order] for k in keys]
-        boundary = np.zeros(n, dtype=bool)
-        boundary[0] = True
-        for k in sk:
-            boundary[1:] |= k[1:] != k[:-1]
-        starts = np.flatnonzero(boundary)
-        counts = np.diff(np.append(starts, n))
-        cols: Dict[str, np.ndarray] = {g: k[starts] for g, k in
-                                       zip(self.group_by, sk)}
-        for out, (col, op) in self.aggs.items():
-            if op == "count":
-                cols[out] = counts.astype(np.int64)
-                continue
-            vals = merged.col(col)[order]
-            if op in ("sum", "avg"):
-                acc = np.add.reduceat(vals.astype(np.float64), starts)
-                cols[out] = acc / counts if op == "avg" else acc
-            elif op == "min":
-                cols[out] = np.minimum.reduceat(vals, starts)
-            elif op == "max":
-                cols[out] = np.maximum.reduceat(vals, starts)
-        self.rows_out += len(starts)
-        return SharedCache(cols, len(starts))
+        # groupby_reduce is the backend's block kernel: the jax backend routes
+        # sum/avg through the kernels/segment_sum Pallas op
+        group_cols, agg_cols = self.get_backend().groupby_reduce(
+            [merged.col(g) for g in self.group_by],
+            {out: (merged.col(col), op) for out, (col, op) in self.aggs.items()},
+            n)
+        cols = dict(zip(self.group_by, group_cols))
+        cols.update(agg_cols)
+        # degenerate global aggregation with no agg columns: one empty row
+        n_groups = len(next(iter(cols.values()))) if cols else 1
+        self.rows_out += n_groups
+        return SharedCache(cols, n_groups)
 
 
 class Sort(BlockComponent):
@@ -299,10 +280,8 @@ class Sort(BlockComponent):
 
     def finish(self, state: List[SharedCache]) -> SharedCache:
         merged = concat_caches(state, ordered=True)
-        keys = [merged.col(b) for b in self.by]
-        order = np.lexsort(keys[::-1])
-        if not self.ascending:
-            order = order[::-1]
+        order = self.get_backend().sort_rows(
+            [merged.col(b) for b in self.by], ascending=self.ascending)
         merged.take(order)
         self.rows_out += merged.n
         return merged
@@ -332,8 +311,8 @@ class Merge(SemiBlockComponent):
 
     def finish(self, state: List[SharedCache]) -> SharedCache:
         merged = concat_caches(state, ordered=False)
-        keys = [merged.col(b) for b in self.by]
-        merged.take(np.lexsort(keys[::-1]))
+        merged.take(self.get_backend().sort_rows(
+            [merged.col(b) for b in self.by]))
         self.rows_out += merged.n
         return merged
 

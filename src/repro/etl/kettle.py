@@ -29,16 +29,22 @@ _EOS = object()
 class KettleEngine:
     def __init__(self, flow: Dataflow, chunk_rows: int = 65536,
                  queue_caches: int = 4,
-                 mt_threads: Optional[Dict[str, int]] = None):
+                 mt_threads: Optional[Dict[str, int]] = None,
+                 backend: Optional[str] = None):
         self.flow = flow
         self.chunk_rows = chunk_rows
         self.queue_caches = queue_caches
         self.mt_threads = mt_threads or {}
+        self.backend = backend      # None => REPRO_BACKEND env / "numpy"
 
     def run(self) -> EngineRun:
+        from ..core.backend import resolve_backend
         flow = self.flow
         flow.validate()
         flow.reset_stats()
+        bk = resolve_backend(self.backend)
+        for comp in flow.vertices.values():
+            comp.backend = bk
         inqs: Dict[str, "queue.Queue"] = {
             n: queue.Queue(maxsize=self.queue_caches) for n in flow.vertices}
         errors: List[BaseException] = []
@@ -127,4 +133,7 @@ class KettleEngine:
             copies=after["copies"] - before["copies"],
             bytes_copied=after["bytes_copied"] - before["bytes_copied"],
             engine="kettle",
+            backend=bk.name,
+            h2d_bytes=after["h2d_bytes"] - before["h2d_bytes"],
+            d2h_bytes=after["d2h_bytes"] - before["d2h_bytes"],
             activity_times={n: c.busy_time for n, c in flow.vertices.items()})
