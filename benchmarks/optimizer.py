@@ -1,0 +1,104 @@
+"""Cost-based adaptive optimizer (optimize_level=2) vs the static planner on
+the multi-tree SSB dataflows, under BOTH operator backends.
+
+For each flow x backend the section runs the streaming engine twice —
+``optimize_level=1`` (the paper's static partition/plan) and
+``optimize_level=2`` (calibration prefix, statistics-driven rewriting,
+measured re-partition/re-plan) — verifies the rewritten run's sink output is
+byte-identical to the static run, and reports walls, copies and the applied
+rewrites plus the before/after tree counts from the metadata store.
+
+Emits CSV:
+  optimizer.flow,backend,mode,wall_s,copies,trees,rewrites
+  optimizer.flow.speedup,backend,adaptive_vs_static,<x>
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (MetadataStore, OptimizeOptions, StreamingEngine,
+                        available_backends)
+from repro.etl import BUILDERS
+
+from .common import BENCH_REPEATS, BENCH_ROWS, ssb_data
+
+FLOWS = ("Q4.1", "Q4.1s")
+BACKENDS = ("numpy", "jax")
+NUM_SPLITS = 8
+CALIBRATION_ROWS = 65_536
+
+
+def _run(qname: str, data, backend: str, level: int):
+    qf = BUILDERS[qname](data)
+    md = MetadataStore()
+    run = StreamingEngine(qf.flow, OptimizeOptions(
+        num_splits=NUM_SPLITS, backend=backend, optimize_level=level,
+        calibration_rows=CALIBRATION_ROWS), metadata=md).run()
+    return run, qf.sink.result(), md
+
+
+def run(rows: int = None) -> list:
+    rows = rows or max(200_000, BENCH_ROWS // 4)
+    data = ssb_data(rows)
+    out = ["optimizer.flow,backend,mode,wall_s,copies,trees,rewrites"]
+    backends = [b for b in BACKENDS if b in available_backends()]
+    for flow in FLOWS:
+        for backend in backends:
+            best = {}
+            results = {}
+            for level, mode in ((1, "static"), (2, "adaptive")):
+                for _ in range(max(1, BENCH_REPEATS)):
+                    r, res, md = _run(flow, data, backend, level)
+                    if mode not in best or r.wall_time < best[mode].wall_time:
+                        best[mode] = r
+                        results[mode] = (res, md)
+                r = best[mode]
+                rewrites = ";".join(x["rule"] for x in r.rewrites) or "-"
+                out.append(f"optimizer.{flow},{backend},{mode},"
+                           f"{r.wall_time:.4f},{r.copies},{len(r.trees)},"
+                           f"{rewrites}")
+            # the rewritten flow must agree with the static flow exactly
+            static, _ = results["static"]
+            adaptive, _ = results["adaptive"]
+            assert set(static) == set(adaptive), "column sets differ"
+            for k in static:
+                np.testing.assert_array_equal(
+                    adaptive[k], static[k],
+                    err_msg=f"{flow}/{backend} adaptive-vs-static column {k}")
+            speedup = (best["static"].wall_time
+                       / max(best["adaptive"].wall_time, 1e-9))
+            out.append(f"optimizer.{flow}.speedup,{backend},"
+                       f"adaptive_vs_static,{speedup:.3f}")
+    return out
+
+
+def smoke(data) -> int:
+    """CI part: static-vs-adaptive byte equality on Q4.1/Q4.1s (current
+    default backend) — the rewrite-safety guard on the real SSB flows."""
+    import traceback
+    failures = 0
+    for flow in FLOWS:
+        try:
+            r_s, static, _ = _run(flow, data, backend=None, level=1)
+            r_a, adaptive, md = _run(flow, data, backend=None, level=2)
+            assert set(static) == set(adaptive), "column sets differ"
+            for k in static:
+                np.testing.assert_array_equal(
+                    adaptive[k], static[k],
+                    err_msg=f"{flow} adaptive column {k}")
+            rec = md.adaptive[next(iter(md.adaptive))]
+            assert rec["before"]["plan"]["pool_width"] >= 1
+            assert rec["after"]["plan"]["pool_width"] >= 1
+        except Exception:
+            traceback.print_exc()
+            failures += 1
+            print(f"smoke.optimizer.{flow},FAIL")
+            continue
+        rules = ";".join(x["rule"] for x in r_a.rewrites) or "-"
+        print(f"smoke.optimizer.{flow},rows_ok,trees={len(r_s.trees)}"
+              f"->{len(r_a.trees)},rewrites={rules}")
+    return failures
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -14,7 +14,9 @@ copies than the ordinary engine — a cheap guard for engine refactors.  It
 then repeats Q4.1/Q4.1s under BOTH operator backends (numpy and jax),
 enforcing engine-vs-oracle equality per backend and numpy-vs-jax agreement
 — the accelerated path's refactor guard.  Select a backend for the
-engine runs themselves with ``REPRO_BACKEND=jax``.
+engine runs themselves with ``REPRO_BACKEND=jax``.  Finally the optimizer
+part re-runs Q4.1/Q4.1s with ``optimize_level=2`` (cost-based rewriting)
+and enforces byte equality against the static plans.
 """
 from __future__ import annotations
 
@@ -24,8 +26,8 @@ import traceback
 
 from . import (backend_compare, fig12_pipeline_speedup, fig13_cpu_usage,
                fig14_multithreading, fig15_optimization,
-               fig16_fig17_vs_kettle, kernel_bench, roofline, streaming,
-               theorem1_accuracy)
+               fig16_fig17_vs_kettle, kernel_bench, optimizer, roofline,
+               streaming, theorem1_accuracy)
 
 SECTIONS = {
     "fig12": fig12_pipeline_speedup.run,
@@ -37,6 +39,7 @@ SECTIONS = {
     "kernels": kernel_bench.run,
     "streaming": streaming.run,
     "backend": backend_compare.run,
+    "optimizer": optimizer.run,
     "roofline": lambda: roofline.run("16x16") + roofline.run("2x16x16"),
 }
 
@@ -100,6 +103,9 @@ def smoke() -> int:
         # engine leg (REPRO_BACKEND=jax in the CI matrix) would repeat the
         # numpy leg's most expensive work for no added coverage
         print("smoke.backend,skipped,covered by the numpy leg")
+    # cost-based adaptive optimizer: rewritten-vs-static byte equality on the
+    # multi-tree flows under the active backend (optimizer.smoke)
+    failures += optimizer.smoke(data)
     print(f"smoke,{'FAIL' if failures else 'PASS'},{failures} failures")
     return 1 if failures else 0
 

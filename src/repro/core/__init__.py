@@ -15,6 +15,9 @@ from .executor import (ChannelGroup, ExecutionAborted, RunAbort,
                        SharedWorkerPool, StreamingExecutor, TaskFuture)
 from .graph import Dataflow
 from .metadata import MetadataStore
+from .optimizer import (ComponentStats, CostBasedOptimizer, FlowStatistics,
+                        Rewrite, measured_edge_bytes, run_calibration,
+                        suggest_pipeline_degree)
 from .partitioner import ExecutionTree, ExecutionTreeGraph, partition
 from .pipeline import TreePipeline
 from .planner import (PipelinePlan, RuntimePlan, backend_chunk_rows,
@@ -37,6 +40,8 @@ __all__ = [
     "ChannelGroup", "ExecutionAborted", "RunAbort", "SharedWorkerPool",
     "StreamingExecutor", "TaskFuture",
     "Dataflow", "MetadataStore",
+    "ComponentStats", "CostBasedOptimizer", "FlowStatistics", "Rewrite",
+    "measured_edge_bytes", "run_calibration", "suggest_pipeline_degree",
     "ExecutionTree", "ExecutionTreeGraph", "partition",
     "TreePipeline",
     "PipelinePlan", "RuntimePlan", "backend_chunk_rows", "build_plan",

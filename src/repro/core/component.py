@@ -57,6 +57,13 @@ class Component:
     #: row-synchronized (an explicit stage cut — see StageBoundary).  The
     #: streaming executor pipes splits across such a boundary as they arrive.
     tree_boundary: bool = False
+    #: True when the component maps each input row to exactly one output row
+    #: in the same position (adds/overwrites columns only — Lookup,
+    #: Expression, Converter, Project, StageBoundary).  Such components may be
+    #: hopped by a commuting Filter (core/optimizer.py); row-dropping
+    #: (Filter), row-reordering (Sort) and accumulate components must keep
+    #: False.
+    row_preserving: bool = False
 
     def __init__(self, name: str):
         self.name = name
@@ -122,6 +129,19 @@ class Component:
     def finish(self, state) -> SharedCache:
         """Consume accumulated caches, emit the result as one cache."""
         raise NotImplementedError
+
+    # --------------------------------------------------- column provenance
+    def produced_columns(self) -> Optional[frozenset]:
+        """Columns this component ADDS or OVERWRITES on the cache.  ``None``
+        means unknown — the cost-based optimizer then refuses any rewrite
+        that needs the answer.  Pure pass-throughs return an empty set."""
+        return None
+
+    def consumed_columns(self) -> Optional[frozenset]:
+        """Columns this component READS.  ``None`` means unknown (e.g. an
+        undeclared predicate lambda) — rewrites requiring disjointness with a
+        neighbour's outputs are refused."""
+        return None
 
     # ------------------------------------------------------------------ misc
     def est_output_bytes(self) -> Optional[int]:
@@ -222,6 +242,13 @@ class StageBoundary(Component):
     workers."""
 
     tree_boundary = True
+    row_preserving = True
 
     def _run(self, cache: SharedCache) -> List[SharedCache]:
         return [cache]
+
+    def produced_columns(self) -> frozenset:
+        return frozenset()
+
+    def consumed_columns(self) -> frozenset:
+        return frozenset()

@@ -49,6 +49,8 @@ class EngineRun:
     runtime_plan: Optional[RuntimePlan] = None
     streamed_edges: List[Tuple[int, int]] = field(default_factory=list)
     pool_stats: Dict[str, int] = field(default_factory=dict)
+    # adaptive path (optimize_level=2): graph rewrites applied before the run
+    rewrites: List[Dict[str, str]] = field(default_factory=list)
 
     def summary(self) -> str:
         s = (f"[{self.engine}/{self.backend}] wall={self.wall_time:.3f}s "
@@ -57,6 +59,8 @@ class EngineRun:
         if self.h2d_bytes or self.d2h_bytes:
             s += (f" h2d={self.h2d_bytes/1e6:.1f}MB"
                   f" d2h={self.d2h_bytes/1e6:.1f}MB")
+        if self.rewrites:
+            s += f" rewrites={len(self.rewrites)}"
         return s
 
 
@@ -153,6 +157,13 @@ class OptimizeOptions:
     cores: Optional[int] = None        # cap pool width at core count if set
     backend: Optional[str] = None      # operator backend ("numpy"/"jax");
     #                                    None => REPRO_BACKEND env / "numpy"
+    #: 1 = the paper's static framework (partition + plan once, up front);
+    #: 2 = cost-based adaptive: calibrate on a source prefix, rewrite the
+    #: flow from measured statistics (core/optimizer.py), then re-partition
+    #: and re-plan with observed per-edge bytes and activity times.
+    optimize_level: int = 1
+    #: source-prefix rows for the optimize_level=2 calibration run
+    calibration_rows: int = 4096
 
 
 class OptimizedEngine:
@@ -168,6 +179,52 @@ class OptimizedEngine:
     def engine_name(self) -> str:
         return "streaming" if self.options.streaming else "optimized"
 
+    # ---------------------------------------------------- adaptive planning
+    def _adaptive_rewrite(self, bk: Backend, opts: OptimizeOptions):
+        """optimize_level=2: calibrate, rewrite the flow from measured
+        statistics, re-partition + re-plan with observed costs.  Returns
+        (effective options, applied rewrites)."""
+        from .optimizer import (CostBasedOptimizer, measured_edge_bytes,
+                                run_calibration, suggest_pipeline_degree)
+        streaming = opts.streaming and opts.concurrent_trees
+        # BEFORE: the static partitioning + plan the paper's framework uses
+        before_tau = partition(self.flow)
+        before_plan = plan_runtime(
+            self.flow, before_tau,
+            num_splits=opts.num_splits,
+            m_prime=opts.pipeline_degree or opts.num_splits,
+            mt_threads=opts.mt_threads, cores=opts.cores,
+            pool_width=opts.pool_width,
+            channel_capacity=opts.channel_capacity,
+            streaming=streaming, backend=bk)
+        stats = run_calibration(self.flow, sample_rows=opts.calibration_rows,
+                                backend=bk)
+        optimizer = CostBasedOptimizer(self.flow, stats, streaming=streaming)
+        rewrites = optimizer.optimize()
+        _assign_backend(self.flow, bk)     # rewrites may add components
+        self.g_tau = partition(self.flow)
+        m_prime = (opts.pipeline_degree
+                   or suggest_pipeline_degree(stats, opts.num_splits,
+                                              cores=opts.cores))
+        self.runtime_plan = plan_runtime(
+            self.flow, self.g_tau,
+            num_splits=opts.num_splits, m_prime=m_prime,
+            mt_threads=opts.mt_threads, cores=opts.cores,
+            pool_width=opts.pool_width,
+            channel_capacity=opts.channel_capacity,
+            streaming=streaming, backend=bk,
+            edge_bytes_override=measured_edge_bytes(self.flow, self.g_tau,
+                                                    stats))
+        if self.metadata is not None:
+            self.metadata.register_statistics(self.flow, stats)
+            self.metadata.register_adaptive(
+                self.flow, stats=stats, rewrites=rewrites,
+                before_partition=before_tau, before_plan=before_plan,
+                after_partition=self.g_tau, after_plan=self.runtime_plan)
+        # the executor reads m' from the options: hand it a private copy so
+        # the caller's options object is never mutated
+        return replace(opts, pipeline_degree=m_prime), rewrites
+
     # ---------------------------------------------------------------- run
     def run(self) -> EngineRun:
         opts = self.options
@@ -175,17 +232,20 @@ class OptimizedEngine:
         self.flow.reset_stats()
         bk = resolve_backend(opts.backend)
         _assign_backend(self.flow, bk)      # before planning: est_output_bytes
-        self.g_tau = partition(self.flow)
-
-        m_prime = opts.pipeline_degree or opts.num_splits
-        self.runtime_plan = plan_runtime(
-            self.flow, self.g_tau,
-            num_splits=opts.num_splits, m_prime=m_prime,
-            mt_threads=opts.mt_threads, cores=opts.cores,
-            pool_width=opts.pool_width,
-            channel_capacity=opts.channel_capacity,
-            streaming=opts.streaming and opts.concurrent_trees,
-            backend=bk)
+        rewrites = []
+        if opts.optimize_level >= 2:
+            opts, rewrites = self._adaptive_rewrite(bk, opts)
+        else:
+            self.g_tau = partition(self.flow)
+            m_prime = opts.pipeline_degree or opts.num_splits
+            self.runtime_plan = plan_runtime(
+                self.flow, self.g_tau,
+                num_splits=opts.num_splits, m_prime=m_prime,
+                mt_threads=opts.mt_threads, cores=opts.cores,
+                pool_width=opts.pool_width,
+                channel_capacity=opts.channel_capacity,
+                streaming=opts.streaming and opts.concurrent_trees,
+                backend=bk)
         if self.metadata is not None:
             self.metadata.register_flow(self.flow)
             self.metadata.register_partitioning(self.flow, self.g_tau)
@@ -214,7 +274,8 @@ class OptimizedEngine:
             trees=[list(t.members) for t in self.g_tau.trees],
             runtime_plan=self.runtime_plan,
             streamed_edges=list(executor.streamed_edges),
-            pool_stats=pool_stats)
+            pool_stats=pool_stats,
+            rewrites=[r.spec() for r in rewrites])
 
 
 class StreamingEngine(OptimizedEngine):

@@ -47,6 +47,70 @@ class Dataflow:
                 self.connect(prev, c)
             prev = c
 
+    # ------------------------------------------------------------- surgery
+    #
+    # In-place graph rewriting used by the cost-based optimizer
+    # (core/optimizer.py).  Every method keeps the edge list and the
+    # succ/pred indices consistent by rebuilding the indices from the edge
+    # list — surgery is rare (a handful per run) so clarity wins over
+    # incremental updates.
+    def _reindex(self) -> None:
+        self._succ = {n: [] for n in self.vertices}
+        self._pred = {n: [] for n in self.vertices}
+        for u, v in self.edges:
+            self._succ[u].append(v)
+            self._pred[v].append(u)
+
+    def insert_between(self, u: str, v: str, comp: Component) -> Component:
+        """Splice ``comp`` onto the edge u -> v (u -> comp -> v)."""
+        if (u, v) not in self.edges:
+            raise KeyError(f"no edge {u!r} -> {v!r}")
+        self.add(comp)
+        self.edges[self.edges.index((u, v))] = (u, comp.name)
+        self.edges.append((comp.name, v))
+        self._reindex()
+        return comp
+
+    def remove_passthrough(self, name: str) -> Component:
+        """Remove a single-in / single-out component, reconnecting its
+        predecessor directly to its successor."""
+        if self.in_degree(name) != 1 or self.out_degree(name) != 1:
+            raise ValueError(
+                f"remove_passthrough({name!r}): needs in-degree 1 and "
+                f"out-degree 1, got {self.in_degree(name)}/{self.out_degree(name)}")
+        p, s = self._pred[name][0], self._succ[name][0]
+        comp = self.vertices.pop(name)
+        # splice IN PLACE: a predecessor's successor ORDER is semantic (the
+        # pipeline routes splitter output ports positionally), so the
+        # reconnect edge must take the removed edge's position, not be
+        # appended after p's other outbound edges
+        self.edges[self.edges.index((p, name))] = (p, s)
+        self.edges.remove((name, s))
+        self._reindex()
+        return comp
+
+    def swap_adjacent(self, u: str, v: str) -> None:
+        """Swap two chained components: ... -> u -> v -> ... becomes
+        ... -> v -> u -> ... .  Requires the pair to form a simple chain
+        segment (edge u->v, out-degree(u) == 1, in-degree(v) == 1); the
+        caller (optimizer) is responsible for SEMANTIC safety."""
+        if (u, v) not in self.edges:
+            raise KeyError(f"no edge {u!r} -> {v!r}")
+        if self.out_degree(u) != 1 or self.in_degree(v) != 1:
+            raise ValueError(
+                f"swap_adjacent({u!r}, {v!r}): not a simple chain segment")
+        new_edges = []
+        for (a, b) in self.edges:
+            if (a, b) == (u, v):
+                new_edges.append((v, u))
+            else:
+                # redirect u's inbound edges to v, v's outbound edges to u
+                a2 = u if a == v else a
+                b2 = v if b == u else b
+                new_edges.append((a2, b2))
+        self.edges = new_edges
+        self._reindex()
+
     # ------------------------------------------------------------- queries
     def succ(self, name: str) -> List[str]:
         return self._succ[name]

@@ -17,6 +17,12 @@ class MetadataStore:
         self.dataflows: Dict[str, dict] = {}
         self.partitions: Dict[str, dict] = {}
         self.runtime_plans: Dict[str, dict] = {}
+        #: per-flow observed component statistics (core/optimizer.py)
+        self.statistics: Dict[str, dict] = {}
+        #: per-flow adaptive-optimization record: statistics snapshot, the
+        #: applied rewrites, and the BEFORE (static) / AFTER (rewritten)
+        #: partitionings + runtime plans side by side
+        self.adaptive: Dict[str, dict] = {}
 
     # ----------------------------------------------------------- register
     def register_flow(self, flow: Dataflow) -> None:
@@ -40,6 +46,35 @@ class MetadataStore:
         """Record the executor sizing plan (pool width, per-edge channel
         depths + cache-size estimates) chosen for a run of ``flow``."""
         self.runtime_plans[flow.name] = plan.spec()
+
+    def register_statistics(self, flow: Dataflow, stats) -> None:
+        """Record the observed per-component statistics (rows in/out,
+        selectivity, per-row time, cache bytes) collected by a calibration
+        prefix or harvested from a prior run (``FlowStatistics.spec``)."""
+        self.statistics[flow.name] = stats.spec()
+
+    @staticmethod
+    def _partition_spec(g_tau) -> dict:
+        return {
+            "trees": [{"id": t.tree_id, "root": t.root, "members": t.members}
+                      for t in g_tau.trees],
+            "edges": [list(e) for e in g_tau.edges],
+        }
+
+    def register_adaptive(self, flow: Dataflow, *, stats, rewrites,
+                          before_partition, before_plan,
+                          after_partition, after_plan) -> None:
+        """Record one adaptive (optimize_level=2) planning round: what was
+        measured, which rewrites were applied, and the static-vs-rewritten
+        partitioning + runtime plan side by side."""
+        self.adaptive[flow.name] = {
+            "statistics": stats.spec(),
+            "rewrites": [r.spec() for r in rewrites],
+            "before": {"partition": self._partition_spec(before_partition),
+                       "plan": before_plan.spec()},
+            "after": {"partition": self._partition_spec(after_partition),
+                      "plan": after_plan.spec()},
+        }
 
     def type_of(self, component_name: str) -> Optional[str]:
         spec = self.component_specs.get(component_name)
@@ -95,7 +130,9 @@ class MetadataStore:
         return json.dumps({"components": self.component_specs,
                            "dataflows": self.dataflows,
                            "partitions": self.partitions,
-                           "runtime_plans": self.runtime_plans}, indent=2)
+                           "runtime_plans": self.runtime_plans,
+                           "statistics": self.statistics,
+                           "adaptive": self.adaptive}, indent=2)
 
     @classmethod
     def from_json(cls, text: str) -> "MetadataStore":
@@ -105,4 +142,6 @@ class MetadataStore:
         store.dataflows = d.get("dataflows", {})
         store.partitions = d.get("partitions", {})
         store.runtime_plans = d.get("runtime_plans", {})
+        store.statistics = d.get("statistics", {})
+        store.adaptive = d.get("adaptive", {})
         return store

@@ -57,10 +57,18 @@ class PipelinePlan:
 
 def theorem1_m_star(c: float, lam: float, N: float, t0: float,
                     m_max: Optional[int] = None) -> float:
-    """m* = sqrt((c - lambda*N)/t0), clamped to [1, m_max] (paper: 1<=m<=|Sigma|)."""
+    """m* = sqrt((c - lambda*N)/t0), clamped to [1, m_max] (paper: 1<=m<=|Sigma|).
+
+    Degenerate calibration statistics get explicit fallbacks instead of a
+    division by zero or a NaN plan: non-finite inputs -> 1 (serial); zero
+    per-activity time t0 with no net work (c <= lambda*N) -> 1; zero t0 with
+    real work -> the cost model says "as parallel as allowed" -> m_max."""
+    if not all(math.isfinite(x) for x in (c, lam, N, t0)):
+        return 1.0
+    net = c - lam * N
     if t0 <= 0:
-        return float(m_max or 1)
-    inner = max(c - lam * N, 0.0) / t0
+        return 1.0 if net <= 0 else float(m_max or 1)
+    inner = max(net, 0.0) / t0
     m = math.sqrt(inner)
     m = max(1.0, m)
     if m_max is not None:
@@ -84,6 +92,10 @@ def build_plan(activity_times: Dict[str, float],
         sample_rows; differs when upstream filters drop rows).
     """
     names = list(activity_times.keys())
+    if not names:
+        # degenerate calibration (no activities measured): serial plan
+        return PipelinePlan(n=0, t0=0.0, c=0.0, lam=0.0, N=0,
+                            staggering="", T_s=0.0, m_star=1.0)
     times = np.array([activity_times[k] for k in names], dtype=np.float64)
     n = len(names)
     T_s = float(times.sum())
@@ -97,7 +109,7 @@ def build_plan(activity_times: Dict[str, float],
     N = int(round(N_s * scale))
     # line 4: lambda from the staggering activity's per-split time
     t_j_split = times[j] / max(m_prime, 1)
-    lam = max(t_j_split - t0, 1e-12) * m_prime / max(N_s, 1)
+    lam = max(t_j_split - t0, 1e-12) * max(m_prime, 1) / max(N_s, 1)
     m_star = theorem1_m_star(c, lam, N, t0, m_max=full_rows)      # line 5
     return PipelinePlan(n=n, t0=t0, c=c, lam=lam, N=N, staggering=staggering,
                         activity_times=dict(activity_times), T_s=T_s,
@@ -112,6 +124,8 @@ def choose_degree(plan: PipelinePlan, cores: Optional[int] = None,
     core count (Fig 12/13).  When cache-size metadata is available
     (``split_bytes``), the degree is additionally capped so m' in-flight
     shared caches fit the memory budget."""
+    if not math.isfinite(plan.m_star):
+        return 1                    # degenerate plan: explicit serial fallback
     m = int(round(plan.m_star))
     if cores is not None:
         m = min(m, max(1, cores))
@@ -234,14 +248,21 @@ def plan_runtime(flow: Dataflow, g_tau: ExecutionTreeGraph, *,
                  channel_capacity: Optional[int] = None,
                  memory_budget_bytes: int = DEFAULT_CHANNEL_BUDGET_BYTES,
                  streaming: bool = False,
-                 backend=None) -> RuntimePlan:
+                 backend=None,
+                 edge_bytes_override: Optional[Dict[Tuple[int, int], int]]
+                 = None) -> RuntimePlan:
     """Build the executor sizing plan for one run.  Explicit ``pool_width`` /
     ``channel_capacity`` overrides win; otherwise widths come from the
     schedule's widest wave (plus streamed-boundary overlap when
     ``streaming``) and depths from cache-size metadata.  When an operator
     ``backend`` is given, source splits are batched to its preferred size
     (``RuntimePlan.chunk_rows``) and edge-byte estimates already reflect its
-    dtype widths via ``Component.est_output_bytes``."""
+    dtype widths via ``Component.est_output_bytes``.
+
+    ``edge_bytes_override`` replaces the static ``est_output_bytes`` guesses
+    with MEASURED per-edge bytes (``optimizer.measured_edge_bytes``) — the
+    adaptive path where channel depths reflect observed attenuation instead
+    of the conservative no-attenuation bound."""
     from .partitioner import streamable_tree_ids
     from .scheduler import plan_schedule     # local import (module cycle)
     wave_width = max((len(w) for w in plan_schedule(g_tau)), default=1)
@@ -251,7 +272,8 @@ def plan_runtime(flow: Dataflow, g_tau: ExecutionTreeGraph, *,
         wave_width += len(streamable_tree_ids(flow, g_tau))
     width = pool_width if pool_width is not None else choose_pool_width(
         len(g_tau.trees), m_prime, mt_threads, wave_width, cores=cores)
-    edge_bytes = estimate_edge_bytes(flow, g_tau)
+    edge_bytes = (dict(edge_bytes_override) if edge_bytes_override is not None
+                  else estimate_edge_bytes(flow, g_tau))
     depths: Dict[Tuple[int, int], int] = {}
     for edge, nbytes in edge_bytes.items():
         depths[edge] = (channel_capacity if channel_capacity is not None

@@ -87,12 +87,25 @@ class RowSyncMT(Component):
 
 
 class Filter(RowSyncMT):
-    """Keep rows where predicate(cache, rows) is True.  In-place compaction."""
+    """Keep rows where predicate(cache, rows) is True.  In-place compaction.
+
+    ``reads`` optionally declares the columns the predicate touches; the
+    cost-based optimizer may then commute this filter ahead of adjacent
+    row-preserving components whose outputs are disjoint from the read set.
+    An undeclared (None) read set refuses every commute."""
 
     def __init__(self, name: str,
-                 predicate: Callable[[SharedCache, slice], np.ndarray]):
+                 predicate: Callable[[SharedCache, slice], np.ndarray],
+                 reads: Optional[Sequence[str]] = None):
         super().__init__(name)
         self.predicate = predicate
+        self.reads = None if reads is None else frozenset(reads)
+
+    def produced_columns(self) -> frozenset:
+        return frozenset()          # drops rows, never adds columns
+
+    def consumed_columns(self) -> Optional[frozenset]:
+        return self.reads
 
     def process_range(self, cache: SharedCache, rows: slice) -> dict:
         return {"__mask__": self.get_backend().filter_mask(self.predicate,
@@ -134,6 +147,8 @@ class Lookup(RowSyncMT):
     """Join with a dimension table; unmatched rows get ``default`` (-1) in
     every returned column — downstream Filter drops them (paper §5.1)."""
 
+    row_preserving = True
+
     def __init__(self, name: str, dim: DimTable, key_col: str,
                  return_cols: Dict[str, str], default: int = -1,
                  matched_flag: Optional[str] = None):
@@ -143,6 +158,15 @@ class Lookup(RowSyncMT):
         self.return_cols = return_cols       # out_name -> dim payload col
         self.default = default
         self.matched_flag = matched_flag     # optional bool col with match bit
+
+    def produced_columns(self) -> frozenset:
+        out = set(self.return_cols)
+        if self.matched_flag:
+            out.add(self.matched_flag)
+        return frozenset(out)
+
+    def consumed_columns(self) -> frozenset:
+        return frozenset({self.key_col})
 
     def process_range(self, cache: SharedCache, rows: slice) -> dict:
         bk = self.get_backend()
@@ -166,13 +190,26 @@ class Lookup(RowSyncMT):
 
 
 class Expression(RowSyncMT):
-    """Compute a new column from existing ones (paper's component 8)."""
+    """Compute a new column from existing ones (paper's component 8).
+
+    ``reads`` optionally declares the input columns — provenance metadata for
+    the cost-based optimizer's commute/fusion rules."""
+
+    row_preserving = True
 
     def __init__(self, name: str, out_col: str,
-                 fn: Callable[[SharedCache, slice], np.ndarray]):
+                 fn: Callable[[SharedCache, slice], np.ndarray],
+                 reads: Optional[Sequence[str]] = None):
         super().__init__(name)
         self.out_col = out_col
         self.fn = fn
+        self.reads = None if reads is None else frozenset(reads)
+
+    def produced_columns(self) -> frozenset:
+        return frozenset({self.out_col})
+
+    def consumed_columns(self) -> Optional[frozenset]:
+        return self.reads
 
     def process_range(self, cache: SharedCache, rows: slice) -> dict:
         return {self.out_col: self.get_backend().eval_expression(self.fn,
@@ -185,13 +222,66 @@ class Expression(RowSyncMT):
         return [cache]
 
 
+class FusedExpression(Component):
+    """Several Expression activities collapsed into ONE pipeline activity by
+    the cost-based optimizer (expression fusion).  The sub-expressions run
+    sequentially against the shared cache, each output column visible to the
+    next — identical results, one activity's worth of per-split overhead
+    (the t0 of Theorem 1) instead of several."""
+
+    row_preserving = True
+
+    def __init__(self, name: str,
+                 exprs: Sequence[Tuple[str, Callable]],
+                 reads: Optional[frozenset] = None):
+        super().__init__(name)
+        self.exprs = list(exprs)             # [(out_col, fn), ...] in order
+        self.reads = reads                   # None => unknown
+
+    @classmethod
+    def fuse(cls, a: Component, b: Component) -> "FusedExpression":
+        """Fuse two adjacent Expression / FusedExpression components
+        (``a`` upstream of ``b``), combining their provenance."""
+        def parts(c):
+            return c.exprs if isinstance(c, FusedExpression) \
+                else [(c.out_col, c.fn)]
+        reads = None
+        ra, rb = a.consumed_columns(), b.consumed_columns()
+        if ra is not None and rb is not None:
+            # b's reads of a's outputs are internal to the fused activity
+            reads = ra | (rb - a.produced_columns())
+        return cls(f"fused({a.name}+{b.name})", parts(a) + parts(b),
+                   reads=reads)
+
+    def produced_columns(self) -> frozenset:
+        return frozenset(out for out, _ in self.exprs)
+
+    def consumed_columns(self) -> Optional[frozenset]:
+        return self.reads
+
+    def _run(self, cache: SharedCache) -> List[SharedCache]:
+        bk = self.get_backend()
+        for out_col, fn in self.exprs:
+            cache.add_column(out_col,
+                             bk.eval_expression(fn, cache, slice(0, cache.n)))
+        return [cache]
+
+
 class Project(Component):
     """Keep a subset of columns.  With the shared caching scheme this is a
     metadata-only operation (no rows move)."""
 
+    row_preserving = True
+
     def __init__(self, name: str, keep: Sequence[str]):
         super().__init__(name)
         self.keep = list(keep)
+
+    def produced_columns(self) -> frozenset:
+        return frozenset()           # only removes columns
+
+    def consumed_columns(self) -> frozenset:
+        return frozenset(self.keep)
 
     def _run(self, cache: SharedCache) -> List[SharedCache]:
         cache.keep_columns(self.keep)
@@ -201,9 +291,19 @@ class Project(Component):
 class Converter(Component):
     """Data format converter (row-synchronized)."""
 
+    row_preserving = True
+
     def __init__(self, name: str, conversions: Dict[str, np.dtype]):
         super().__init__(name)
         self.conversions = conversions
+
+    def produced_columns(self) -> frozenset:
+        # overwrites the converted columns: a filter reading them must NOT
+        # hop this component (it would see the pre-conversion dtype)
+        return frozenset(self.conversions)
+
+    def consumed_columns(self) -> frozenset:
+        return frozenset(self.conversions)
 
     def _run(self, cache: SharedCache) -> List[SharedCache]:
         for col, dt in self.conversions.items():

@@ -73,10 +73,12 @@ def build_q1(data: SSBData) -> QueryFlow:
         c.col("d_ok")[r]
         & (c.col("d_year")[r] == 1993)
         & (c.col("lo_discount")[r] >= 1) & (c.col("lo_discount")[r] <= 3)
-        & (c.col("lo_quantity")[r] < 25)))
+        & (c.col("lo_quantity")[r] < 25)),
+        reads=["d_ok", "d_year", "lo_discount", "lo_quantity"])
     expr = Expression("revenue_expr", "rev",
                       lambda c, r: c.col("lo_extendedprice")[r]
-                      * c.col("lo_discount")[r])
+                      * c.col("lo_discount")[r],
+                      reads=["lo_extendedprice", "lo_discount"])
     agg = Aggregate("sum_revenue", [], {"revenue": ("rev", "sum")})
     sink = CollectSink("sink")
     flow.chain(src, lk_date, filt, expr, agg, sink)
@@ -116,7 +118,8 @@ def build_q2(data: SSBData) -> QueryFlow:
                      {"d_year": "d_year"})
     filt = Filter("filter", lambda c, r: (
         (c.col("p_brand1")[r] >= 0) & (c.col("s_nation")[r] >= 0)
-        & (c.col("d_year")[r] >= 0)))
+        & (c.col("d_year")[r] >= 0)),
+        reads=["p_brand1", "s_nation", "d_year"])
     agg = Aggregate("sum_revenue", ["d_year", "p_brand1"],
                     {"revenue": ("lo_revenue", "sum")})
     srt = Sort("sort", ["d_year", "p_brand1"])
@@ -159,7 +162,8 @@ def build_q3(data: SSBData) -> QueryFlow:
                      {"d_year": "d_year"})
     filt = Filter("filter", lambda c, r: (
         (c.col("c_nation")[r] >= 0) & (c.col("s_nation")[r] >= 0)
-        & (c.col("d_year")[r] >= 1992) & (c.col("d_year")[r] <= 1997)))
+        & (c.col("d_year")[r] >= 1992) & (c.col("d_year")[r] <= 1997)),
+        reads=["c_nation", "s_nation", "d_year"])
     agg = Aggregate("sum_revenue", ["c_nation", "s_nation", "d_year"],
                     {"revenue": ("lo_revenue", "sum")})
     srt = Sort("sort", ["d_year", "c_nation", "s_nation"])
@@ -216,12 +220,14 @@ def build_q4(data: SSBData, staged: bool = False) -> QueryFlow:
                      {"d_year": "d_year"})                            # 5
     filt = Filter("filter_unmatched", lambda c, r: (                   # 6
         (c.col("c_nation")[r] >= 0) & (c.col("s_nation")[r] >= 0)
-        & (c.col("p_mfgr")[r] >= 0) & (c.col("d_year")[r] >= 0)))
+        & (c.col("p_mfgr")[r] >= 0) & (c.col("d_year")[r] >= 0)),
+        reads=["c_nation", "s_nation", "p_mfgr", "d_year"])
     proj = Project("project", ["d_year", "c_nation",
                                "lo_revenue", "lo_supplycost"])        # 7
     expr = Expression("profit_expr", "profit",
                       lambda c, r: c.col("lo_revenue")[r]
-                      - c.col("lo_supplycost")[r])                    # 8
+                      - c.col("lo_supplycost")[r],
+                      reads=["lo_revenue", "lo_supplycost"])          # 8
     agg = Aggregate("groupby_sum", ["d_year", "c_nation"],
                     {"profit": ("profit", "sum")})                    # 9
     srt = Sort("sort", ["d_year", "c_nation"])                        # 10

@@ -158,3 +158,124 @@ def test_partition_invariants(flow):
     assert sorted(order) == sorted(t.tree_id for t in g.trees)
     for a, b in g.edges:
         assert a != b
+
+
+# ---------------------------------------------------------------------------
+#  edge-case shapes: diamonds, multi-source trees, single-component flows —
+#  what the optimizer's random generator produces and re-cuts
+# ---------------------------------------------------------------------------
+from repro.core.component import StageBoundary
+from repro.core.partitioner import streamable_tree_ids
+from repro.core.planner import plan_runtime
+
+
+def test_diamond_flow_partition():
+    """src fans out to two row-sync branches that reconverge at a semi-block
+    union: one source tree holds BOTH branches; the union roots its own tree
+    with a single (deduplicated) inter-tree edge."""
+    f = Dataflow("diamond")
+    src = f.add(_Src("src"))
+    a = f.add(_Row("a"))
+    b = f.add(_Row("b"))
+    uni = f.add(_Semi("union"))
+    sink = f.add(_Sink("sink"))
+    f.connect(src, a)
+    f.connect(src, b)
+    f.connect(a, uni)
+    f.connect(b, uni)
+    f.connect(uni, sink)
+    g = partition(f)
+    assert len(g.trees) == 2
+    by_root = {t.root: t for t in g.trees}
+    assert set(by_root["src"].members) == {"src", "a", "b"}
+    assert set(by_root["union"].members) == {"union", "sink"}
+    # both dataflow edges a->union, b->union collapse to ONE tree edge
+    assert g.edges == [(by_root["src"].tree_id, by_root["union"].tree_id)]
+    # the union accumulates (semi-block): never streamable
+    assert streamable_tree_ids(f, g) == set()
+
+
+def test_diamond_reconverging_on_row_sync_is_rejected():
+    """Only semi-block components may merge multiple upstreams (paper §3):
+    a diamond closing on a row-sync boundary must fail validation."""
+    f = Dataflow("bad-diamond")
+    src = f.add(_Src("src"))
+    a = f.add(_Row("a"))
+    b = f.add(_Row("b"))
+    cut = f.add(StageBoundary("cut"))
+    f.connect(src, a)
+    f.connect(src, b)
+    f.connect(a, cut)
+    f.connect(b, cut)
+    with pytest.raises(ValueError, match="in-degree 2"):
+        partition(f)
+
+
+def test_multi_source_trees():
+    """Two sources feeding one union: two source trees, two inter-tree
+    edges into the union's tree."""
+    f = Dataflow("multi-src")
+    s1 = f.add(_Src("s1"))
+    s2 = f.add(_Src("s2"))
+    r1 = f.add(_Row("r1"))
+    uni = f.add(_Semi("union"))
+    sink = f.add(_Sink("sink"))
+    f.connect(s1, r1)
+    f.connect(r1, uni)
+    f.connect(s2, uni)
+    f.connect(uni, sink)
+    g = partition(f)
+    assert len(g.trees) == 3
+    by_root = {t.root: t for t in g.trees}
+    u = by_root["union"].tree_id
+    assert set(g.edges) == {(by_root["s1"].tree_id, u),
+                            (by_root["s2"].tree_id, u)}
+    assert g.topo_tree_order()[-1] == u
+
+
+def test_boundary_downstream_of_union_streamable_unless_order_sensitive():
+    """A stage-boundary tree fed by exactly one inter-tree edge (here: the
+    union's output) is streamable; an order-sensitive member disables it."""
+    f = Dataflow("two-feeds")
+    s1 = f.add(_Src("s1"))
+    s2 = f.add(_Src("s2"))
+    uni = f.add(_Semi("union"))
+    cut = f.add(StageBoundary("cut"))
+    sink = f.add(_Sink("sink"))
+    f.connect(s1, uni)
+    f.connect(s2, uni)
+    f.connect(uni, cut)
+    f.connect(cut, sink)
+    g = partition(f)
+    by_root = {t.root: t for t in g.trees}
+    # exactly one inbound edge targeting the root => streamable
+    assert streamable_tree_ids(f, g) == {by_root["cut"].tree_id}
+    # but an order-sensitive member disables it
+    f.component("sink").order_sensitive = True
+    assert streamable_tree_ids(f, g) == set()
+
+
+def test_single_component_flow():
+    """A lone source partitions into one single-member tree with no edges,
+    and the runtime planner still produces a sane plan for it."""
+    f = Dataflow("lone")
+    f.add(_Src("src"))
+    g = partition(f)
+    assert len(g.trees) == 1
+    assert g.trees[0].members == ["src"]
+    assert g.edges == []
+    assert streamable_tree_ids(f, g) == set()
+    plan = plan_runtime(f, g, num_splits=4, m_prime=4)
+    assert plan.pool_width >= 1
+    assert plan.channel_depth == {}
+
+
+def test_two_component_source_sink_flow():
+    f = Dataflow("pair")
+    src = f.add(_Src("src"))
+    sink = f.add(_Sink("sink"))
+    f.connect(src, sink)
+    g = partition(f)
+    assert len(g.trees) == 1
+    assert g.trees[0].members == ["src", "sink"]
+    assert streamable_tree_ids(f, g) == set()

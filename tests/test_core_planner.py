@@ -90,3 +90,53 @@ def test_choose_degree_caps():
                         staggering="a0", m_star=1000.0)
     assert choose_degree(plan, cores=8) == 8
     assert choose_degree(plan, cores=None, cap=64) == 64
+
+
+# ---------------------------------------------------------------------------
+#  degenerate calibration statistics: explicit fallbacks, not div-by-zero
+# ---------------------------------------------------------------------------
+def test_theorem1_degenerate_inputs():
+    # non-finite measurements -> serial fallback
+    assert theorem1_m_star(float("nan"), 0.1, 100, 0.1) == 1.0
+    assert theorem1_m_star(float("inf"), 0.1, 100, 0.1) == 1.0
+    assert theorem1_m_star(100.0, float("nan"), 100, 0.1) == 1.0
+    # zero per-activity time with NO net work -> serial
+    assert theorem1_m_star(0.0, 0.0, 0, 0.0) == 1.0
+    assert theorem1_m_star(1.0, 1.0, 10, 0.0) == 1.0      # c <= lam*N
+    # zero per-activity time WITH net work -> as parallel as allowed
+    assert theorem1_m_star(10.0, 0.0, 0, 0.0, m_max=16) == 16.0
+    assert theorem1_m_star(10.0, 0.0, 0, 0.0) == 1.0      # no m_max given
+
+
+def test_build_plan_empty_activities():
+    plan = build_plan({}, misc_total=0.0, sample_rows=0, full_rows=0,
+                      m_prime=0)
+    assert plan.n == 0
+    assert plan.m_star == 1.0
+    assert plan.predict_T_s() == 0.0
+
+
+def test_build_plan_zero_rows_and_single_split():
+    # zero-row sample / zero activity time / m'=1: finite plan, no crash
+    plan = build_plan({"a": 0.0, "b": 0.0}, misc_total=0.0, sample_rows=0,
+                      full_rows=0, m_prime=1)
+    assert plan.m_star >= 1.0
+    assert np.isfinite(plan.m_star)
+    assert choose_degree(plan, cores=4) >= 1
+
+
+def test_choose_degree_non_finite_m_star():
+    plan = PipelinePlan(n=2, t0=0.0, c=float("inf"), lam=0.0, N=0,
+                        staggering="a", m_star=float("inf"))
+    assert choose_degree(plan) == 1
+    plan_nan = PipelinePlan(n=2, t0=0.0, c=0.0, lam=0.0, N=0,
+                            staggering="a", m_star=float("nan"))
+    assert choose_degree(plan_nan) == 1
+
+
+def test_choose_degree_zero_split_bytes():
+    plan = PipelinePlan(n=2, t0=0.01, c=10.0, lam=1e-6, N=100,
+                        staggering="a", m_star=8.0)
+    # zero split_bytes must not divide by zero; budget cap simply inactive
+    assert choose_degree(plan, split_bytes=0,
+                         memory_budget_bytes=1 << 20) == 8

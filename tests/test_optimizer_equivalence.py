@@ -1,0 +1,215 @@
+"""Property-based flow-equivalence harness for the cost-based optimizer.
+
+A hypothesis-driven generator draws random single-source dataflow chains of
+Filter / Lookup / Expression / Aggregate / Sort components (plus explicit
+StageBoundary cuts) over synthetic columnar caches, then asserts that
+running the flow with ``optimize_level=2`` — calibration, statistics-driven
+graph rewriting, measured re-partitioning/re-planning — produces
+BYTE-IDENTICAL sink output (same columns, same dtypes, same rows, same
+order) as the untouched static flow.
+
+The engine backend follows ``REPRO_BACKEND`` (the CI matrix runs this file
+under both ``numpy`` and ``jax``), so every rewrite is exercised against
+both operator backends.  ``REPRO_OPTEQ_EXAMPLES`` scales the example count
+(default 100 per engine property, per the acceptance bar).
+"""
+import os
+
+import numpy as np
+import pytest
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:        # pragma: no cover — env without the `test` extra
+    from _hypothesis_compat import given, settings, st
+
+from repro.core import (OptimizeOptions, OptimizedEngine, StreamingEngine,
+                        partition)
+from repro.core.component import StageBoundary
+from repro.etl.components import (Aggregate, ArraySource, CollectSink,
+                                  DimTable, Expression, Filter, Lookup, Sort)
+
+N_EXAMPLES = int(os.environ.get("REPRO_OPTEQ_EXAMPLES", "100"))
+ROWS = 400                 # fixed size keeps jitted-kernel shapes stable
+KEYSPACE = 40
+
+
+# ---------------------------------------------------------------------------
+#  spec -> flow builder (rebuildable: engines mutate flows and sinks)
+# ---------------------------------------------------------------------------
+def build_flow(spec):
+    """Construct a fresh Dataflow + sink from a drawn spec.  Deterministic:
+    the same spec always builds the same flow over the same data."""
+    seed, num_splits, ops = spec
+    r = np.random.RandomState(seed)
+    cols = {
+        "k0": r.randint(1, KEYSPACE + 1, ROWS).astype(np.int64),
+        "k1": r.randint(1, KEYSPACE + 1, ROWS).astype(np.int64),
+        "g": r.randint(0, 4, ROWS).astype(np.int64),
+        "v0": r.randint(0, 1000, ROWS).astype(np.int64),
+        "v1": r.randint(-50, 50, ROWS).astype(np.int64),
+    }
+    from repro.core import Dataflow
+    flow = Dataflow(f"rand-{seed}")
+    comps = [ArraySource("src", cols)]
+    avail = list(cols.keys())
+
+    for i, op in enumerate(ops):
+        kind = op[0]
+        if kind == "filter":
+            col_i, thresh, declared = op[1:]
+            col = avail[col_i % len(avail)]
+            reads = [col] if declared else None
+            comps.append(Filter(
+                f"filter{i}",
+                # default-arg binding: each lambda captures ITS column
+                lambda c, rows, col=col, t=thresh: c.col(col)[rows] % 97 < t,
+                reads=reads))
+        elif kind == "lookup":
+            dim_seed, key_i, drop = op[1:]
+            keyish = [c for c in avail if c.startswith("k")] or avail
+            key = keyish[key_i % len(keyish)]
+            rd = np.random.RandomState(dim_seed)
+            nk = KEYSPACE if not drop else KEYSPACE // 2   # some unmatched
+            dim = DimTable(np.arange(1, nk + 1, dtype=np.int64),
+                           {"pay": rd.randint(0, 9, nk).astype(np.int64)})
+            out = f"l{i}"
+            comps.append(Lookup(f"lookup{i}", dim, key, {out: "pay"}))
+            avail.append(out)
+        elif kind == "expr":
+            a_i, b_i, mul = op[1:]
+            a, b = avail[a_i % len(avail)], avail[b_i % len(avail)]
+            out = f"e{i}"
+            if mul:
+                fn = (lambda c, rows, a=a, b=b:
+                      c.col(a)[rows] * (c.col(b)[rows] % 7 + 1))
+            else:
+                fn = (lambda c, rows, a=a, b=b:
+                      c.col(a)[rows] + c.col(b)[rows])
+            comps.append(Expression(f"expr{i}", out, fn, reads=[a, b]))
+            avail.append(out)
+        elif kind == "boundary":
+            comps.append(StageBoundary(f"cut{i}"))
+        elif kind == "agg":
+            g_i, v_i, agg_op = op[1:]
+            group = avail[g_i % len(avail)]
+            val = avail[v_i % len(avail)]
+            comps.append(Aggregate(f"agg{i}", [group],
+                                   {f"a{i}": (val, agg_op)}))
+            avail = [group, f"a{i}"]
+        elif kind == "sort":
+            by_i = op[1]
+            comps.append(Sort(f"sort{i}", [avail[by_i % len(avail)]]))
+    sink = CollectSink("sink")
+    comps.append(sink)
+    flow.chain(*comps)
+    return flow, sink
+
+
+@st.composite
+def flow_spec(draw):
+    seed = draw(st.integers(0, 10_000))
+    num_splits = draw(st.sampled_from([1, 2, 4]))
+    n_ops = draw(st.integers(1, 6))
+    ops = []
+    for _ in range(n_ops):
+        kind = draw(st.sampled_from(
+            ["filter", "lookup", "lookup", "expr", "expr", "boundary",
+             "agg", "sort"]))
+        if kind == "filter":
+            ops.append(("filter", draw(st.integers(0, 9)),
+                        draw(st.integers(10, 90)),
+                        draw(st.sampled_from([True, True, False]))))
+        elif kind == "lookup":
+            ops.append(("lookup", draw(st.integers(0, 1000)),
+                        draw(st.integers(0, 3)),
+                        draw(st.sampled_from([True, False]))))
+        elif kind == "expr":
+            ops.append(("expr", draw(st.integers(0, 9)),
+                        draw(st.integers(0, 9)),
+                        draw(st.sampled_from([True, False]))))
+        elif kind == "boundary":
+            ops.append(("boundary",))
+        elif kind == "agg":
+            ops.append(("agg", draw(st.integers(0, 9)),
+                        draw(st.integers(0, 9)),
+                        draw(st.sampled_from(["sum", "min", "max", "count"]))))
+        else:
+            ops.append(("sort", draw(st.integers(0, 9))))
+    return (seed, num_splits, ops)
+
+
+# ---------------------------------------------------------------------------
+#  the property
+# ---------------------------------------------------------------------------
+def _assert_byte_identical(spec, engine_cls):
+    _, num_splits, _ = spec
+    flow_s, sink_s = build_flow(spec)
+    engine_cls(flow_s, OptimizeOptions(num_splits=num_splits)).run()
+    static = sink_s.result()
+
+    flow_a, sink_a = build_flow(spec)
+    run = engine_cls(flow_a, OptimizeOptions(num_splits=num_splits,
+                                             optimize_level=2,
+                                             calibration_rows=128)).run()
+    adaptive = sink_a.result()
+
+    assert set(adaptive.keys()) == set(static.keys()), \
+        f"column sets differ after rewrites {run.rewrites}"
+    for k in static:
+        assert adaptive[k].dtype == static[k].dtype, \
+            f"dtype of {k} changed: {run.rewrites}"
+        np.testing.assert_array_equal(
+            adaptive[k], static[k],
+            err_msg=f"column {k} differs after rewrites {run.rewrites} "
+                    f"(spec={spec})")
+    # the rewritten flow must still be a valid partitionable dataflow
+    partition(flow_a)
+
+
+@given(flow_spec())
+@settings(max_examples=N_EXAMPLES, deadline=None)
+def test_rewritten_flow_equivalence_streaming(spec):
+    """optimize_level=2 (calibrate + rewrite + re-plan) on the STREAMING
+    engine is byte-identical to the static flow, for every generated DAG."""
+    _assert_byte_identical(spec, StreamingEngine)
+
+
+@given(flow_spec())
+@settings(max_examples=max(N_EXAMPLES // 4, 10), deadline=None)
+def test_rewritten_flow_equivalence_optimized(spec):
+    """Same property on the non-streaming OptimizedEngine (exercises the
+    remove-boundary path: cuts never pay off without streaming)."""
+    _assert_byte_identical(spec, OptimizedEngine)
+
+
+# ---------------------------------------------------------------------------
+#  deterministic regressions: shapes the generator rarely lands on exactly
+# ---------------------------------------------------------------------------
+def test_equivalence_all_rules_fire_together():
+    """One flow where commute + fusion + boundary-insert can all apply."""
+    spec = (7, 4, [("lookup", 3, 0, True),
+                   ("expr", 3, 4, False),
+                   ("expr", 5, 0, True),
+                   ("filter", 4, 30, True),
+                   ("agg", 2, 5, "sum"),
+                   ("sort", 0)])
+    _assert_byte_identical(spec, StreamingEngine)
+
+
+def test_equivalence_boundary_only_chain():
+    spec = (11, 2, [("boundary",), ("expr", 0, 3, True), ("boundary",)])
+    _assert_byte_identical(spec, StreamingEngine)
+
+
+def test_equivalence_filter_drops_everything():
+    # threshold 10 over % 97 keeps ~10%; two stacked filters can drop all
+    spec = (3, 2, [("filter", 3, 10, True), ("filter", 4, 10, True),
+                   ("agg", 1, 2, "count")])
+    _assert_byte_identical(spec, StreamingEngine)
+
+
+def test_equivalence_single_component_flow():
+    spec = (5, 1, [])
+    _assert_byte_identical(spec, StreamingEngine)

@@ -1,0 +1,529 @@
+"""Cost-based optimizer (core/optimizer.py): each rewrite rule in isolation
+— the positive case AND the refusals (undeclared read sets, non-row-sync /
+block neighbours, chunk-sensitive sources) — plus calibration statistics,
+graph surgery, measured-bytes re-planning and the metadata before/after
+records."""
+import numpy as np
+import pytest
+
+from repro.core import (CostBasedOptimizer, Dataflow, FlowStatistics,
+                        MetadataStore, OptimizeOptions, OptimizedEngine,
+                        StreamingEngine, measured_edge_bytes, partition,
+                        run_calibration, suggest_pipeline_degree)
+from repro.core.component import StageBoundary
+from repro.core.optimizer import ComponentStats
+from repro.etl.components import (Aggregate, ArraySource, CollectSink,
+                                  DimTable, Expression, Filter,
+                                  FusedExpression, Lookup, Sort)
+
+
+# ---------------------------------------------------------------------------
+#  fixtures / helpers
+# ---------------------------------------------------------------------------
+def _table(n=1000, seed=0):
+    r = np.random.RandomState(seed)
+    return {"k": r.randint(1, 50, n).astype(np.int64),
+            "g": r.randint(0, 4, n).astype(np.int64),
+            "v": r.randint(0, 100, n).astype(np.int64)}
+
+
+def _dim(nk=50, seed=1):
+    r = np.random.RandomState(seed)
+    keys = np.arange(1, nk + 1, dtype=np.int64)
+    return DimTable(keys, {"pay": r.randint(0, 9, nk).astype(np.int64)})
+
+
+def _stats(flow, **overrides):
+    """Hand-crafted statistics: every component saw 1000 rows in/out with
+    1ms/krow unless overridden with ComponentStats kwargs."""
+    st = FlowStatistics(sample_rows=1000, scale=1.0)
+    for name in flow.vertices:
+        st.components[name] = ComponentStats(
+            rows_in=1000, rows_out=1000, busy_time=1e-3, calls=4,
+            out_bytes=8 * 3 * 1000)
+    for name, cs in overrides.items():
+        st.components[name] = cs
+    return st
+
+
+def _chain_flow(*comps, name="f"):
+    flow = Dataflow(name)
+    flow.chain(*comps)
+    return flow
+
+
+class _ChunkySource(ArraySource):
+    chunk_sensitive = True
+
+
+# ---------------------------------------------------------------------------
+#  graph surgery
+# ---------------------------------------------------------------------------
+def test_graph_surgery_roundtrip():
+    src = ArraySource("src", _table())
+    f1 = Filter("f1", lambda c, r: c.col("v")[r] >= 0, reads=["v"])
+    sink = CollectSink("sink")
+    flow = _chain_flow(src, f1, sink)
+
+    cut = StageBoundary("cut")
+    flow.insert_between("f1", "sink", cut)
+    assert flow.succ("f1") == ["cut"] and flow.succ("cut") == ["sink"]
+    flow.validate()
+
+    flow.remove_passthrough("cut")
+    assert flow.succ("f1") == ["sink"]
+    assert "cut" not in flow.vertices
+    flow.validate()
+
+    with pytest.raises(KeyError):
+        flow.insert_between("src", "sink", StageBoundary("x"))   # no such edge
+    with pytest.raises(ValueError):
+        flow.remove_passthrough("src")       # in-degree 0
+
+
+def test_graph_swap_adjacent():
+    src = ArraySource("src", _table())
+    lk = Lookup("lk", _dim(), "k", {"pay": "pay"})
+    f1 = Filter("f1", lambda c, r: c.col("v")[r] < 50, reads=["v"])
+    sink = CollectSink("sink")
+    flow = _chain_flow(src, lk, f1, sink)
+    flow.swap_adjacent("lk", "f1")
+    assert flow.succ("src") == ["f1"]
+    assert flow.succ("f1") == ["lk"]
+    assert flow.succ("lk") == ["sink"]
+    flow.validate()
+    with pytest.raises(KeyError):
+        flow.swap_adjacent("lk", "f1")       # edge now reversed
+
+
+# ---------------------------------------------------------------------------
+#  calibration statistics
+# ---------------------------------------------------------------------------
+def test_calibration_scales_and_skips_sinks():
+    cols = _table(n=2000)
+    src = ArraySource("src", cols)
+    filt = Filter("filt", lambda c, r: c.col("v")[r] < 50, reads=["v"])
+    sink = CollectSink("sink")
+    flow = _chain_flow(src, filt, sink)
+    stats = run_calibration(flow, sample_rows=500)
+    assert stats.sample_rows == 500
+    assert stats.scale == pytest.approx(4.0)
+    s = stats.get("filt")
+    # ~half the rows survive v < 50; scaled to the full 2000-row input
+    assert 0.3 < s.selectivity < 0.7
+    assert s.rows_in == pytest.approx(2000, rel=0.05)
+    # sinks are counted, never written: the run's results stay clean
+    assert sink.result() == {}
+    # component counters were reset for the real run
+    assert flow.component("filt").rows_in == 0
+
+
+def test_calibration_on_multi_tree_flow():
+    src = ArraySource("src", _table())
+    agg = Aggregate("agg", ["g"], {"s": ("v", "sum")})
+    srt = Sort("srt", ["g"])
+    sink = CollectSink("sink")
+    flow = _chain_flow(src, agg, srt, sink)
+    stats = run_calibration(flow, sample_rows=1000)
+    assert stats.get("agg").rows_out <= 4       # 4 groups
+    assert stats.get("srt").rows_in >= 1
+
+
+# ---------------------------------------------------------------------------
+#  rule 1: filter commute
+# ---------------------------------------------------------------------------
+def _commute_flow(reads):
+    src = ArraySource("src", _table())
+    lk = Lookup("lk", _dim(), "k", {"pay": "pay"})
+    filt = Filter("filt", lambda c, r: c.col("v")[r] < 30, reads=reads)
+    sink = CollectSink("sink")
+    return _chain_flow(src, lk, filt, sink), sink
+
+
+def test_filter_commutes_ahead_of_lookup():
+    flow, _ = _commute_flow(reads=["v"])
+    stats = _stats(flow, filt=ComponentStats(rows_in=1000, rows_out=300,
+                                             busy_time=1e-4, calls=4,
+                                             out_bytes=8 * 3 * 300))
+    opt = CostBasedOptimizer(flow, stats)
+    rewrites = opt.optimize()
+    assert [r.rule for r in rewrites] == ["filter-commute"]
+    assert flow.succ("src") == ["filt"]          # filter hopped the lookup
+    assert flow.succ("filt") == ["lk"]
+
+
+def test_filter_commute_refuses_dependent_reads():
+    # the filter reads the column the lookup PRODUCES: must refuse
+    flow, _ = _commute_flow(reads=["pay"])
+    opt = CostBasedOptimizer(flow, _stats(flow, filt=ComponentStats(
+        rows_in=1000, rows_out=300, busy_time=1e-4, calls=4, out_bytes=100)))
+    ok, reason = opt.can_commute("lk", "filt")
+    assert not ok and "pay" in reason
+    assert opt.optimize() == []
+    assert flow.succ("src") == ["lk"]            # untouched
+
+
+def test_filter_commute_refuses_undeclared_reads():
+    flow, _ = _commute_flow(reads=None)
+    opt = CostBasedOptimizer(flow, _stats(flow))
+    ok, reason = opt.can_commute("lk", "filt")
+    assert not ok and "no declared read set" in reason
+    assert opt.optimize() == []
+
+
+def test_filter_commute_refuses_block_neighbour():
+    src = ArraySource("src", _table())
+    srt = Sort("srt", ["k"])
+    filt = Filter("filt", lambda c, r: c.col("v")[r] < 30, reads=["v"])
+    sink = CollectSink("sink")
+    flow = _chain_flow(src, srt, filt, sink)
+    opt = CostBasedOptimizer(flow, _stats(flow, filt=ComponentStats(
+        rows_in=1000, rows_out=300, busy_time=1e-4, calls=4, out_bytes=100)))
+    ok, reason = opt.can_commute("srt", "filt")
+    assert not ok and "not row-sync" in reason
+    assert opt.optimize() == []
+
+
+def test_filter_commute_refuses_stage_cut_and_selective_filters_stay():
+    src = ArraySource("src", _table())
+    cut = StageBoundary("cut")
+    filt = Filter("filt", lambda c, r: c.col("v")[r] < 30, reads=["v"])
+    sink = CollectSink("sink")
+    flow = _chain_flow(src, cut, filt, sink)
+    opt = CostBasedOptimizer(flow, _stats(flow))
+    ok, reason = opt.can_commute("cut", "filt")
+    assert not ok and "stage cut" in reason
+    # and a filter observed to drop nothing is never commuted
+    flow2, _ = _commute_flow(reads=["v"])
+    opt2 = CostBasedOptimizer(flow2, _stats(flow2))   # selectivity 1.0
+    assert opt2.optimize() == []
+
+
+def test_commuted_flow_output_identical():
+    flow_a, sink_a = _commute_flow(reads=["v"])
+    flow_b, sink_b = _commute_flow(reads=["v"])
+    stats = _stats(flow_b, filt=ComponentStats(rows_in=1000, rows_out=300,
+                                               busy_time=1e-4, calls=4,
+                                               out_bytes=8 * 3 * 300))
+    assert CostBasedOptimizer(flow_b, stats).optimize()
+    OptimizedEngine(flow_a, OptimizeOptions(num_splits=4)).run()
+    OptimizedEngine(flow_b, OptimizeOptions(num_splits=4)).run()
+    a, b = sink_a.result(), sink_b.result()
+    assert set(a) == set(b)
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k])
+
+
+# ---------------------------------------------------------------------------
+#  rule 2: expression fusion
+# ---------------------------------------------------------------------------
+def _expr_flow(with_filter_between=False):
+    src = ArraySource("src", _table())
+    e1 = Expression("e1", "a", lambda c, r: c.col("v")[r] * 2, reads=["v"])
+    e2 = Expression("e2", "b", lambda c, r: c.col("a")[r] + c.col("k")[r],
+                    reads=["a", "k"])
+    sink = CollectSink("sink")
+    if with_filter_between:
+        filt = Filter("filt", lambda c, r: c.col("v")[r] >= 0, reads=["v"])
+        return _chain_flow(src, e1, filt, e2, sink), sink
+    return _chain_flow(src, e1, e2, sink), sink
+
+
+def test_expressions_fuse_and_match():
+    flow_a, sink_a = _expr_flow()
+    flow_b, sink_b = _expr_flow()
+    opt = CostBasedOptimizer(flow_b, _stats(flow_b))
+    rewrites = opt.optimize()
+    assert [r.rule for r in rewrites] == ["fuse-expressions"]
+    fused = [c for c in flow_b.vertices.values()
+             if isinstance(c, FusedExpression)]
+    assert len(fused) == 1
+    # the fused activity's provenance: reads of e2 satisfied by e1 are
+    # internal; outputs are both columns
+    assert fused[0].produced_columns() == frozenset({"a", "b"})
+    assert fused[0].consumed_columns() == frozenset({"v", "k"})
+    flow_b.validate()
+    OptimizedEngine(flow_a, OptimizeOptions(num_splits=4)).run()
+    OptimizedEngine(flow_b, OptimizeOptions(num_splits=4)).run()
+    a, b = sink_a.result(), sink_b.result()
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k])
+
+
+def test_fusion_refuses_non_adjacent():
+    flow, _ = _expr_flow(with_filter_between=True)
+    opt = CostBasedOptimizer(flow, _stats(flow))
+    ok, reason = opt.can_fuse("e1", "e2")
+    assert not ok and "chain" in reason
+    assert "fuse-expressions" not in [r.rule for r in opt.optimize()]
+
+
+def test_fusion_refuses_non_expression_neighbour():
+    src = ArraySource("src", _table())
+    e1 = Expression("e1", "a", lambda c, r: c.col("v")[r] * 2, reads=["v"])
+    srt = Sort("srt", ["k"])
+    sink = CollectSink("sink")
+    flow = _chain_flow(src, e1, srt, sink)
+    opt = CostBasedOptimizer(flow, _stats(flow))
+    ok, reason = opt.can_fuse("e1", "srt")
+    assert not ok and "Expression" in reason
+
+
+def test_fusion_chains_three_expressions():
+    src = ArraySource("src", _table())
+    e1 = Expression("e1", "a", lambda c, r: c.col("v")[r] * 2, reads=["v"])
+    e2 = Expression("e2", "b", lambda c, r: c.col("a")[r] + 1, reads=["a"])
+    e3 = Expression("e3", "c3", lambda c, r: c.col("b")[r] - c.col("v")[r],
+                    reads=["b", "v"])
+    sink = CollectSink("sink")
+    flow = _chain_flow(src, e1, e2, e3, sink)
+    opt = CostBasedOptimizer(flow, _stats(flow))
+    rewrites = opt.optimize()
+    assert [r.rule for r in rewrites] == ["fuse-expressions"] * 2
+    fused = [c for c in flow.vertices.values()
+             if isinstance(c, FusedExpression)]
+    assert len(fused) == 1 and len(fused[0].exprs) == 3
+
+
+# ---------------------------------------------------------------------------
+#  rule 3: stage-boundary insert / remove
+# ---------------------------------------------------------------------------
+def _cut_flow(src_cls=ArraySource):
+    src = src_cls("src", _table(4000))
+    lk = Lookup("lk", _dim(), "k", {"pay": "pay"})
+    e1 = Expression("e1", "a", lambda c, r: c.col("v")[r] + c.col("pay")[r],
+                    reads=["v", "pay"])
+    agg = Aggregate("agg", ["g"], {"s": ("a", "sum")})
+    sink = CollectSink("sink")
+    return _chain_flow(src, lk, e1, agg, sink), sink
+
+
+def test_boundary_insert_on_heavy_edge():
+    flow, _ = _cut_flow()
+    # heavy lookup, heavy downstream expression, plenty of bytes crossing
+    big = ComponentStats(rows_in=4000, rows_out=4000, busy_time=0.5, calls=4,
+                         out_bytes=64 * 1024 * 1024)
+    stats = _stats(flow, lk=big, e1=big)
+    opt = CostBasedOptimizer(flow, stats, streaming=True)
+    rewrites = opt.optimize()
+    assert "insert-boundary" in [r.rule for r in rewrites]
+    cuts = [n for n, c in flow.vertices.items() if c.tree_boundary]
+    assert len(cuts) == 1                       # capped at one insert
+    g_tau = partition(flow)
+    assert len(g_tau.trees) == 3                # src-tree | cut-tree | agg...
+
+
+def test_boundary_insert_refuses_without_streaming():
+    flow, _ = _cut_flow()
+    big = ComponentStats(rows_in=4000, rows_out=4000, busy_time=0.5, calls=4,
+                         out_bytes=64 * 1024 * 1024)
+    opt = CostBasedOptimizer(flow, _stats(flow, lk=big, e1=big),
+                             streaming=False)
+    assert "insert-boundary" not in [r.rule for r in opt.optimize()]
+
+
+def test_boundary_insert_refuses_chunk_sensitive_source():
+    flow, _ = _cut_flow(src_cls=_ChunkySource)
+    opt = CostBasedOptimizer(flow, _stats(flow), streaming=True)
+    ok, reason = opt.can_cut("lk", "e1")
+    assert not ok and "chunk-sensitive" in reason
+
+
+def test_boundary_insert_refuses_tree_rooting_target():
+    flow, _ = _cut_flow()
+    opt = CostBasedOptimizer(flow, _stats(flow), streaming=True)
+    ok, reason = opt.can_cut("e1", "agg")       # agg already roots a tree
+    assert not ok and "roots a tree" in reason
+
+
+def test_boundary_insert_refuses_order_sensitive_downstream():
+    src = ArraySource("src", _table())
+    lk = Lookup("lk", _dim(), "k", {"pay": "pay"})
+    e1 = Expression("e1", "a", lambda c, r: c.col("v")[r] * 2, reads=["v"])
+    e1.order_sensitive = True
+    sink = CollectSink("sink")
+    flow = _chain_flow(src, lk, e1, sink)
+    opt = CostBasedOptimizer(flow, _stats(flow), streaming=True)
+    ok, reason = opt.can_cut("lk", "e1")
+    assert not ok and "order-sensitive" in reason
+
+
+def test_boundary_removed_when_bytes_small():
+    src = ArraySource("src", _table(100))
+    cut = StageBoundary("cut")
+    e1 = Expression("e1", "a", lambda c, r: c.col("v")[r] * 2, reads=["v"])
+    sink = CollectSink("sink")
+    flow = _chain_flow(src, cut, e1, sink)
+    tiny = ComponentStats(rows_in=100, rows_out=100, busy_time=1e-5, calls=1,
+                          out_bytes=2400)       # << MIN_STREAM_BYTES
+    stats = _stats(flow, src=tiny)
+    opt = CostBasedOptimizer(flow, stats, streaming=True)
+    rewrites = opt.optimize()
+    assert [r.rule for r in rewrites] == ["remove-boundary"]
+    assert "cut" not in flow.vertices
+    flow.validate()
+
+
+def test_boundary_kept_when_bytes_justify_streaming():
+    src = ArraySource("src", _table(100))
+    cut = StageBoundary("cut")
+    e1 = Expression("e1", "a", lambda c, r: c.col("v")[r] * 2, reads=["v"])
+    sink = CollectSink("sink")
+    flow = _chain_flow(src, cut, e1, sink)
+    big = ComponentStats(rows_in=100, rows_out=100, busy_time=1e-3, calls=1,
+                         out_bytes=64 * 1024 * 1024)
+    opt = CostBasedOptimizer(flow, _stats(flow, src=big), streaming=True)
+    assert "remove-boundary" not in [r.rule for r in opt.optimize()]
+    assert "cut" in flow.vertices
+
+
+# ---------------------------------------------------------------------------
+#  measured re-planning
+# ---------------------------------------------------------------------------
+def test_measured_edge_bytes_uses_observations():
+    flow, _ = _cut_flow()
+    stats = run_calibration(flow, sample_rows=1000)
+    g_tau = partition(flow)
+    eb = measured_edge_bytes(flow, g_tau, stats)
+    assert set(eb.keys()) == set(g_tau.edges)
+    # the lookup widened the rows: observed bytes on the src->agg transition
+    # reflect the attenuated-but-widened measured stream, not the source size
+    assert all(v > 0 for v in eb.values())
+
+
+def test_measured_edge_bytes_inherits_for_fresh_components():
+    flow, _ = _cut_flow()
+    stats = run_calibration(flow, sample_rows=1000)
+    flow.insert_between("lk", "e1", StageBoundary("cut"))   # unseen by stats
+    g_tau = partition(flow)
+    eb = measured_edge_bytes(flow, g_tau, stats)
+    cut_tree = g_tau.tree_of["cut"]
+    src_tree = g_tau.tree_of["lk"]
+    # the edge fed by the fresh boundary inherits its predecessor's bytes
+    assert eb[(src_tree, cut_tree)] == stats.get("lk").out_bytes
+
+
+def test_suggest_pipeline_degree_bounds():
+    flow, _ = _cut_flow()
+    stats = run_calibration(flow, sample_rows=1000)
+    m = suggest_pipeline_degree(stats, num_splits=8)
+    assert 1 <= m <= 8
+    # degenerate statistics: explicit fallback, not a crash
+    empty = FlowStatistics(sample_rows=0)
+    assert suggest_pipeline_degree(empty, num_splits=4) == 4
+
+
+# ---------------------------------------------------------------------------
+#  engine integration + metadata records
+# ---------------------------------------------------------------------------
+def test_optimize_level2_records_before_after():
+    flow, sink = _cut_flow()
+    md = MetadataStore()
+    run = StreamingEngine(flow, OptimizeOptions(num_splits=4,
+                                                optimize_level=2,
+                                                calibration_rows=512),
+                          metadata=md).run()
+    rec = md.adaptive[flow.name]
+    assert {"statistics", "rewrites", "before", "after"} <= set(rec)
+    assert rec["before"]["plan"]["pool_width"] >= 1
+    assert rec["after"]["plan"]["pool_width"] >= 1
+    assert md.statistics[flow.name]["sample_rows"] == 512
+    assert run.rewrites == rec["rewrites"]
+    # JSON round-trip keeps the adaptive record
+    md2 = MetadataStore.from_json(md.to_json())
+    assert md2.adaptive[flow.name] == rec
+    assert sink.result()["s"].shape[0] == 4     # 4 groups survived the run
+
+
+def test_optimize_level2_does_not_mutate_options():
+    flow, _ = _cut_flow()
+    opts = OptimizeOptions(num_splits=4, optimize_level=2)
+    StreamingEngine(flow, opts).run()
+    assert opts.pipeline_degree is None
+
+
+# ---------------------------------------------------------------------------
+#  regressions: edge ORDER is semantic (per-port splitter routing)
+# ---------------------------------------------------------------------------
+def test_remove_passthrough_preserves_fanout_port_order():
+    """The reconnect edge must take the removed edge's position: appending
+    it would flip a splitter's hi/lo port routing."""
+    from repro.core import Dataflow
+    from repro.etl.components import Splitter
+    flow = Dataflow("ports")
+    src = flow.add(ArraySource("src", _table()))
+    sp = flow.add(Splitter("sp", lambda c, r: c.col("v")[r] < 50))
+    cut = flow.add(StageBoundary("cut"))
+    s_hi = flow.add(CollectSink("s_hi"))
+    s_lo = flow.add(CollectSink("s_lo"))
+    flow.connect(src, sp)
+    flow.connect(sp, cut)        # port 0 (hi) -> cut -> s_hi
+    flow.connect(sp, s_lo)       # port 1 (lo) -> s_lo
+    flow.connect(cut, s_hi)
+    assert flow.succ("sp") == ["cut", "s_lo"]
+    flow.remove_passthrough("cut")
+    assert flow.succ("sp") == ["s_hi", "s_lo"]   # port order intact
+
+
+def test_fusion_preserves_fanout_port_order():
+    from repro.core import Dataflow
+    from repro.etl.components import Splitter
+    flow = Dataflow("ports-fuse")
+    src = flow.add(ArraySource("src", _table()))
+    sp = flow.add(Splitter("sp", lambda c, r: c.col("v")[r] < 50))
+    e1 = flow.add(Expression("e1", "a", lambda c, r: c.col("v")[r] * 2,
+                             reads=["v"]))
+    e2 = flow.add(Expression("e2", "b", lambda c, r: c.col("a")[r] + 1,
+                             reads=["a"]))
+    s_hi = flow.add(CollectSink("s_hi"))
+    s_lo = flow.add(CollectSink("s_lo"))
+    flow.connect(src, sp)
+    flow.connect(sp, e1)         # port 0 (hi) -> e1 -> e2 -> s_hi
+    flow.connect(sp, s_lo)       # port 1 (lo) -> s_lo
+    flow.connect(e1, e2)
+    flow.connect(e2, s_hi)
+    opt = CostBasedOptimizer(flow, _stats(flow))
+    assert [r.rule for r in opt.optimize()] == ["fuse-expressions"]
+    fused_name = [n for n in flow.vertices if n.startswith("fused(")][0]
+    # the fused chain still hangs off port 0, the lo sink off port 1
+    assert flow.succ("sp") == [fused_name, "s_lo"]
+    assert flow.succ(fused_name) == ["s_hi"]
+
+
+def test_suggest_pipeline_degree_not_double_scaled():
+    """Calibration statistics are already extrapolated to the full input;
+    build_plan must not scale them AGAIN.  Theorem 1 grows m* ~ sqrt(rows)
+    for fixed per-row cost, so quadrupling the extrapolation factor may at
+    most double the degree — the historical double-scaling bug made it
+    grow linearly (4x) and pin the degree at the cap."""
+    def stats_at(scale):
+        st = FlowStatistics(sample_rows=1000, scale=scale)
+        for i in range(3):
+            st.components[f"a{i}"] = ComponentStats(
+                rows_in=int(1000 * scale), rows_out=int(1000 * scale),
+                busy_time=0.5 * scale, calls=4,
+                out_bytes=int(24_000 * scale))
+        return st
+    m1 = suggest_pipeline_degree(stats_at(1.0), num_splits=128, cores=128)
+    m4 = suggest_pipeline_degree(stats_at(4.0), num_splits=128, cores=128)
+    assert m1 >= 2                        # the model sees real work
+    assert m1 <= m4 <= int(2.5 * m1)      # sqrt growth, not linear
+
+
+def test_commute_refuses_column_producing_row_dropper():
+    """A row-dropping component that ALSO adds columns must never commute
+    (its new upstream might need what it produces)."""
+    flow, _ = _commute_flow(reads=["v"])
+
+    class _FlaggingFilter(Filter):
+        def produced_columns(self):
+            return frozenset({"kept_flag"})
+
+    ff = _FlaggingFilter("ff", lambda c, r: c.col("v")[r] < 30, reads=["v"])
+    flow2 = _chain_flow(ArraySource("src", _table()),
+                        Lookup("lk", _dim(), "k", {"pay": "pay"}),
+                        ff, CollectSink("sink"), name="flagged")
+    opt = CostBasedOptimizer(flow2, _stats(flow2, ff=ComponentStats(
+        rows_in=1000, rows_out=300, busy_time=1e-4, calls=4, out_bytes=100)))
+    ok, reason = opt.can_commute("lk", "ff")
+    assert not ok and "not a pure filter" in reason
