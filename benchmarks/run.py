@@ -1,11 +1,21 @@
 """Benchmark aggregator — one section per paper table/figure + the roofline
-table and the streaming-executor comparison.  Prints CSV lines (name,...).
+table and the streaming/optimizer/fusion comparisons.  Prints CSV lines
+(name,...).
 
   PYTHONPATH=src python -m benchmarks.run            # all sections
   PYTHONPATH=src python -m benchmarks.run fig12 roofline streaming
   PYTHONPATH=src python -m benchmarks.run --smoke    # fast CI equivalence guard
+  PYTHONPATH=src python -m benchmarks.run --smoke fusion optimizer   # parts
 
 Scale via env: BENCH_ROWS (default 2,000,000), BENCH_REPEATS.
+
+Every invocation also writes a machine-readable ``BENCH_<tag>.json`` next to
+the working directory (tag from ``BENCH_TAG``, default "local"): per-section
+wall time and status, the per-section ``CacheStats`` snapshot (copies,
+h2d/d2h transfers, arena hits/misses/bytes-reused — collected with a scoped
+``cache_stats_scope`` so concurrent noise never leaks in), and the active
+backend — the cross-PR perf trajectory record.  Schema in
+``benchmarks/README.md``.
 
 ``--smoke`` runs the ordinary / optimized / streaming engines on tiny
 multi-tree SSB dataflows and asserts (1) identical sink rows, in order,
@@ -14,20 +24,25 @@ copies than the ordinary engine — a cheap guard for engine refactors.  It
 then repeats Q4.1/Q4.1s under BOTH operator backends (numpy and jax),
 enforcing engine-vs-oracle equality per backend and numpy-vs-jax agreement
 — the accelerated path's refactor guard.  Select a backend for the
-engine runs themselves with ``REPRO_BACKEND=jax``.  Finally the optimizer
-part re-runs Q4.1/Q4.1s with ``optimize_level=2`` (cost-based rewriting)
-and enforces byte equality against the static plans.
+engine runs themselves with ``REPRO_BACKEND=jax``.  The optimizer part
+re-runs Q4.1/Q4.1s with ``optimize_level=2`` (cost-based rewriting) and
+enforces byte equality against the static plans; the fusion part re-runs
+them with segment fusion + the CacheArena on and enforces byte equality
+plus REDUCED backend dispatch / h2d transfer counts.  Pass part names after
+``--smoke`` (engines, backend, optimizer, fusion) to run a subset.
 """
 from __future__ import annotations
 
+import json
+import os
 import sys
 import time
 import traceback
 
 from . import (backend_compare, fig12_pipeline_speedup, fig13_cpu_usage,
                fig14_multithreading, fig15_optimization,
-               fig16_fig17_vs_kettle, kernel_bench, optimizer, roofline,
-               streaming, theorem1_accuracy)
+               fig16_fig17_vs_kettle, fusion, kernel_bench, optimizer,
+               roofline, streaming, theorem1_accuracy)
 
 SECTIONS = {
     "fig12": fig12_pipeline_speedup.run,
@@ -40,24 +55,60 @@ SECTIONS = {
     "streaming": streaming.run,
     "backend": backend_compare.run,
     "optimizer": optimizer.run,
+    "fusion": fusion.run,
     "roofline": lambda: roofline.run("16x16") + roofline.run("2x16x16"),
 }
 
 SMOKE_FLOWS = ("Q1.1", "Q2.1", "Q4.1", "Q4.1s")
+SMOKE_PARTS = ("engines", "backend", "optimizer", "fusion")
 
 
-def smoke() -> int:
-    """Tiny-row engine equivalence: ordinary vs optimized vs streaming,
-    then numpy-vs-jax operator-backend equivalence on the multi-tree flows."""
+# ---------------------------------------------------------------------------
+#  BENCH_<tag>.json — machine-readable perf trajectory
+# ---------------------------------------------------------------------------
+def bench_tag() -> str:
+    return os.environ.get("BENCH_TAG", "").strip() or "local"
+
+
+def write_bench_json(sections: dict, mode: str, path: str = None) -> str:
+    """Write the per-section results dict as BENCH_<tag>.json and return the
+    path.  ``sections`` maps section name -> {"wall_s", "status",
+    "cache_stats", ...}; top-level metadata records the backend and scale so
+    trajectories across PRs compare like with like."""
+    from repro.core import get_default_backend
+
+    from .common import BENCH_REPEATS, BENCH_ROWS
+    tag = bench_tag()                 # one derivation: file name == payload
+    payload = {
+        "tag": tag,
+        "mode": mode,
+        "backend": get_default_backend().name,
+        "bench_rows": BENCH_ROWS,
+        "bench_repeats": BENCH_REPEATS,
+        "created_unix": time.time(),
+        "sections": sections,
+    }
+    path = path or f"BENCH_{tag}.json"
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    return path
+
+
+def _section_record(wall: float, status: str, stats) -> dict:
+    return {"wall_s": round(wall, 4), "status": status,
+            "cache_stats": stats.snapshot()}
+
+
+# ---------------------------------------------------------------------------
+#  Smoke parts
+# ---------------------------------------------------------------------------
+def _smoke_engines(data) -> int:
     import numpy as np
 
     from repro.core import (OptimizedEngine, OptimizeOptions, OrdinaryEngine,
                             StreamingEngine, get_default_backend)
     from repro.etl import BUILDERS
-    from repro.etl.ssb import generate
 
-    data = generate(lineorder_rows=50_000, customers=2_000, suppliers=200,
-                    parts=1_000, seed=5)
     # oracle tolerance follows the active backend: float64 numpy is exact to
     # 1e-9; the jax backend accumulates sums in float32 (segment_sum kernel)
     oracle_rtol = get_default_backend().oracle_rtol
@@ -96,18 +147,7 @@ def smoke() -> int:
                 print(f"smoke.{qname},{label},FAIL,copies {r.copies} !< "
                       f"ordinary {r_ord.copies}")
                 failures += 1
-    if get_default_backend().name == "numpy":
-        failures += _smoke_backends(data)
-    else:
-        # the comparison below runs BOTH backends explicitly, so a non-numpy
-        # engine leg (REPRO_BACKEND=jax in the CI matrix) would repeat the
-        # numpy leg's most expensive work for no added coverage
-        print("smoke.backend,skipped,covered by the numpy leg")
-    # cost-based adaptive optimizer: rewritten-vs-static byte equality on the
-    # multi-tree flows under the active backend (optimizer.smoke)
-    failures += optimizer.smoke(data)
-    print(f"smoke,{'FAIL' if failures else 'PASS'},{failures} failures")
-    return 1 if failures else 0
+    return failures
 
 
 def _smoke_backends(data) -> int:
@@ -115,10 +155,18 @@ def _smoke_backends(data) -> int:
     per-backend engine-vs-oracle equality + cross-backend agreement.  The
     equality harness (flows, tolerance rules, assertions) is shared with the
     `backend` section so the two cannot drift."""
-    from repro.core import OptimizeOptions, StreamingEngine, get_backend
+    from repro.core import (OptimizeOptions, StreamingEngine, get_backend,
+                            get_default_backend)
     from repro.etl import BUILDERS
 
     from .backend_compare import BACKENDS, FLOWS, _assert_oracle
+
+    if get_default_backend().name != "numpy":
+        # the comparison below runs BOTH backends explicitly, so a non-numpy
+        # engine leg (REPRO_BACKEND=jax in the CI matrix) would repeat the
+        # numpy leg's most expensive work for no added coverage
+        print("smoke.backend,skipped,covered by the numpy leg")
+        return 0
 
     failures = 0
     for qname in FLOWS:
@@ -154,21 +202,87 @@ def _smoke_backends(data) -> int:
     return failures
 
 
+def smoke(parts=None) -> int:
+    """Tiny-row engine equivalence guards; ``parts`` selects a subset of
+    SMOKE_PARTS (default: all).  Writes BENCH_<tag>.json with one record per
+    part."""
+    from repro.core import cache_stats_scope
+    from repro.etl.ssb import generate
+
+    parts = list(parts or SMOKE_PARTS)
+    unknown = [p for p in parts if p not in SMOKE_PARTS]
+    if unknown:
+        raise ValueError(f"unknown smoke part(s) {unknown}; "
+                         f"valid: {list(SMOKE_PARTS)}")
+    data = generate(lineorder_rows=50_000, customers=2_000, suppliers=200,
+                    parts=1_000, seed=5)
+    runners = {
+        "engines": lambda: _smoke_engines(data),
+        "backend": lambda: _smoke_backends(data),
+        # cost-based adaptive optimizer: rewritten-vs-static byte equality
+        "optimizer": lambda: optimizer.smoke(data),
+        # segment fusion + arena: fused-vs-unfused byte equality + enforced
+        # dispatch/h2d reductions
+        "fusion": lambda: fusion.smoke(data),
+    }
+    failures = 0
+    records = {}
+    for part in parts:
+        t0 = time.time()
+        with cache_stats_scope() as stats:
+            try:
+                part_failures = runners[part]()
+            except Exception:
+                traceback.print_exc()
+                part_failures = 1
+        failures += part_failures
+        records[f"smoke.{part}"] = _section_record(
+            time.time() - t0, "FAIL" if part_failures else "PASS", stats)
+    path = write_bench_json(records, mode="smoke")
+    print(f"# wrote {path}")
+    print(f"smoke,{'FAIL' if failures else 'PASS'},{failures} failures")
+    return 1 if failures else 0
+
+
 def main() -> int:
-    if "--smoke" in sys.argv[1:]:
-        return smoke()
-    names = [a for a in sys.argv[1:] if a in SECTIONS] or list(SECTIONS)
+    from repro.core import cache_stats_scope
+
+    args = sys.argv[1:]
+    if "--smoke" in args:
+        rest = [a for a in args if a != "--smoke"]
+        unknown = [a for a in rest if a not in SMOKE_PARTS]
+        if unknown:
+            # a typo'd part silently falling through to the FULL smoke is
+            # exactly the failure a green CI job would never surface
+            print(f"unknown --smoke part(s) {unknown}; "
+                  f"valid: {list(SMOKE_PARTS)}")
+            return 2
+        return smoke(rest or None)
+    unknown = [a for a in args if a not in SECTIONS]
+    if unknown:
+        # same hazard in full-run mode: a typo'd section must not silently
+        # fall through to running ALL sections with a green exit
+        print(f"unknown section(s) {unknown}; valid: {sorted(SECTIONS)}")
+        return 2
+    names = args or list(SECTIONS)
     failures = []
+    records = {}
     for name in names:
         print(f"# === {name} ===")
         t0 = time.time()
-        try:
-            for line in SECTIONS[name]():
-                print(line)
-        except Exception:
-            traceback.print_exc()
-            failures.append(name)
-        print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+        with cache_stats_scope() as stats:
+            try:
+                for line in SECTIONS[name]():
+                    print(line)
+                status = "ok"
+            except Exception:
+                traceback.print_exc()
+                failures.append(name)
+                status = "fail"
+        records[name] = _section_record(time.time() - t0, status, stats)
+        print(f"# {name} done in {records[name]['wall_s']:.1f}s", flush=True)
+    path = write_bench_json(records, mode="full")
+    print(f"# wrote {path}")
     if failures:
         print("# FAILED sections:", failures)
         return 1

@@ -16,16 +16,17 @@ from .executor import (ChannelGroup, ExecutionAborted, RunAbort,
 from .graph import Dataflow
 from .metadata import MetadataStore
 from .optimizer import (ComponentStats, CostBasedOptimizer, FlowStatistics,
-                        Rewrite, measured_edge_bytes, run_calibration,
-                        suggest_pipeline_degree)
+                        Rewrite, fuse_segments_flow, measured_edge_bytes,
+                        run_calibration, suggest_pipeline_degree)
 from .partitioner import ExecutionTree, ExecutionTreeGraph, partition
 from .pipeline import TreePipeline
 from .planner import (PipelinePlan, RuntimePlan, backend_chunk_rows,
                       build_plan, choose_channel_depth, choose_degree,
-                      choose_pool_width, estimate_edge_bytes, plan_runtime,
-                      theorem1_m_star)
+                      choose_pool_width, discover_segments,
+                      estimate_edge_bytes, plan_runtime, theorem1_m_star)
 from .scheduler import plan_schedule, run_tree_graph
-from .shared_cache import (GLOBAL_CACHE_STATS, CacheStats, SharedCache,
+from .shared_cache import (GLOBAL_ARENA, GLOBAL_CACHE_STATS, CacheArena,
+                           CacheStats, SharedCache, cache_stats_scope,
                            concat_caches)
 from .simulate import (SimResult, cpu_usage_curve, multithreading_curve,
                        simulate_tree, speedup_curve)
@@ -41,14 +42,17 @@ __all__ = [
     "StreamingExecutor", "TaskFuture",
     "Dataflow", "MetadataStore",
     "ComponentStats", "CostBasedOptimizer", "FlowStatistics", "Rewrite",
-    "measured_edge_bytes", "run_calibration", "suggest_pipeline_degree",
+    "fuse_segments_flow", "measured_edge_bytes", "run_calibration",
+    "suggest_pipeline_degree",
     "ExecutionTree", "ExecutionTreeGraph", "partition",
     "TreePipeline",
     "PipelinePlan", "RuntimePlan", "backend_chunk_rows", "build_plan",
     "choose_channel_depth", "choose_degree", "choose_pool_width",
-    "estimate_edge_bytes", "plan_runtime", "theorem1_m_star",
+    "discover_segments", "estimate_edge_bytes", "plan_runtime",
+    "theorem1_m_star",
     "plan_schedule", "run_tree_graph",
-    "GLOBAL_CACHE_STATS", "CacheStats", "SharedCache", "concat_caches",
+    "GLOBAL_ARENA", "GLOBAL_CACHE_STATS", "CacheArena", "CacheStats",
+    "SharedCache", "cache_stats_scope", "concat_caches",
     "SimResult", "cpu_usage_curve", "multithreading_curve", "simulate_tree",
     "speedup_curve",
 ]

@@ -124,8 +124,185 @@ class Backend:
         ``keys[::-1]``); returns the permutation index array."""
         raise NotImplementedError
 
+    # ------------------------------------------------------- segment fusion
+    def compile_segment(self, segment) -> Callable:
+        """Compile a ``FusedSegment`` (a maximal row-synchronized chain of
+        Filter/Expression/Lookup/Project/Converter activities) into ONE
+        callable ``run(cache) -> None`` that mutates the shared cache in
+        place exactly like running the chain component by component — but as
+        a single backend dispatch per chunk.
+
+        The base implementation is the loop-free composed host reference:
+        each op is evaluated vectorized over the current row set with filter
+        masks applied eagerly, so results are bit-identical to the unfused
+        chain.  Accelerated backends override this with a genuinely compiled
+        kernel (the jax backend jits the whole segment: one h2d in, one d2h
+        out per chunk).  The returned runner is cached on the segment by the
+        component, so compilation happens once per (segment, backend)."""
+        ops = list(segment.ops)
+        backend = self
+
+        def run(cache) -> None:
+            _run_segment_host(backend, ops, cache)
+        return run
+
     def __repr__(self) -> str:
         return f"<{type(self).__name__} {self.name!r}>"
+
+
+# ---------------------------------------------------------------------------
+#  Composed host reference for fused segments
+# ---------------------------------------------------------------------------
+def segment_written_columns(ops) -> List[str]:
+    """Columns a fused segment produces/overwrites, in last-write order —
+    static analysis over the op list (no data needed)."""
+    written: List[str] = []
+
+    def note(name: str) -> None:
+        if name in written:
+            written.remove(name)
+        written.append(name)
+
+    for op in ops:
+        kind = op[0]
+        if kind == "expr":
+            note(op[1])
+        elif kind == "lookup":
+            for out_name in op[3]:
+                note(out_name)
+            if op[5]:
+                note(op[5])
+        elif kind == "convert":
+            for col in op[1]:
+                note(col)
+    return written
+
+
+def segment_final_live(ops, initial_names) -> set:
+    """The column set left visible after the segment runs over a cache that
+    started with ``initial_names`` (Projects prune, everything else adds)."""
+    live = set(initial_names)
+    for op in ops:
+        kind = op[0]
+        if kind == "expr":
+            live.add(op[1])
+        elif kind == "lookup":
+            live.update(op[3])
+            if op[5]:
+                live.add(op[5])
+        elif kind == "convert":
+            live.update(op[1])
+        elif kind == "project":
+            live &= set(op[1])
+    return live
+class SegmentEnv:
+    """The cache-like view fused predicates/expressions evaluate against:
+    ``col(name)`` returns the column's CURRENT value at this point of the
+    segment (input column, or the output of an earlier fused op)."""
+
+    __slots__ = ("_get", "_live", "n")
+
+    def __init__(self, get: Callable[[str], object], live, n: int):
+        self._get = get
+        self._live = live
+        self.n = n
+
+    @property
+    def names(self) -> List[str]:
+        return list(self._live)
+
+    def col(self, name: str):
+        if name not in self._live:
+            raise KeyError(
+                f"column {name!r} is not visible at this point of the fused "
+                f"segment (dropped by an earlier Project, or an undeclared "
+                f"read — declare it via the component's reads=)")
+        return self._get(name)
+
+
+def _run_segment_host(bk: Backend, ops, cache) -> None:
+    """Reference execution of a fused segment: one pass over the op list with
+    vectorized numpy kernels, filter masks applied eagerly (so every op sees
+    exactly the rows the unfused chain would), and a single write-back to the
+    shared cache (one compact + the produced columns)."""
+    n0 = cache.n
+    env: Dict[str, np.ndarray] = {}          # materialized current values
+    live = set(cache.names)                  # columns visible right now
+    written: List[str] = []                  # produced/overwritten, in order
+    sel: Optional[np.ndarray] = None         # surviving original-row indices
+    n_cur = n0
+
+    def get(name: str) -> np.ndarray:
+        if name not in live:
+            # same visibility rule the unfused chain enforces: a column
+            # dropped by an earlier Project (or never present) must not be
+            # silently resurrected from the underlying cache
+            raise KeyError(
+                f"column {name!r} is not visible at this point of the fused "
+                f"segment (dropped by an earlier Project, or missing)")
+        got = env.get(name)
+        if got is None:
+            got = bk.to_host(cache.col(name))
+            if sel is not None:
+                got = got[sel]
+            env[name] = got
+        return got
+
+    def note_written(name: str) -> None:
+        live.add(name)
+        if name in written:
+            written.remove(name)
+        written.append(name)
+
+    for op in ops:
+        kind = op[0]
+        view = SegmentEnv(get, live, n_cur)
+        rows = slice(0, n_cur)
+        if kind == "filter":
+            mask = np.asarray(op[1](view, rows), dtype=bool)
+            sel_new = np.flatnonzero(mask) if sel is None else sel[mask]
+            for k in list(env):
+                env[k] = env[k][mask]
+            sel = sel_new
+            n_cur = int(len(sel))
+        elif kind == "expr":
+            _, out_col, fn = op[0], op[1], op[2]
+            env[out_col] = np.asarray(fn(view, rows))
+            note_written(out_col)
+        elif kind == "lookup":
+            _, dim, key_col, return_cols, default, matched_flag = op
+            idx, matched = bk.searchsorted_probe(dim, get(key_col))
+            idx, matched = bk.to_host(idx), bk.to_host(matched)
+            for out_name, dim_col in return_cols.items():
+                env[out_name] = bk.to_host(
+                    bk.lookup_gather(dim, dim_col, idx, matched, default))
+                note_written(out_name)
+            if matched_flag:
+                env[matched_flag] = np.asarray(matched, dtype=bool)
+                note_written(matched_flag)
+        elif kind == "project":
+            live = live & set(op[1])
+            for k in list(env):
+                if k not in live:
+                    del env[k]
+        elif kind == "convert":
+            for col, dt in op[1].items():
+                env[col] = get(col).astype(dt)
+                note_written(col)
+        else:  # pragma: no cover — op kinds are produced by segment_ops()
+            raise ValueError(f"unknown segment op kind {kind!r}")
+
+    # single write-back: one compact, then the produced columns, then the
+    # final column set (Project) — same end state as the unfused chain
+    if sel is not None:
+        final_mask = np.zeros(n0, dtype=bool)
+        final_mask[sel] = True
+        cache.compact(final_mask)
+    for name in written:
+        if name in live:
+            cache.add_column(name, env[name])
+    if live != set(cache.names):
+        cache.keep_columns([k for k in cache.names if k in live])
 
 
 # ---------------------------------------------------------------------------

@@ -15,7 +15,7 @@ Kernels:
   - ``sort_rows`` — stable ``jnp.lexsort``.
 
 Every host->device / device->host crossing is recorded in
-``CacheStats`` (``GLOBAL_CACHE_STATS.record_transfer``) — the copy-cost
+``CacheStats`` (scoped ``record_transfer``) — the copy-cost
 analogue of the paper's §3 scheme for the device tier.
 
 Note: x64 stays disabled (jax default), so 64-bit host columns are
@@ -31,8 +31,8 @@ from typing import Callable, Dict, List, Mapping, Sequence, Tuple
 
 import numpy as np
 
-from ..shared_cache import GLOBAL_CACHE_STATS
-from .base import AGG_OPS, Backend
+from ..shared_cache import GLOBAL_ARENA, is_host_column, record_transfer
+from .base import AGG_OPS, Backend, SegmentEnv
 
 
 class _DeviceCacheView:
@@ -123,8 +123,14 @@ class JaxBackend(Backend):
     # ------------------------------------------------------------ array ops
     def asarray(self, x):
         if isinstance(x, np.ndarray):
-            out = self._jnp.asarray(x)
-            GLOBAL_CACHE_STATS.record_transfer("h2d", x.nbytes)
+            # copy=True: jax on CPU zero-copies numpy arrays onto the
+            # "device", aliasing the host memory — with CacheArena recycling
+            # host buffers, an aliased device column would silently observe
+            # the next borrower's bytes.  Forcing the copy restores the
+            # ownership boundary the h2d accounting already models (real
+            # accelerators copy on transfer regardless).
+            out = self._jnp.array(x, copy=True)
+            record_transfer("h2d", x.nbytes)
             return out
         if isinstance(x, self._jax.Array):
             return x
@@ -134,7 +140,7 @@ class JaxBackend(Backend):
         if isinstance(x, np.ndarray):
             return x
         out = np.asarray(x)
-        GLOBAL_CACHE_STATS.record_transfer("d2h", out.nbytes)
+        record_transfer("d2h", out.nbytes)
         return out
 
     def concat(self, parts: Sequence):
@@ -268,3 +274,198 @@ class JaxBackend(Backend):
     def sort_rows(self, keys: Sequence, ascending: bool = True):
         order = self._jnp.lexsort(tuple(self.asarray(k) for k in keys)[::-1])
         return order if ascending else order[::-1]
+
+    # ------------------------------------------------------- segment fusion
+    def compile_segment(self, segment) -> Callable:
+        """One jitted kernel for the whole row-synchronized segment: the
+        needed host input columns are packed into a single staging buffer
+        (ONE h2d per chunk), every fused op runs on device inside one XLA
+        computation with the filter masks deferred to a single combined
+        keep-mask (the only d2h per chunk), and the produced columns stay
+        device-resident for downstream consumers.  Tracing is bounded by a
+        compile cache keyed on the packed layout (column names x canonical
+        dtypes x padded chunk-size bucket) — jit's own trace cache keys on
+        exactly that layout, so steady-state chunks replay a compiled
+        executable with zero retracing."""
+        return _JaxSegmentRunner(self, segment)
+
+
+class _JaxSegmentRunner:
+    """Compiled executor for one FusedSegment on the jax backend.
+
+    Deferred-mask semantics: row-synchronized ops are row-local by the
+    paper's §3 classification (each output row depends only on its own input
+    row), so filters are evaluated as masks over the full padded chunk, ANDed
+    into one keep-mask, and applied once at write-back — values of surviving
+    rows are identical to the eagerly-compacted unfused chain."""
+
+    def __init__(self, backend: "JaxBackend", segment):
+        from .base import segment_final_live, segment_written_columns
+        self._bk = backend
+        self._jnp = backend._jnp
+        self._jax = backend._jax
+        self.ops = list(segment.ops)
+        #: external columns the kernel needs uploaded; None => every cache
+        #: column (some op has an undeclared read set)
+        self.inputs = segment.kernel_input_columns()
+        self._written = segment_written_columns(self.ops)
+        self._final_live = segment_final_live
+        self._jit = backend._jax.jit(self._kernel, static_argnums=(0,))
+        self._layouts: set = set()
+        self._dims = None            # built once: stable per (segment, backend)
+        self.kernel_calls = 0
+
+    # ----------------------------------------------------------- the kernel
+    def _kernel(self, layout, packed, dev_cols, dims):
+        jnp = self._jnp
+        bucket, entries = layout
+        env: Dict[str, object] = {}
+        for (name, dtype_str, off) in entries:
+            dt = np.dtype(dtype_str)
+            nb = bucket * dt.itemsize
+            raw = packed[off:off + nb]
+            if dt == np.bool_:
+                env[name] = raw != 0
+            elif dt.itemsize == 1:
+                env[name] = self._jax.lax.bitcast_convert_type(raw, dt)
+            else:
+                env[name] = self._jax.lax.bitcast_convert_type(
+                    raw.reshape(bucket, dt.itemsize), dt)
+        env.update(dev_cols)
+
+        masks = []
+        dim_i = 0
+        rows = slice(None)
+        for op in self.ops:
+            view = SegmentEnv(env.__getitem__, set(env), bucket)
+            kind = op[0]
+            if kind == "filter":
+                masks.append(jnp.asarray(op[1](view, rows), dtype=bool))
+            elif kind == "expr":
+                env[op[1]] = jnp.asarray(op[2](view, rows))
+            elif kind == "lookup":
+                _, dim, key_col, return_cols, default, matched_flag = op
+                d = dims[dim_i]
+                dim_i += 1
+                vals = env[key_col]
+                keys = d["keys"]
+                if keys.shape[0] == 0:        # static: degenerate dim table
+                    matched = jnp.zeros(vals.shape[0], dtype=bool)
+                    for out_name, dim_col in return_cols.items():
+                        env[out_name] = jnp.full(
+                            vals.shape[0], default,
+                            d["payload"][dim_col].dtype)
+                else:
+                    idx = jnp.clip(jnp.searchsorted(keys, vals),
+                                   0, keys.shape[0] - 1)
+                    matched = (keys[idx] == vals) & d["qualifies"][idx]
+                    for out_name, dim_col in return_cols.items():
+                        payload = d["payload"][dim_col]
+                        env[out_name] = jnp.where(
+                            matched, payload[idx],
+                            jnp.asarray(default, payload.dtype))
+                if matched_flag:
+                    env[matched_flag] = matched
+            elif kind == "project":
+                keep = set(op[1])
+                for k in list(env):
+                    if k not in keep:
+                        del env[k]
+            elif kind == "convert":
+                for col, dt in op[1].items():
+                    env[col] = env[col].astype(dt)
+            else:  # pragma: no cover
+                raise ValueError(f"unknown segment op kind {kind!r}")
+
+        keep_mask = None
+        for m in masks:
+            keep_mask = m if keep_mask is None else (keep_mask & m)
+        out = {name: env[name] for name in self._written if name in env}
+        return out, keep_mask
+
+    # ------------------------------------------------------------ execution
+    def __call__(self, cache) -> None:
+        bk = self._bk
+        jnp = self._jnp
+        n = cache.n
+        align = max(1, bk.batch_align)
+        bucket = max(align, -(-n // align) * align)
+
+        names = (sorted(self.inputs) if self.inputs is not None
+                 else sorted(cache.names))
+        packable = []              # 1-D host columns -> one staging buffer
+        dev_cols: Dict[str, object] = {}
+        for name in names:
+            v = cache.col(name)
+            if is_host_column(v) and v.ndim == 1:
+                packable.append((name, v))
+            else:
+                # device-resident (or multi-dim host) input: pad to the
+                # bucket on device so the kernel sees one shape per layout
+                dev = bk.asarray(np.ascontiguousarray(v)
+                                 if is_host_column(v) else v)
+                pad = bucket - n
+                if pad:
+                    dev = jnp.concatenate(
+                        [dev, jnp.zeros((pad,) + dev.shape[1:], dev.dtype)])
+                dev_cols[name] = dev
+
+        # pack every 1-D host input into ONE staging buffer (canonical
+        # device dtypes, zeroed pad tail) and upload it with a single h2d
+        entries = []
+        off = 0
+        for name, v in packable:
+            cd = np.dtype(self._jax.dtypes.canonicalize_dtype(v.dtype))
+            entries.append((name, cd.str, off))
+            off += bucket * cd.itemsize
+        total = off
+        if total:
+            staging, root = GLOBAL_ARENA.acquire(np.uint8, (total,))
+            for (name, v), (_, dtype_str, off) in zip(packable, entries):
+                cd = np.dtype(dtype_str)
+                dst = staging[off:off + bucket * cd.itemsize].view(cd)
+                np.copyto(dst[:n], v, casting="same_kind")
+                dst[n:] = 0
+            # copy=True + block: the device buffer must not alias the
+            # staging memory, which goes straight back to the arena
+            packed = jnp.array(staging, copy=True)
+            record_transfer("h2d", total)
+            packed.block_until_ready()
+            GLOBAL_ARENA.release(root)
+        else:
+            packed = jnp.zeros((0,), np.uint8)
+
+        if self._dims is None:
+            # device mirrors of every looked-up DimTable — uploaded once per
+            # table (cached on the table), structurally identical per call,
+            # so building the pytree once keeps per-chunk Python cost flat
+            dims = []
+            for op in self.ops:
+                if op[0] == "lookup":
+                    _, dim, _, return_cols, _, _ = op
+                    dev = bk._dim_device(dim)
+                    dims.append({
+                        "keys": dev["keys"],
+                        "qualifies": dev["qualifies"],
+                        "payload": {dcol: bk._dim_payload(dim, dcol)
+                                    for dcol in return_cols.values()},
+                    })
+            self._dims = dims
+
+        layout = (bucket, tuple(entries))
+        self._layouts.add(layout)
+        out_cols, keep_mask = self._jit(layout, packed, dev_cols, self._dims)
+        self.kernel_calls += 1
+
+        final_live = self._final_live(self.ops, cache.names)
+        for name in self._written:
+            if name in out_cols and name in final_live:
+                cache.add_column(name, out_cols[name][:n])
+        if keep_mask is not None:
+            cache.compact(keep_mask[:n])
+        if final_live != set(cache.names):
+            cache.keep_columns([k for k in cache.names if k in final_live])
+
+    def stats(self) -> Dict[str, int]:
+        return {"kernel_calls": self.kernel_calls,
+                "layouts": len(self._layouts)}

@@ -1,6 +1,11 @@
 """Reference operator backend: plain numpy, bit-identical to the component
 code it replaced (the inlined Filter/Lookup/Expression/Aggregate/Sort
-bodies).  Every accelerated backend is property-tested against this one."""
+bodies).  Every accelerated backend is property-tested against this one.
+
+Segment fusion (``compile_segment``) uses the base class's composed host
+runner unchanged: one vectorized pass over the fused op list with filter
+masks applied eagerly, so a ``FusedSegment`` on this backend is the
+loop-free reference the jitted jax segment kernel is checked against."""
 from __future__ import annotations
 
 from typing import Callable, Dict, List, Mapping, Sequence, Tuple

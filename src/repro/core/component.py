@@ -130,6 +130,16 @@ class Component:
         """Consume accumulated caches, emit the result as one cache."""
         raise NotImplementedError
 
+    # --------------------------------------------------- segment fusion
+    def segment_ops(self) -> Optional[list]:
+        """Declarative description of this component as fusable segment ops
+        (see ``etl.components.FusedSegment``), or ``None`` when the component
+        cannot join a fused segment (blocks, sinks, sources, anything with
+        side effects or non-row-local semantics).  Row-synchronized
+        components that implement this are row-local by the paper's §3
+        contract: each output row depends only on its own input row."""
+        return None
+
     # --------------------------------------------------- column provenance
     def produced_columns(self) -> Optional[frozenset]:
         """Columns this component ADDS or OVERWRITES on the cache.  ``None``

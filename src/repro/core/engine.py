@@ -20,6 +20,7 @@ upstream; block / semi-block roots keep accumulate-then-finish semantics.
 """
 from __future__ import annotations
 
+import os
 import time
 from dataclasses import dataclass, field, replace
 from typing import Dict, List, Optional, Tuple
@@ -31,7 +32,11 @@ from .graph import Dataflow
 from .metadata import MetadataStore
 from .partitioner import ExecutionTreeGraph, partition
 from .planner import PipelinePlan, RuntimePlan, build_plan, plan_runtime
-from .shared_cache import GLOBAL_CACHE_STATS, SharedCache
+from .shared_cache import SharedCache, cache_stats_scope, record_copy
+
+#: environment switch for segment fusion when OptimizeOptions.fuse_segments
+#: is left unset (the CI fusion leg runs the whole suite under REPRO_FUSION=1)
+FUSION_ENV_VAR = "REPRO_FUSION"
 
 
 @dataclass
@@ -43,6 +48,15 @@ class EngineRun:
     backend: str = "numpy"
     h2d_bytes: int = 0              # host->device bytes moved by the backend
     d2h_bytes: int = 0              # device->host bytes (sinks / host merges)
+    h2d_transfers: int = 0          # discrete host->device crossings
+    d2h_transfers: int = 0          # discrete device->host crossings
+    #: total backend dispatches (Component.calls summed over the flow) — the
+    #: per-chunk activity-call count segment fusion collapses
+    dispatch_calls: int = 0
+    # CacheArena traffic attributed to this run
+    arena_hits: int = 0
+    arena_misses: int = 0
+    arena_bytes_reused: int = 0
     activity_times: Dict[str, float] = field(default_factory=dict)
     trees: Optional[List[List[str]]] = None
     plans: Dict[int, PipelinePlan] = field(default_factory=dict)
@@ -59,15 +73,52 @@ class EngineRun:
         if self.h2d_bytes or self.d2h_bytes:
             s += (f" h2d={self.h2d_bytes/1e6:.1f}MB"
                   f" d2h={self.d2h_bytes/1e6:.1f}MB")
+        if self.arena_hits or self.arena_misses:
+            s += (f" arena={self.arena_hits}h/{self.arena_misses}m/"
+                  f"{self.arena_bytes_reused/1e6:.1f}MB")
         if self.rewrites:
             s += f" rewrites={len(self.rewrites)}"
         return s
+
+    def spec(self) -> dict:
+        """Metadata-store / benchmark-JSON representation: the scalar
+        instrumentation of one run (no plan/tree objects)."""
+        return {"engine": self.engine, "backend": self.backend,
+                "wall_time": self.wall_time,
+                "copies": self.copies, "bytes_copied": self.bytes_copied,
+                "h2d_transfers": self.h2d_transfers,
+                "h2d_bytes": self.h2d_bytes,
+                "d2h_transfers": self.d2h_transfers,
+                "d2h_bytes": self.d2h_bytes,
+                "dispatch_calls": self.dispatch_calls,
+                "arena_hits": self.arena_hits,
+                "arena_misses": self.arena_misses,
+                "arena_bytes_reused": self.arena_bytes_reused,
+                "rewrites": list(self.rewrites)}
 
 
 def _assign_backend(flow: Dataflow, backend: Backend) -> None:
     """Point every component of the flow at the run's operator backend."""
     for comp in flow.vertices.values():
         comp.backend = backend
+
+
+def _dispatch_calls(flow: Dataflow) -> int:
+    return sum(c.calls for c in flow.vertices.values())
+
+
+def _run_counters(run: EngineRun, snap: Dict[str, int]) -> None:
+    """Fill an EngineRun's cache/arena counters from a per-run scope
+    snapshot (exact attribution — no global-diff races)."""
+    run.copies = snap["copies"]
+    run.bytes_copied = snap["bytes_copied"]
+    run.h2d_bytes = snap["h2d_bytes"]
+    run.d2h_bytes = snap["d2h_bytes"]
+    run.h2d_transfers = snap["h2d_transfers"]
+    run.d2h_transfers = snap["d2h_transfers"]
+    run.arena_hits = snap["arena_hits"]
+    run.arena_misses = snap["arena_misses"]
+    run.arena_bytes_reused = snap["arena_bytes_reused"]
 
 
 # --------------------------------------------------------------------------
@@ -90,6 +141,7 @@ class OrdinaryEngine:
             return
         outs = comp.process(cache, shared=False)
         self._route(name, outs, states)
+        cache.recycle()      # downstream got copies; this cache is consumed
 
     def _route(self, name: str, outs: List[SharedCache],
                states: Dict[str, list]) -> None:
@@ -99,7 +151,7 @@ class OrdinaryEngine:
             out = outs[i] if per_port else outs[0]
             # separate-cache scheme: copy output cache -> downstream input cache
             copied = out.copy()
-            GLOBAL_CACHE_STATS.record(out)
+            record_copy(out)
             self._push(u, copied, states)
 
     def run(self) -> EngineRun:
@@ -107,36 +159,36 @@ class OrdinaryEngine:
         self.flow.reset_stats()
         bk = resolve_backend(self.backend)
         _assign_backend(self.flow, bk)
-        before = GLOBAL_CACHE_STATS.snapshot()
         t_start = time.perf_counter()
-        states: Dict[str, list] = {
-            n: c.new_state() for n, c in self.flow.vertices.items()
-            if c.ctype in (ComponentType.BLOCK, ComponentType.SEMI_BLOCK)}
-        # stream every source, chunk by chunk
-        for sname in self.flow.sources():
-            src = self.flow.component(sname)
-            if isinstance(src, SourceComponent):
-                for chunk in src.chunks(self.chunk_rows):
-                    self._route(sname, [chunk], states)
-            else:
-                raise TypeError(f"source {sname!r} is not a SourceComponent")
-        # finalize block/semi-block components in topological order
-        for name in self.flow.topo_order():
-            comp = self.flow.component(name)
-            if comp.ctype in (ComponentType.BLOCK, ComponentType.SEMI_BLOCK):
-                out = comp.finish(states[name])
-                self._route(name, [out], states)
+        with cache_stats_scope() as stats:
+            states: Dict[str, list] = {
+                n: c.new_state() for n, c in self.flow.vertices.items()
+                if c.ctype in (ComponentType.BLOCK, ComponentType.SEMI_BLOCK)}
+            # stream every source, chunk by chunk
+            for sname in self.flow.sources():
+                src = self.flow.component(sname)
+                if isinstance(src, SourceComponent):
+                    for chunk in src.chunks(self.chunk_rows):
+                        self._route(sname, [chunk], states)
+                        chunk.recycle()
+                else:
+                    raise TypeError(f"source {sname!r} is not a SourceComponent")
+            # finalize block/semi-block components in topological order
+            for name in self.flow.topo_order():
+                comp = self.flow.component(name)
+                if comp.ctype in (ComponentType.BLOCK, ComponentType.SEMI_BLOCK):
+                    out = comp.finish(states[name])
+                    self._route(name, [out], states)
+                    out.recycle()
         wall = time.perf_counter() - t_start
-        after = GLOBAL_CACHE_STATS.snapshot()
-        return EngineRun(
-            wall_time=wall,
-            copies=after["copies"] - before["copies"],
-            bytes_copied=after["bytes_copied"] - before["bytes_copied"],
+        run = EngineRun(
+            wall_time=wall, copies=0, bytes_copied=0,
             engine="ordinary",
             backend=bk.name,
-            h2d_bytes=after["h2d_bytes"] - before["h2d_bytes"],
-            d2h_bytes=after["d2h_bytes"] - before["d2h_bytes"],
+            dispatch_calls=_dispatch_calls(self.flow),
             activity_times={n: c.busy_time for n, c in self.flow.vertices.items()})
+        _run_counters(run, stats.snapshot())
+        return run
 
 
 # --------------------------------------------------------------------------
@@ -164,6 +216,15 @@ class OptimizeOptions:
     optimize_level: int = 1
     #: source-prefix rows for the optimize_level=2 calibration run
     calibration_rows: int = 4096
+    #: segment fusion: collapse maximal row-synchronized chains into single
+    #: compiled-kernel activities (optimizer.fuse_segments_flow).  None =>
+    #: follow the REPRO_FUSION env var; applies at every optimize level.
+    fuse_segments: Optional[bool] = None
+
+    def fusion_enabled(self) -> bool:
+        if self.fuse_segments is not None:
+            return bool(self.fuse_segments)
+        return os.environ.get(FUSION_ENV_VAR, "").strip() == "1"
 
 
 class OptimizedEngine:
@@ -199,7 +260,8 @@ class OptimizedEngine:
             streaming=streaming, backend=bk)
         stats = run_calibration(self.flow, sample_rows=opts.calibration_rows,
                                 backend=bk)
-        optimizer = CostBasedOptimizer(self.flow, stats, streaming=streaming)
+        optimizer = CostBasedOptimizer(self.flow, stats, streaming=streaming,
+                                       fuse_segments=opts.fusion_enabled())
         rewrites = optimizer.optimize()
         _assign_backend(self.flow, bk)     # rewrites may add components
         self.g_tau = partition(self.flow)
@@ -236,6 +298,10 @@ class OptimizedEngine:
         if opts.optimize_level >= 2:
             opts, rewrites = self._adaptive_rewrite(bk, opts)
         else:
+            if opts.fusion_enabled():
+                from .optimizer import fuse_segments_flow
+                rewrites = fuse_segments_flow(self.flow)
+                _assign_backend(self.flow, bk)   # fusion adds components
             self.g_tau = partition(self.flow)
             m_prime = opts.pipeline_degree or opts.num_splits
             self.runtime_plan = plan_runtime(
@@ -253,29 +319,29 @@ class OptimizedEngine:
 
         executor = StreamingExecutor(self.flow, self.g_tau, opts,
                                      self.runtime_plan)
-        before = GLOBAL_CACHE_STATS.snapshot()
         t_start = time.perf_counter()
-        try:
-            executor.execute()
-        finally:
-            pool_stats = executor.pool.stats()
-            executor.shutdown()
+        with cache_stats_scope() as stats:
+            try:
+                executor.execute()
+            finally:
+                pool_stats = executor.pool.stats()
+                executor.shutdown()
         wall = time.perf_counter() - t_start
-        after = GLOBAL_CACHE_STATS.snapshot()
-        return EngineRun(
-            wall_time=wall,
-            copies=after["copies"] - before["copies"],
-            bytes_copied=after["bytes_copied"] - before["bytes_copied"],
+        run = EngineRun(
+            wall_time=wall, copies=0, bytes_copied=0,
             engine=self.engine_name,
             backend=bk.name,
-            h2d_bytes=after["h2d_bytes"] - before["h2d_bytes"],
-            d2h_bytes=after["d2h_bytes"] - before["d2h_bytes"],
+            dispatch_calls=_dispatch_calls(self.flow),
             activity_times={n: c.busy_time for n, c in self.flow.vertices.items()},
             trees=[list(t.members) for t in self.g_tau.trees],
             runtime_plan=self.runtime_plan,
             streamed_edges=list(executor.streamed_edges),
             pool_stats=pool_stats,
             rewrites=[r.spec() for r in rewrites])
+        _run_counters(run, stats.snapshot())
+        if self.metadata is not None:
+            self.metadata.register_run(self.flow, run)
+        return run
 
 
 class StreamingEngine(OptimizedEngine):

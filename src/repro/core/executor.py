@@ -36,6 +36,7 @@ execution-tree graph (DOD-ETL-style on-demand streaming between stages):
 """
 from __future__ import annotations
 
+import contextvars
 import threading
 from collections import deque
 from contextlib import contextmanager, nullcontext
@@ -45,7 +46,7 @@ from typing import (TYPE_CHECKING, Callable, Dict, Iterator, List, Optional,
 from .component import SourceComponent
 from .graph import Dataflow
 from .partitioner import ExecutionTreeGraph, streamable_tree_ids
-from .shared_cache import GLOBAL_CACHE_STATS, SharedCache
+from .shared_cache import SharedCache, record_copy
 
 if TYPE_CHECKING:  # pragma: no cover
     from .planner import RuntimePlan
@@ -186,10 +187,13 @@ class SharedWorkerPool:
                         self._idle += 1
                         self._cond.wait(0.2)
                         self._idle -= 1
-                    fn, args, fut = self._work.popleft()
+                    fn, args, ctx, fut = self._work.popleft()
                     self.tasks_run += 1
                 try:
-                    fut._finish(value=fn(*args))
+                    # run under the submitter's contextvars context so scoped
+                    # instrumentation (cache_stats_scope) follows the task —
+                    # nested submits re-capture transitively
+                    fut._finish(value=ctx.run(fn, *args))
                 except BaseException as e:  # noqa: BLE001 — goes to the future
                     fut._finish(exc=e)
         finally:
@@ -200,10 +204,11 @@ class SharedWorkerPool:
     # ------------------------------------------------------------------- API
     def submit(self, fn: Callable, *args) -> TaskFuture:
         fut = TaskFuture(self)
+        ctx = contextvars.copy_context()
         with self._cond:
             if self._shutdown:
                 raise RuntimeError("pool is shut down")
-            self._work.append((fn, args, fut))
+            self._work.append((fn, args, ctx, fut))
             if self._idle > 0:
                 self._cond.notify()
             elif self._runnable() < self.width:
@@ -518,8 +523,9 @@ class StreamingExecutor:
     @staticmethod
     def _copy_split(s: SharedCache) -> SharedCache:
         c = s.copy()
-        GLOBAL_CACHE_STATS.record(s)
+        record_copy(s)
         c.split_index = s.split_index
+        s.recycle()          # the engine keeps only the private copy
         return c
 
     def _run_pipeline(self, tp, splits, process_root: bool) -> None:
@@ -552,6 +558,7 @@ class StreamingExecutor:
                         group.drain_on_close(), key=lambda e: (e[0], e[1])):
                     cache.split_index = idx
                     tp.consume_at(dst, cache)
+                    cache.recycle()
         elif root.ctype.roots_tree:
             # block / semi-block root: accumulate-then-finish (paper §3) —
             # deliveries taken once all upstream edges close, ordered
@@ -569,8 +576,10 @@ class StreamingExecutor:
             for (src, idx, dst, cache) in extras:
                 cache.split_index = idx
                 tp.consume_at(dst, cache)
+                cache.recycle()
             self._run_pipeline(tp, iter(out.split(opts.num_splits)),
                                process_root=False)
+            out.recycle()    # its splits (views) have all been consumed
         else:
             # row-synchronized root — an explicit stage boundary
             if tree.tree_id in self._streamed_trees and group is not None:

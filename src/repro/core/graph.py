@@ -89,6 +89,41 @@ class Dataflow:
         self._reindex()
         return comp
 
+    def collapse_chain(self, names: Sequence[str], comp: Component) -> Component:
+        """Replace a simple chain ``names[0] -> ... -> names[-1]`` with the
+        single component ``comp`` (segment fusion).  Every link must be a
+        simple chain edge (out-degree 1 into in-degree 1); the head keeps its
+        single inbound edge's position and the tail's outbound edges keep
+        their slots (successor order is semantic for per-port routing)."""
+        names = list(names)
+        if len(names) < 2:
+            raise ValueError("collapse_chain: need at least two components")
+        for a, b in zip(names, names[1:]):
+            if (a, b) not in self.edges:
+                raise KeyError(f"no edge {a!r} -> {b!r}")
+            if self.out_degree(a) != 1 or self.in_degree(b) != 1:
+                raise ValueError(
+                    f"collapse_chain: {a!r} -> {b!r} is not a simple chain "
+                    f"segment")
+        head, tail = names[0], names[-1]
+        chain = set(names)
+        for n in names:
+            self.vertices.pop(n)
+        self.vertices[comp.name] = comp
+        new_edges = []
+        for (a, b) in self.edges:
+            if a in chain and b in chain:
+                continue
+            elif b == head:
+                new_edges.append((a, comp.name))
+            elif a == tail:
+                new_edges.append((comp.name, b))
+            else:
+                new_edges.append((a, b))
+        self.edges = new_edges
+        self._reindex()
+        return comp
+
     def swap_adjacent(self, u: str, v: str) -> None:
         """Swap two chained components: ... -> u -> v -> ... becomes
         ... -> v -> u -> ... .  Requires the pair to form a simple chain

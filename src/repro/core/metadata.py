@@ -23,6 +23,10 @@ class MetadataStore:
         #: applied rewrites, and the BEFORE (static) / AFTER (rewritten)
         #: partitionings + runtime plans side by side
         self.adaptive: Dict[str, dict] = {}
+        #: per-flow instrumentation of the LAST engine run (EngineRun.spec):
+        #: wall time, copies, h2d/d2h transfer counts+bytes, dispatch calls,
+        #: CacheArena hit/miss/bytes-reused — the per-run cache statistics
+        self.runs: Dict[str, dict] = {}
 
     # ----------------------------------------------------------- register
     def register_flow(self, flow: Dataflow) -> None:
@@ -52,6 +56,12 @@ class MetadataStore:
         selectivity, per-row time, cache bytes) collected by a calibration
         prefix or harvested from a prior run (``FlowStatistics.spec``)."""
         self.statistics[flow.name] = stats.spec()
+
+    def register_run(self, flow: Dataflow, run) -> None:
+        """Record one engine run's scalar instrumentation
+        (``EngineRun.spec``): wall time, copy/transfer counters and the
+        CacheArena reuse statistics attributed to that run."""
+        self.runs[flow.name] = run.spec()
 
     @staticmethod
     def _partition_spec(g_tau) -> dict:
@@ -132,7 +142,8 @@ class MetadataStore:
                            "partitions": self.partitions,
                            "runtime_plans": self.runtime_plans,
                            "statistics": self.statistics,
-                           "adaptive": self.adaptive}, indent=2)
+                           "adaptive": self.adaptive,
+                           "runs": self.runs}, indent=2)
 
     @classmethod
     def from_json(cls, text: str) -> "MetadataStore":
@@ -144,4 +155,5 @@ class MetadataStore:
         store.runtime_plans = d.get("runtime_plans", {})
         store.statistics = d.get("statistics", {})
         store.adaptive = d.get("adaptive", {})
+        store.runs = d.get("runs", {})
         return store

@@ -52,7 +52,7 @@ from typing import Dict, List, Optional, Tuple
 from .component import ComponentType, SourceComponent
 from .graph import Dataflow
 from .partitioner import ExecutionTreeGraph
-from .planner import build_plan, choose_degree
+from .planner import build_plan, choose_degree, discover_segments
 
 #: estimated seconds to copy one byte across a tree->tree transition —
 #: used only to weigh boundary-cut profitability, not correctness
@@ -239,6 +239,31 @@ def _chunk_sensitive_sources(flow: Dataflow) -> bool:
                for c in flow.vertices.values())
 
 
+def fuse_segments_flow(flow: Dataflow) -> List[Rewrite]:
+    """Segment fusion: collapse every maximal fusable row-synchronized chain
+    (``planner.discover_segments``) into a single ``FusedSegment`` activity
+    executed as ONE backend dispatch per chunk (``Backend.compile_segment``).
+
+    Purely structural — safety comes from the chain shape and the row-local
+    §3 contract of the members, not from statistics — so it applies at any
+    optimize level when enabled (``OptimizeOptions.fuse_segments`` /
+    ``REPRO_FUSION=1``).  Refuses across block / semi-block components,
+    fan-in/fan-out, explicit ``StageBoundary`` cuts, order-sensitive and
+    chunk-sensitive members (the discovery rules)."""
+    from ..etl.components import FusedSegment   # deferred (layering)
+    out: List[Rewrite] = []
+    for chain in discover_segments(flow):
+        comps = [flow.component(n) for n in chain]
+        fused = FusedSegment.from_components(comps)
+        flow.collapse_chain(chain, fused)
+        out.append(Rewrite("fuse-segment",
+                           f"{'+'.join(chain)} -> {fused.name} "
+                           f"({len(chain)} dispatches -> 1)"))
+    if out:
+        flow.validate()
+    return out
+
+
 class CostBasedOptimizer:
     """Rewrites a ``Dataflow`` IN PLACE from measured statistics.
 
@@ -252,13 +277,17 @@ class CostBasedOptimizer:
                  min_stream_bytes: int = MIN_STREAM_BYTES,
                  copy_seconds_per_byte: float = COPY_SECONDS_PER_BYTE,
                  max_passes: int = 8,
-                 max_boundary_inserts: int = 1):
+                 max_boundary_inserts: int = 1,
+                 fuse_segments: bool = False):
         self.flow = flow
         self.stats = stats
         self.streaming = streaming
         self.min_stream_bytes = min_stream_bytes
         self.copy_seconds_per_byte = copy_seconds_per_byte
         self.max_passes = max_passes
+        #: run segment fusion (fuse_segments_flow) after the statistics-
+        #: driven rules settle, so commutes/cuts see individual activities
+        self.fuse_segments = fuse_segments
         # the overlap model (min(T_up, T_down) gained per cut) reasons about
         # ONE producer/consumer pair; chained cuts do not compose gains, so
         # inserts are capped per optimize() round
@@ -274,6 +303,10 @@ class CostBasedOptimizer:
                        or self._boundary_rules())
             if not changed:
                 break
+        if self.fuse_segments:
+            # structural segment fusion LAST: the statistics-driven rules
+            # above reason about individual activities
+            self.rewrites.extend(fuse_segments_flow(self.flow))
         self.flow.validate()
         return self.rewrites
 

@@ -31,7 +31,7 @@ from .component import Component
 from .executor import AdmissionGate, RunAbort, SharedWorkerPool, TaskFuture
 from .graph import Dataflow
 from .partitioner import ExecutionTree
-from .shared_cache import GLOBAL_CACHE_STATS, SharedCache
+from .shared_cache import SharedCache, record_copy
 
 # deliver_fn(dst_component_name, cache, split_index, src_tree_id)
 DeliverFn = Callable[[str, SharedCache, int, int], None]
@@ -179,29 +179,46 @@ class TreePipeline:
         if not succs:
             return
         per_port = len(outs) == len(succs) and len(outs) > 1
-        first_intra_used = False
-        for i, u in enumerate(succs):
-            out = outs[i] if per_port else outs[0]
-            out.split_index = split_index
-            if self.tree_of.get(u) == self.tree.tree_id:
-                if per_port:
+        if per_port:
+            for i, u in enumerate(succs):
+                out = outs[i]
+                out.split_index = split_index
+                if self.tree_of.get(u) == self.tree.tree_id:
                     self._walk(u, out)
                 else:
-                    if not first_intra_used:
-                        first_intra_used = True
-                        self._walk(u, out)
-                    else:
-                        branch = out.copy()   # unavoidable copy on fan-out
-                        GLOBAL_CACHE_STATS.record(out)
-                        branch.split_index = split_index
-                        self._walk(u, branch)
+                    # tree -> tree transition: COPY edge (paper §4.1); the
+                    # deliver fn may block on a bounded channel (backpressure)
+                    copied = out.copy()
+                    record_copy(out)
+                    copied.split_index = split_index
+                    self.deliver(u, copied, split_index, self.tree.tree_id)
+            return
+        out = outs[0]
+        out.split_index = split_index
+        # ONE intra-tree successor consumes the shared cache in place; every
+        # other successor's copy is snapshotted BEFORE any in-place walk can
+        # mutate it (a compacting Filter on the first branch must not drop
+        # rows from its siblings' input)
+        intra = [u for u in succs if self.tree_of.get(u) == self.tree.tree_id]
+        in_place = intra[0] if intra else None
+        handoff: List[SharedCache] = []
+        original_used = False
+        for u in succs:
+            if u == in_place and not original_used:
+                original_used = True
+                handoff.append(out)
             else:
-                # tree -> tree transition: COPY edge (paper §4.1); the
-                # deliver fn may block on a bounded channel (backpressure)
-                copied = out.copy()
-                GLOBAL_CACHE_STATS.record(out)
-                copied.split_index = split_index
-                self.deliver(u, copied, split_index, self.tree.tree_id)
+                branch = out.copy()       # unavoidable copy on fan-out
+                record_copy(out)
+                branch.split_index = split_index
+                handoff.append(branch)
+        for u, cache in zip(succs, handoff):
+            if self.tree_of.get(u) == self.tree.tree_id:
+                self._walk(u, cache)
+                if cache is not out:
+                    cache.recycle()
+            else:
+                self.deliver(u, cache, split_index, self.tree.tree_id)
 
     def _walk(self, node: str, cache: SharedCache) -> None:
         outs = self.runners[node].process(cache, shared=self.shared)
@@ -219,6 +236,9 @@ class TreePipeline:
                 self._walk(self.tree.root, cache)
             else:
                 self._route(self.tree.root, [cache], cache.split_index)
+            # the split has fully flowed through the tree (sinks snapshot,
+            # cross-tree successors got copies): return its arena buffers
+            cache.recycle()
         except BaseException as e:
             self.errors.append(e)
             if self.abort is not None:

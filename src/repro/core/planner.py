@@ -26,8 +26,62 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .component import ComponentType
 from .graph import Dataflow
 from .partitioner import ExecutionTreeGraph
+
+
+# ---------------------------------------------------------------------------
+#  Segment discovery — maximal fusable row-synchronized chains
+# ---------------------------------------------------------------------------
+def _segment_fusable(comp) -> bool:
+    """A component may join a fused segment iff it is row-synchronized,
+    declares segment ops (row-local by the §3 contract), is not an explicit
+    stage cut, not order-sensitive, and not chunk-sensitive (its data
+    semantics must not depend on where chunk boundaries fall, because fused
+    device kernels pad chunks to a bucketed batch size)."""
+    return (comp.ctype == ComponentType.ROW_SYNC
+            and not comp.order_sensitive
+            and not comp.tree_boundary
+            and not getattr(comp, "chunk_sensitive", False)
+            and comp.segment_ops() is not None)
+
+
+def discover_segments(flow: Dataflow) -> List[List[str]]:
+    """Find every maximal chain of fusable row-synchronized components.
+
+    A chain extends across an edge u -> v only when it is a simple chain
+    segment (out-degree(u) == 1, in-degree(v) == 1) and both endpoints are
+    fusable; fan-in/fan-out, block / semi-block components, sinks, explicit
+    ``StageBoundary`` cuts, order-sensitive and chunk-sensitive members all
+    terminate (or refuse) a segment.  Only chains of length >= 2 are
+    returned — fusing a single component would only rename it."""
+    chains: List[List[str]] = []
+    seen: set = set()
+    for name in flow.topo_order():
+        if name in seen or not _segment_fusable(flow.component(name)):
+            continue
+        preds = flow.pred(name)
+        if (len(preds) == 1 and flow.out_degree(preds[0]) == 1
+                and _segment_fusable(flow.component(preds[0]))):
+            continue                 # not a chain head; covered upstream
+        chain = [name]
+        seen.add(name)
+        cur = name
+        while True:
+            succs = flow.succ(cur)
+            if len(succs) != 1:
+                break
+            nxt = succs[0]
+            if (flow.in_degree(nxt) != 1
+                    or not _segment_fusable(flow.component(nxt))):
+                break
+            chain.append(nxt)
+            seen.add(nxt)
+            cur = nxt
+        if len(chain) >= 2:
+            chains.append(chain)
+    return chains
 
 
 @dataclass

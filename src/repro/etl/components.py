@@ -27,7 +27,7 @@ from ..core.backend import AGG_OPS
 from ..core.component import (BlockComponent, Component, ComponentType,
                               SemiBlockComponent, SinkComponent,
                               SourceComponent)
-from ..core.shared_cache import SharedCache, concat_caches
+from ..core.shared_cache import GLOBAL_ARENA, SharedCache, concat_caches
 
 
 # ---------------------------------------------------------------------------
@@ -60,9 +60,19 @@ class ArraySource(SourceComponent):
         while i < self._n:
             j = min(i + chunk_rows, self._n)
             # a chunk view is the root output split; downstream mutators
-            # compact/overwrite in place, so materialize the chunk buffer once
-            cache = SharedCache({k: np.array(v[i:j]) for k, v in
-                                 self.columns.items()}, j - i, split_index=idx)
+            # compact/overwrite in place, so materialize the chunk buffer
+            # once — drawn from the CacheArena, so the steady state of a
+            # chunked run recycles the same few buffers (zero per-chunk
+            # allocation) once the executor returns consumed splits
+            cols: Dict[str, np.ndarray] = {}
+            owned = []
+            for k, v in self.columns.items():
+                arr, root = GLOBAL_ARENA.acquire_copy(v[i:j])
+                cols[k] = arr
+                if root is not None:
+                    owned.append(root)
+            cache = SharedCache(cols, j - i, split_index=idx)
+            cache._owned = owned or None
             self.rows_out += j - i
             yield cache
             i = j
@@ -106,6 +116,9 @@ class Filter(RowSyncMT):
 
     def consumed_columns(self) -> Optional[frozenset]:
         return self.reads
+
+    def segment_ops(self) -> list:
+        return [("filter", self.predicate, self.reads)]
 
     def process_range(self, cache: SharedCache, rows: slice) -> dict:
         return {"__mask__": self.get_backend().filter_mask(self.predicate,
@@ -168,6 +181,10 @@ class Lookup(RowSyncMT):
     def consumed_columns(self) -> frozenset:
         return frozenset({self.key_col})
 
+    def segment_ops(self) -> list:
+        return [("lookup", self.dim, self.key_col, dict(self.return_cols),
+                 self.default, self.matched_flag)]
+
     def process_range(self, cache: SharedCache, rows: slice) -> dict:
         bk = self.get_backend()
         vals = cache.col(self.key_col)[rows]
@@ -210,6 +227,9 @@ class Expression(RowSyncMT):
 
     def consumed_columns(self) -> Optional[frozenset]:
         return self.reads
+
+    def segment_ops(self) -> list:
+        return [("expr", self.out_col, self.fn, self.reads)]
 
     def process_range(self, cache: SharedCache, rows: slice) -> dict:
         return {self.out_col: self.get_backend().eval_expression(self.fn,
@@ -259,11 +279,131 @@ class FusedExpression(Component):
     def consumed_columns(self) -> Optional[frozenset]:
         return self.reads
 
+    def segment_ops(self) -> list:
+        # per-sub-expression reads are unknown; the combined external read
+        # set (self.reads, None => unknown) over-approximates each of them
+        return [("expr", out_col, fn, self.reads)
+                for out_col, fn in self.exprs]
+
     def _run(self, cache: SharedCache) -> List[SharedCache]:
         bk = self.get_backend()
         for out_col, fn in self.exprs:
             cache.add_column(out_col,
                              bk.eval_expression(fn, cache, slice(0, cache.n)))
+        return [cache]
+
+
+class FusedSegment(Component):
+    """A maximal row-synchronized chain (Filter / Expression / Lookup /
+    Project / Converter and fused combinations) collapsed into ONE pipeline
+    activity by segment fusion (core/planner.discover_segments +
+    core/optimizer.fuse_segments_flow).
+
+    The whole segment executes as a SINGLE backend dispatch per chunk via
+    ``Backend.compile_segment``: the numpy backend composes the ops into one
+    vectorized host pass (bit-identical to the unfused chain), the jax
+    backend jits the segment into one device kernel (one h2d in, one d2h out
+    per chunk).  Ops are declarative tuples (see each component's
+    ``segment_ops``):
+
+        ("filter",  predicate, reads_or_None)
+        ("expr",    out_col, fn, reads_or_None)
+        ("lookup",  dim, key_col, return_cols, default, matched_flag)
+        ("project", keep_tuple)
+        ("convert", conversions_dict)
+
+    CONTRACT: members must be row-local (each output row a function of its
+    own input row only) — exactly the paper's §3 row-synchronized
+    classification.  The compiled runner is cached per backend on the
+    component, so tracing/composition happens once per run."""
+
+    def __init__(self, name: str, ops: Sequence[tuple],
+                 members: Optional[Sequence[str]] = None,
+                 produced: Optional[frozenset] = None,
+                 consumed: Optional[frozenset] = None,
+                 row_pres: bool = False):
+        super().__init__(name)
+        self.ops = list(ops)
+        self.members = list(members or [])
+        self._produced = produced
+        self._consumed = consumed
+        self.row_preserving = row_pres
+        self._compiled: Dict[str, Callable] = {}
+
+    @classmethod
+    def from_components(cls, comps: Sequence[Component]) -> "FusedSegment":
+        """Fuse an ordered chain of fusable components, combining their ops
+        and provenance.  Raises ``ValueError`` on a non-fusable member."""
+        ops: List[tuple] = []
+        produced: Optional[set] = set()
+        consumed: Optional[set] = set()
+        for c in comps:
+            sub = c.segment_ops()
+            if sub is None:
+                raise ValueError(f"component {c.name!r} ({type(c).__name__}) "
+                                 f"cannot join a fused segment")
+            ops.extend(sub)
+            r = c.consumed_columns()
+            p = c.produced_columns()
+            if consumed is not None:
+                # reads of columns produced EARLIER in the segment are
+                # internal; unknown reads (or unknown prior writes) poison
+                # the whole declared set
+                consumed = (None if r is None or produced is None
+                            else consumed | (r - produced))
+            if produced is not None:
+                produced = None if p is None else produced | p
+        name = f"fusedseg({'+'.join(c.name for c in comps)})"
+        return cls(name, ops, members=[c.name for c in comps],
+                   produced=None if produced is None else frozenset(produced),
+                   consumed=None if consumed is None else frozenset(consumed),
+                   row_pres=all(c.row_preserving for c in comps))
+
+    def produced_columns(self) -> Optional[frozenset]:
+        return self._produced
+
+    def consumed_columns(self) -> Optional[frozenset]:
+        return self._consumed
+
+    def kernel_input_columns(self) -> Optional[frozenset]:
+        """External columns the segment's compute ops read (the upload set
+        for device backends); ``None`` when some op's read set is undeclared
+        — the backend then feeds every cache column to the kernel."""
+        needed: set = set()
+        produced: set = set()
+        for op in self.ops:
+            kind = op[0]
+            if kind == "filter":
+                if op[2] is None:
+                    return None
+                needed |= op[2] - produced
+            elif kind == "expr":
+                if op[3] is None:
+                    return None
+                needed |= op[3] - produced
+                produced.add(op[1])
+            elif kind == "lookup":
+                needed |= {op[2]} - produced
+                produced.update(op[3])
+                if op[5]:
+                    produced.add(op[5])
+            elif kind == "convert":
+                needed |= set(op[1]) - produced
+                produced.update(op[1])
+            # project: metadata-only, nothing to upload
+        return frozenset(needed)
+
+    def spec(self) -> Dict[str, str]:
+        out = super().spec()
+        out["members"] = ",".join(self.members)
+        return out
+
+    def _run(self, cache: SharedCache) -> List[SharedCache]:
+        bk = self.get_backend()
+        runner = self._compiled.get(bk.name)
+        if runner is None:
+            runner = self._compiled[bk.name] = bk.compile_segment(self)
+        runner(cache)
         return [cache]
 
 
@@ -282,6 +422,9 @@ class Project(Component):
 
     def consumed_columns(self) -> frozenset:
         return frozenset(self.keep)
+
+    def segment_ops(self) -> list:
+        return [("project", tuple(self.keep))]
 
     def _run(self, cache: SharedCache) -> List[SharedCache]:
         cache.keep_columns(self.keep)
@@ -304,6 +447,9 @@ class Converter(Component):
 
     def consumed_columns(self) -> frozenset:
         return frozenset(self.conversions)
+
+    def segment_ops(self) -> list:
+        return [("convert", dict(self.conversions))]
 
     def _run(self, cache: SharedCache) -> List[SharedCache]:
         for col, dt in self.conversions.items():
@@ -348,7 +494,7 @@ class Aggregate(BlockComponent):
         self.aggs = dict(aggs)
 
     def finish(self, state: List[SharedCache]) -> SharedCache:
-        merged = concat_caches(state, ordered=True)
+        merged = concat_caches(state, ordered=True, recycle_inputs=True)
         n = merged.n
         if n == 0:
             cols = {g: np.array([], dtype=np.int64) for g in self.group_by}
@@ -379,7 +525,7 @@ class Sort(BlockComponent):
         self.ascending = ascending
 
     def finish(self, state: List[SharedCache]) -> SharedCache:
-        merged = concat_caches(state, ordered=True)
+        merged = concat_caches(state, ordered=True, recycle_inputs=True)
         order = self.get_backend().sort_rows(
             [merged.col(b) for b in self.by], ascending=self.ascending)
         merged.take(order)
@@ -397,7 +543,7 @@ class Union(SemiBlockComponent):
         super().__init__(name)
 
     def finish(self, state: List[SharedCache]) -> SharedCache:
-        out = concat_caches(state, ordered=False)
+        out = concat_caches(state, ordered=False, recycle_inputs=True)
         self.rows_out += out.n
         return out
 
@@ -410,7 +556,7 @@ class Merge(SemiBlockComponent):
         self.by = list(by)
 
     def finish(self, state: List[SharedCache]) -> SharedCache:
-        merged = concat_caches(state, ordered=False)
+        merged = concat_caches(state, ordered=False, recycle_inputs=True)
         merged.take(self.get_backend().sort_rows(
             [merged.col(b) for b in self.by]))
         self.rows_out += merged.n

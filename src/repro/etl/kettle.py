@@ -10,6 +10,7 @@ shared caching and NO Theorem-1 pipeline planning.
 """
 from __future__ import annotations
 
+import contextvars
 import queue
 import threading
 import time
@@ -19,9 +20,9 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from ..core.component import ComponentType, SourceComponent
-from ..core.engine import EngineRun
+from ..core.engine import EngineRun, _run_counters
 from ..core.graph import Dataflow
-from ..core.shared_cache import GLOBAL_CACHE_STATS, SharedCache
+from ..core.shared_cache import SharedCache, cache_stats_scope, record_copy
 
 _EOS = object()
 
@@ -57,7 +58,7 @@ class KettleEngine:
             for i, u in enumerate(succs):
                 out = outs[i] if per_port else outs[0]
                 copied = out.copy()               # rowset hop = physical copy
-                GLOBAL_CACHE_STATS.record(out)
+                record_copy(out)
                 copied.split_index = split_index
                 inqs[u].put(copied)
 
@@ -113,27 +114,30 @@ class KettleEngine:
                 errors.append(e)
                 route_eos(name)
 
-        before = GLOBAL_CACHE_STATS.snapshot()
         t_start = time.perf_counter()
-        threads = [threading.Thread(target=step_thread, args=(n,), daemon=True,
-                                    name=f"kettle-{n}")
-                   for n in flow.topo_order()]
-        for th in threads:
-            th.start()
-        for th in threads:
-            th.join()
-        if pool is not None:
-            pool.shutdown()
+        with cache_stats_scope() as stats:
+            # raw step threads do not inherit contextvars: run each under a
+            # context captured INSIDE the scope so the per-run collector
+            # sees every hop copy
+            ctx = contextvars.copy_context()
+            threads = [threading.Thread(
+                target=lambda n=n: ctx.copy().run(step_thread, n),
+                daemon=True, name=f"kettle-{n}")
+                for n in flow.topo_order()]
+            for th in threads:
+                th.start()
+            for th in threads:
+                th.join()
+            if pool is not None:
+                pool.shutdown()
         wall = time.perf_counter() - t_start
-        after = GLOBAL_CACHE_STATS.snapshot()
         if errors:
             raise errors[0]
-        return EngineRun(
-            wall_time=wall,
-            copies=after["copies"] - before["copies"],
-            bytes_copied=after["bytes_copied"] - before["bytes_copied"],
+        run = EngineRun(
+            wall_time=wall, copies=0, bytes_copied=0,
             engine="kettle",
             backend=bk.name,
-            h2d_bytes=after["h2d_bytes"] - before["h2d_bytes"],
-            d2h_bytes=after["d2h_bytes"] - before["d2h_bytes"],
+            dispatch_calls=sum(c.calls for c in flow.vertices.values()),
             activity_times={n: c.busy_time for n, c in flow.vertices.items()})
+        _run_counters(run, stats.snapshot())
+        return run

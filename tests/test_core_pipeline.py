@@ -133,3 +133,38 @@ def test_error_in_activity_propagates():
     flow.connect(b, sink)
     with pytest.raises(RuntimeError, match="boom"):
         OptimizedEngine(flow, OptimizeOptions(num_splits=2)).run()
+
+
+def test_intra_tree_fanout_branches_see_unmutated_input():
+    """Fan-out inside one tree: a compacting Filter on one branch must not
+    drop rows from a sibling branch's input — every other successor's copy
+    is snapshotted BEFORE the in-place walk (streaming == ordinary)."""
+    from repro.core import OrdinaryEngine, StreamingEngine
+    from repro.etl.components import Expression, Filter
+
+    def build():
+        r = np.random.RandomState(7)
+        flow = Dataflow("fanout")
+        src = ArraySource("src", {"v": r.randint(0, 100, 1000).astype(np.int64)})
+        filt = Filter("filt", lambda c, rows: c.col("v")[rows] % 2 == 0,
+                      reads=["v"])
+        expr = Expression("expr", "w", lambda c, rows: c.col("v")[rows] + 1,
+                          reads=["v"])
+        s1, s2 = CollectSink("s1"), CollectSink("s2")
+        for comp in (src, filt, expr, s1, s2):
+            flow.add(comp)
+        flow.connect(src, filt)
+        flow.connect(src, expr)        # second branch: must see ALL rows
+        flow.connect(filt, s1)
+        flow.connect(expr, s2)
+        return flow, s1, s2
+
+    flow_o, o1, o2 = build()
+    OrdinaryEngine(flow_o, chunk_rows=256).run()
+    flow_s, g1, g2 = build()
+    StreamingEngine(flow_s, OptimizeOptions(num_splits=4)).run()
+    for sink_o, sink_s in ((o1, g1), (o2, g2)):
+        expect, got = sink_o.result(), sink_s.result()
+        assert set(expect) == set(got)
+        for k in expect:
+            np.testing.assert_array_equal(got[k], expect[k], err_msg=k)

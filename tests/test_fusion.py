@@ -1,0 +1,407 @@
+"""Segment fusion + CacheArena: discovery/refusal rules, fused-vs-unfused
+engine equality, arena reuse + buffer-poisoning guards, split-aliasing
+checks and scoped per-run statistics.
+
+Backend follows ``REPRO_BACKEND`` (the CI matrix runs this file under both
+``numpy`` and ``jax``); jax-specific assertions are gated on the active
+backend.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (GLOBAL_ARENA, GLOBAL_CACHE_STATS, CacheArena,
+                        Dataflow, MetadataStore, OptimizeOptions,
+                        OptimizedEngine, SharedCache, StreamingEngine,
+                        cache_stats_scope, discover_segments,
+                        fuse_segments_flow, get_default_backend, partition)
+from repro.core.component import StageBoundary
+from repro.core.shared_cache import assert_views_disjoint
+from repro.etl import BUILDERS
+from repro.etl.components import (Aggregate, ArraySource, CollectSink,
+                                  Converter, DimTable, Expression, Filter,
+                                  FusedSegment, Lookup, Project)
+from repro.etl.ssb import generate
+
+
+# ---------------------------------------------------------------------------
+#  helpers
+# ---------------------------------------------------------------------------
+def _data():
+    return generate(lineorder_rows=12_000, customers=500, suppliers=80,
+                    parts=300, seed=11)
+
+
+def _chain_flow(*comps):
+    flow = Dataflow("t")
+    flow.chain(*comps)
+    return flow
+
+
+def _src(n=100, seed=0):
+    r = np.random.RandomState(seed)
+    return ArraySource("src", {
+        "k": r.randint(1, 20, n).astype(np.int64),
+        "v": r.randint(0, 100, n).astype(np.int64)})
+
+
+def _expr(name, out="e"):
+    return Expression(name, out, lambda c, r: c.col("v")[r] + 1, reads=["v"])
+
+
+def _filt(name):
+    return Filter(name, lambda c, r: c.col("v")[r] % 2 == 0, reads=["v"])
+
+
+# ---------------------------------------------------------------------------
+#  discovery + refusal rules
+# ---------------------------------------------------------------------------
+def test_discover_q41_single_segment():
+    qf = BUILDERS["Q4.1"](_data())
+    segs = discover_segments(qf.flow)
+    assert segs == [["lookup_customer", "lookup_supplier", "lookup_part",
+                     "lookup_date", "filter_unmatched", "project",
+                     "profit_expr"]]
+
+
+def test_discover_refuses_stage_boundary():
+    """Q4.1s: the explicit StageBoundary cut splits the chain in two."""
+    qf = BUILDERS["Q4.1s"](_data())
+    segs = discover_segments(qf.flow)
+    assert segs == [["lookup_customer", "lookup_supplier", "lookup_part",
+                     "lookup_date"],
+                    ["filter_unmatched", "project", "profit_expr"]]
+
+
+def test_discover_refuses_block_and_singletons():
+    """An Aggregate terminates the chain; a lone fusable component is not a
+    segment (length >= 2)."""
+    agg = Aggregate("agg", ["k"], {"s": ("v", "sum")})
+    flow = _chain_flow(_src(), _expr("e1"), agg, _expr("e2", out="e2"),
+                       CollectSink("sink"))
+    assert discover_segments(flow) == []
+
+
+def test_discover_refuses_order_sensitive():
+    e1, e2, e3 = _expr("e1", "a"), _expr("e2", "b"), _expr("e3", "c")
+    e2.order_sensitive = True
+    flow = _chain_flow(_src(), e1, e2, e3, CollectSink("sink"))
+    assert discover_segments(flow) == []
+
+
+def test_discover_refuses_chunk_sensitive():
+    e1, e2, e3 = _expr("e1", "a"), _expr("e2", "b"), _expr("e3", "c")
+    e2.chunk_sensitive = True        # data semantics depend on chunking
+    flow = _chain_flow(_src(), e1, e2, e3, CollectSink("sink"))
+    assert discover_segments(flow) == []
+
+
+def test_discover_refuses_fan_out():
+    flow = Dataflow("fan")
+    src, e1 = _src(), _expr("e1", "a")
+    f1, f2 = _filt("f1"), _filt("f2")
+    s1, s2 = CollectSink("s1"), CollectSink("s2")
+    flow.chain(src, e1)
+    flow.add(f1), flow.add(f2), flow.add(s1), flow.add(s2)
+    flow.connect(e1, f1), flow.connect(e1, f2)
+    flow.connect(f1, s1), flow.connect(f2, s2)
+    # e1 fans out: no chain crosses it; f1/f2 are singletons
+    assert discover_segments(flow) == []
+
+
+def test_fused_segment_provenance_and_spec():
+    lk = Lookup("lk", DimTable(np.arange(1, 5, dtype=np.int64),
+                               {"p": np.arange(4, dtype=np.int64)}),
+                "k", {"p": "p"})
+    ex = Expression("ex", "y", lambda c, r: c.col("p")[r] * 2, reads=["p"])
+    fl = Filter("fl", lambda c, r: c.col("y")[r] > 0, reads=["y"])
+    seg = FusedSegment.from_components([lk, ex, fl])
+    assert seg.produced_columns() == frozenset({"p", "y"})
+    # p and y are internal to the segment; only k is an external read
+    assert seg.consumed_columns() == frozenset({"k"})
+    assert seg.kernel_input_columns() == frozenset({"k"})
+    assert not seg.row_preserving          # contains a row-dropper
+    assert seg.spec()["members"] == "lk,ex,fl"
+    # undeclared reads poison the declared sets
+    ex2 = Expression("ex2", "z", lambda c, r: c.col("y")[r])
+    seg2 = FusedSegment.from_components([lk, ex, ex2])
+    assert seg2.consumed_columns() is None
+    assert seg2.kernel_input_columns() is None
+    assert seg2.row_preserving
+
+
+def test_from_components_rejects_unfusable():
+    agg = Aggregate("agg", ["k"], {"s": ("v", "sum")})
+    with pytest.raises(ValueError, match="cannot join"):
+        FusedSegment.from_components([_expr("e1"), agg])
+
+
+def test_fuse_segments_flow_rewrites_graph():
+    flow = _chain_flow(_src(), _expr("e1", "a"), _expr("e2", "b"),
+                       _filt("f1"), CollectSink("sink"))
+    rewrites = fuse_segments_flow(flow)
+    assert [r.rule for r in rewrites] == ["fuse-segment"]
+    assert set(flow.vertices) == {"src", "fusedseg(e1+e2+f1)", "sink"}
+    partition(flow)                 # still a valid partitionable dataflow
+
+
+# ---------------------------------------------------------------------------
+#  engine equality + instrumentation
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("qname", ["Q4.1", "Q4.1s"])
+def test_fused_engine_byte_identical(qname):
+    data = _data()
+    qf_s = BUILDERS[qname](data)
+    # fuse_segments=False pins the baseline even under REPRO_FUSION=1
+    r_s = StreamingEngine(qf_s.flow, OptimizeOptions(
+        num_splits=4, fuse_segments=False)).run()
+    static = qf_s.sink.result()
+
+    qf_f = BUILDERS[qname](data)
+    r_f = StreamingEngine(qf_f.flow, OptimizeOptions(
+        num_splits=4, fuse_segments=True)).run()
+    fused = qf_f.sink.result()
+
+    assert set(fused) == set(static)
+    for k in static:
+        assert fused[k].dtype == static[k].dtype
+        np.testing.assert_array_equal(fused[k], static[k], err_msg=k)
+    assert any(x["rule"] == "fuse-segment" for x in r_f.rewrites)
+    # the headline: the whole row-sync chain dispatches once per chunk
+    assert r_f.dispatch_calls < r_s.dispatch_calls
+    if get_default_backend().name == "jax":
+        assert r_f.h2d_transfers < r_s.h2d_transfers
+        assert r_f.d2h_transfers <= r_s.d2h_transfers
+
+
+def test_fusion_env_var_and_metadata_run_record(monkeypatch):
+    monkeypatch.setenv("REPRO_FUSION", "1")
+    data = _data()
+    qf = BUILDERS["Q4.1"](data)
+    md = MetadataStore()
+    run = OptimizedEngine(qf.flow, OptimizeOptions(num_splits=2),
+                          metadata=md).run()
+    assert any(x["rule"] == "fuse-segment" for x in run.rewrites)
+    rec = md.runs["ssb-q4.1"]
+    assert rec["dispatch_calls"] == run.dispatch_calls
+    assert rec["arena_hits"] == run.arena_hits
+    # JSON roundtrip keeps the run record
+    assert MetadataStore.from_json(md.to_json()).runs["ssb-q4.1"] == rec
+
+
+def test_fused_segment_lying_read_declaration():
+    """A declared read set that misses a column the lambda touches: the host
+    reference runner pulls the column lazily from the cache and stays
+    correct; the jax kernel (which uploads exactly the declared set) fails
+    LOUDLY instead of computing silently wrong rows."""
+    def build():
+        ex = Expression("ex", "y",
+                        lambda c, r: c.col("v")[r] + c.col("k")[r],
+                        reads=["v"])          # lies: also reads k
+        return _chain_flow(_src(), ex, _filt("fl"), CollectSink("sink"))
+
+    if get_default_backend().name == "jax":
+        flow = build()
+        fuse_segments_flow(flow)
+        with pytest.raises(Exception, match="not visible|k"):
+            StreamingEngine(flow, OptimizeOptions(num_splits=2)).run()
+    else:
+        flow_s = build()
+        sink_s = flow_s.component("sink")
+        StreamingEngine(flow_s, OptimizeOptions(num_splits=2)).run()
+        flow_f = build()
+        sink_f = flow_f.component("sink")
+        assert fuse_segments_flow(flow_f)
+        StreamingEngine(flow_f, OptimizeOptions(num_splits=2)).run()
+        for k, v in sink_s.result().items():
+            np.testing.assert_array_equal(sink_f.result()[k], v, err_msg=k)
+
+
+def test_fused_segment_does_not_resurrect_projected_columns():
+    """A component reading a column an earlier Project dropped fails inside
+    the fused segment exactly like the unfused chain (KeyError) — the host
+    runner must not silently re-read it from the underlying cache."""
+    def build():
+        proj = Project("proj", ["k"])                 # drops v
+        conv = Converter("conv", {"v": np.float32})   # reads dropped v
+        return _chain_flow(_src(), proj, conv, CollectSink("sink"))
+
+    flow_u = build()
+    with pytest.raises(KeyError):
+        StreamingEngine(flow_u, OptimizeOptions(
+            num_splits=2, fuse_segments=False)).run()
+
+    flow_f = build()
+    assert fuse_segments_flow(flow_f)
+    with pytest.raises(KeyError):
+        StreamingEngine(flow_f, OptimizeOptions(num_splits=2)).run()
+
+
+# ---------------------------------------------------------------------------
+#  CacheArena
+# ---------------------------------------------------------------------------
+def test_arena_reuse_hit_miss_counters():
+    arena = CacheArena(enabled=True, max_bytes=1 << 20)
+    before = GLOBAL_CACHE_STATS.snapshot()
+    a1, r1 = arena.acquire(np.int64, (100,))
+    assert a1.shape == (100,) and a1.dtype == np.int64
+    arena.release(r1)
+    a2, r2 = arena.acquire(np.int64, (100,))
+    assert r2 is r1                       # same root buffer recycled
+    after = GLOBAL_CACHE_STATS.snapshot()
+    assert after["arena_hits"] - before["arena_hits"] == 1
+    assert after["arena_misses"] - before["arena_misses"] == 1
+    assert after["arena_bytes_reused"] - before["arena_bytes_reused"] == 800
+
+
+def test_arena_bucket_cap_and_foreign_buffers():
+    arena = CacheArena(enabled=True, max_bytes=1024)
+    _, r1 = arena.acquire(np.uint8, (4096,))
+    arena.release(r1)                     # 4096 > cap: dropped
+    assert arena.pooled_buffers() == 0
+    arena.release(np.empty(100, np.uint8))   # not a pow2 arena bucket
+    arena.release(np.empty(512, np.int64))   # wrong dtype
+    assert arena.pooled_buffers() == 0
+
+
+def test_arena_disabled_is_plain_allocation():
+    arena = CacheArena(enabled=False)
+    arr, root = arena.acquire(np.float64, (10,))
+    assert root is None and arr.flags["OWNDATA"]
+    arena.release(root)                   # no-op
+
+
+def test_arena_poisoning_and_double_release_guard(monkeypatch):
+    monkeypatch.setenv("REPRO_CACHE_GUARD", "1")
+    arena = CacheArena(enabled=True, max_bytes=1 << 20)
+    arr, root = arena.acquire(np.uint8, (300,))
+    arr[:] = 7
+    arena.release(root)
+    assert (root == 0xAB).all()           # poisoned: use-after-recycle is loud
+    with pytest.raises(RuntimeError, match="double release"):
+        arena.release(root)
+
+
+def test_recycle_returns_buffers_and_is_idempotent():
+    arena_before = GLOBAL_ARENA.pooled_buffers()
+    c = SharedCache({"a": np.arange(64, dtype=np.int64)}, 64)
+    cp = c.copy()
+    assert cp._owned is not None
+    cp.recycle()
+    assert cp._owned is None
+    cp.recycle()                          # idempotent
+    assert GLOBAL_ARENA.pooled_buffers() >= arena_before
+
+
+def test_engine_equality_under_guard(monkeypatch):
+    """With poisoning on, a premature recycle anywhere in the executor would
+    corrupt sink rows — byte equality against the unfused/no-guard run is
+    the use-after-recycle detector."""
+    data = _data()
+    qf = BUILDERS["Q4.1"](data)
+    StreamingEngine(qf.flow, OptimizeOptions(num_splits=4)).run()
+    baseline = qf.sink.result()
+
+    monkeypatch.setenv("REPRO_CACHE_GUARD", "1")
+    qf2 = BUILDERS["Q4.1"](data)
+    StreamingEngine(qf2.flow, OptimizeOptions(
+        num_splits=4, fuse_segments=True)).run()
+    guarded = qf2.sink.result()
+    for k in baseline:
+        np.testing.assert_array_equal(guarded[k], baseline[k], err_msg=k)
+
+
+# ---------------------------------------------------------------------------
+#  split aliasing guard
+# ---------------------------------------------------------------------------
+def test_split_views_alias_parent_but_are_disjoint():
+    c = SharedCache({"a": np.arange(100, dtype=np.int64)}, 100)
+    parts = c.split(4)
+    assert all(p.columns["a"].base is not None for p in parts)  # views
+    assert_views_disjoint(parts)          # contract: pairwise disjoint
+
+
+def test_overlap_guard_raises_on_aliased_splits():
+    base = np.arange(100, dtype=np.int64)
+    a = SharedCache({"a": base[0:60]}, 60)
+    b = SharedCache({"a": base[40:100]}, 60)   # overlaps rows 40..59
+    with pytest.raises(RuntimeError, match="overlap"):
+        assert_views_disjoint([a, b])
+
+
+def test_split_guard_active_under_env(monkeypatch):
+    monkeypatch.setenv("REPRO_CACHE_GUARD", "1")
+    c = SharedCache({"a": np.arange(50, dtype=np.int64)}, 50)
+    assert len(c.split(3)) == 3           # clean splits pass the check
+
+
+# ---------------------------------------------------------------------------
+#  scoped per-run statistics
+# ---------------------------------------------------------------------------
+def test_cache_stats_scope_attributes_per_run():
+    from repro.core.shared_cache import record_copy
+    c = SharedCache({"a": np.arange(256, dtype=np.int64)}, 256)
+    record_copy(c)                        # outside any scope
+    with cache_stats_scope() as s1:
+        record_copy(c)
+        record_copy(c)
+        with cache_stats_scope() as s2:   # nested scopes both observe
+            record_copy(c)
+    assert s1.snapshot()["copies"] == 3
+    assert s2.snapshot()["copies"] == 1
+
+
+def test_engine_runs_report_scoped_counters():
+    """Two sequential engine runs attribute copies/arena traffic to their
+    own EngineRun — equal workloads report equal counters."""
+    data = _data()
+    runs = []
+    for _ in range(2):
+        qf = BUILDERS["Q4.1"](data)
+        runs.append(StreamingEngine(
+            qf.flow, OptimizeOptions(num_splits=4)).run())
+    assert runs[0].copies == runs[1].copies
+    assert runs[0].dispatch_calls == runs[1].dispatch_calls
+    assert runs[0].h2d_transfers == runs[1].h2d_transfers
+
+
+def test_worker_pool_propagates_scope():
+    from repro.core import SharedWorkerPool
+    from repro.core.shared_cache import record_transfer
+    pool = SharedWorkerPool(2)
+    try:
+        with cache_stats_scope() as s:
+            futs = [pool.submit(record_transfer, "h2d", 10)
+                    for _ in range(4)]
+            for f in futs:
+                f.result()
+        assert s.snapshot()["h2d_transfers"] == 4
+        assert s.snapshot()["h2d_bytes"] == 40
+    finally:
+        pool.shutdown()
+
+
+# ---------------------------------------------------------------------------
+#  bench JSON writer
+# ---------------------------------------------------------------------------
+def test_bench_json_schema(tmp_path, monkeypatch):
+    import json as _json
+    import sys
+    sys.path.insert(0, os.path.dirname(os.path.dirname(__file__)))
+    from benchmarks.run import write_bench_json
+    monkeypatch.setenv("BENCH_TAG", "unittest")
+    path = tmp_path / "BENCH_unittest.json"
+    stats = GLOBAL_CACHE_STATS.snapshot()
+    write_bench_json({"sec": {"wall_s": 1.0, "status": "ok",
+                              "cache_stats": stats}},
+                     mode="full", path=str(path))
+    payload = _json.loads(path.read_text())
+    assert payload["tag"] == "unittest"
+    assert payload["mode"] == "full"
+    assert payload["backend"] in ("numpy", "jax")
+    sec = payload["sections"]["sec"]
+    assert sec["status"] == "ok"
+    for key in ("copies", "h2d_transfers", "arena_hits", "arena_misses",
+                "arena_bytes_reused"):
+        assert key in sec["cache_stats"]

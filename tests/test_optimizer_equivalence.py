@@ -185,6 +185,74 @@ def test_rewritten_flow_equivalence_optimized(spec):
 
 
 # ---------------------------------------------------------------------------
+#  segment fusion: fused flows must be byte-identical too
+# ---------------------------------------------------------------------------
+def _assert_fused_identical(spec, engine_cls, adaptive=False):
+    """Fusion (OptimizeOptions.fuse_segments) — alone or stacked on the
+    optimize_level=2 adaptive rewrites — produces byte-identical sink output
+    versus the untouched static flow, for every generated DAG."""
+    _, num_splits, _ = spec
+    flow_s, sink_s = build_flow(spec)
+    # fuse_segments=False pins the baseline even under REPRO_FUSION=1
+    engine_cls(flow_s, OptimizeOptions(num_splits=num_splits,
+                                       fuse_segments=False)).run()
+    static = sink_s.result()
+
+    flow_f, sink_f = build_flow(spec)
+    opts = OptimizeOptions(num_splits=num_splits, fuse_segments=True)
+    if adaptive:
+        opts = OptimizeOptions(num_splits=num_splits, fuse_segments=True,
+                               optimize_level=2, calibration_rows=128)
+    run = engine_cls(flow_f, opts).run()
+    fused = sink_f.result()
+
+    assert set(fused.keys()) == set(static.keys()), \
+        f"column sets differ after rewrites {run.rewrites}"
+    for k in static:
+        assert fused[k].dtype == static[k].dtype, \
+            f"dtype of {k} changed: {run.rewrites}"
+        np.testing.assert_array_equal(
+            fused[k], static[k],
+            err_msg=f"column {k} differs after rewrites {run.rewrites} "
+                    f"(spec={spec})")
+    partition(flow_f)
+
+
+@given(flow_spec())
+@settings(max_examples=N_EXAMPLES, deadline=None)
+def test_fused_flow_equivalence_streaming(spec):
+    """Segment fusion on the STREAMING engine is byte-identical to the
+    static flow, for every generated DAG (both backends via REPRO_BACKEND)."""
+    _assert_fused_identical(spec, StreamingEngine)
+
+
+@given(flow_spec())
+@settings(max_examples=max(N_EXAMPLES // 4, 10), deadline=None)
+def test_fused_adaptive_flow_equivalence_streaming(spec):
+    """Fusion stacked on the full optimize_level=2 adaptive path (commutes,
+    expression fusion, boundary cuts, re-planning) stays byte-identical."""
+    _assert_fused_identical(spec, StreamingEngine, adaptive=True)
+
+
+def test_fused_equivalence_all_rules_fire_together():
+    spec = (7, 4, [("lookup", 3, 0, True),
+                   ("expr", 3, 4, False),
+                   ("expr", 5, 0, True),
+                   ("filter", 4, 30, True),
+                   ("agg", 2, 5, "sum"),
+                   ("sort", 0)])
+    _assert_fused_identical(spec, StreamingEngine, adaptive=True)
+
+
+def test_fused_equivalence_undeclared_reads_fall_back():
+    """Undeclared read sets force the whole-cache upload fallback on device
+    backends — results must still be byte-identical."""
+    spec = (13, 4, [("lookup", 5, 1, False), ("filter", 2, 40, False),
+                    ("expr", 1, 6, False)])
+    _assert_fused_identical(spec, StreamingEngine)
+
+
+# ---------------------------------------------------------------------------
 #  deterministic regressions: shapes the generator rarely lands on exactly
 # ---------------------------------------------------------------------------
 def test_equivalence_all_rules_fire_together():
