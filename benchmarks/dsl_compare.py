@@ -1,0 +1,108 @@
+"""Lambda-built vs DSL-built SSB Q4.1 — the declarative-API perf A/B.
+
+Both styles run the streaming engine at ``optimize_level=2`` with segment
+fusion on.  The lambda path hand-declares its ``reads=`` lists; the DSL path
+derives them from the expression AST.  On the jax backend the DSL predicates
+trace straight into the fused segment kernel, so the scoped CacheStats
+snapshot must show host<->device transfer counts no worse than the lambda
+baseline (the PR-4 fused path) — and strictly fewer whenever a lambda flow
+under-declares its reads (whole-cache upload fallback).
+
+Emits CSV:
+  dsl.flow,backend,style,wall_s,dispatch_calls,h2d_n,d2h_n,h2d_MB
+  dsl.flow.verdict,backend,dsl_vs_lambda,<identical|FAIL>
+
+The ``--smoke dsl`` part ENFORCES: byte-identical sinks, DSL transfer
+counts <= the lambda fused baseline, and zero optimizer refusals
+attributable to undeclared read sets on the DSL flow.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import OptimizeOptions, StreamingEngine, available_backends
+from repro.etl.queries import build_q4
+
+from .common import BENCH_REPEATS, BENCH_ROWS, ssb_data
+
+BACKENDS = ("numpy", "jax")
+NUM_SPLITS = 8
+CALIBRATION_ROWS = 65_536
+
+
+def _run(data, backend, use_dsl: bool, num_splits: int = NUM_SPLITS,
+         calibration_rows: int = CALIBRATION_ROWS):
+    qf = build_q4(data, use_dsl=use_dsl)
+    run = StreamingEngine(qf.flow, OptimizeOptions(
+        num_splits=num_splits, backend=backend, optimize_level=2,
+        calibration_rows=calibration_rows, fuse_segments=True)).run()
+    return run, qf.sink.result()
+
+
+def _assert_identical(a, b, label: str) -> None:
+    assert set(a) == set(b), f"{label}: column sets differ"
+    for k in b:
+        assert a[k].dtype == b[k].dtype, f"{label}: dtype of {k}"
+        np.testing.assert_array_equal(a[k], b[k], err_msg=f"{label} col {k}")
+
+
+def run(rows: int = None) -> list:
+    rows = rows or max(200_000, BENCH_ROWS // 4)
+    data = ssb_data(rows)
+    out = ["dsl.flow,backend,style,wall_s,dispatch_calls,h2d_n,d2h_n,h2d_MB"]
+    for backend in [b for b in BACKENDS if b in available_backends()]:
+        best, results = {}, {}
+        for use_dsl, style in ((False, "lambda"), (True, "dsl")):
+            for _ in range(max(1, BENCH_REPEATS)):
+                r, res = _run(data, backend, use_dsl)
+                if style not in best or r.wall_time < best[style].wall_time:
+                    best[style], results[style] = r, res
+            r = best[style]
+            out.append(f"dsl.Q4.1,{backend},{style},{r.wall_time:.4f},"
+                       f"{r.dispatch_calls},{r.h2d_transfers},"
+                       f"{r.d2h_transfers},{r.h2d_bytes/1e6:.1f}")
+        _assert_identical(results["dsl"], results["lambda"],
+                          f"Q4.1/{backend}")
+        out.append(f"dsl.Q4.1.verdict,{backend},dsl_vs_lambda,identical")
+    return out
+
+
+def smoke(data) -> int:
+    """CI part: DSL-vs-lambda byte equality on fused adaptive Q4.1 under the
+    active backend, with the declarative path's gates ENFORCED — transfer
+    counts <= the lambda fused baseline (jax) and zero undeclared-read
+    optimizer refusals on the DSL flow."""
+    import traceback
+
+    from repro.core import get_default_backend
+    backend_name = get_default_backend().name
+    try:
+        r_l, lam = _run(data, backend=None, use_dsl=False,
+                        num_splits=4, calibration_rows=8_192)
+        r_d, dsl = _run(data, backend=None, use_dsl=True,
+                        num_splits=4, calibration_rows=8_192)
+        _assert_identical(dsl, lam, "Q4.1")
+        undeclared = [r for r in r_d.refusals if "undeclared" in r["detail"]]
+        assert not undeclared, \
+            f"undeclared-read refusals on the DSL flow: {undeclared}"
+        if backend_name == "jax":
+            assert r_d.h2d_transfers <= r_l.h2d_transfers, \
+                (f"DSL h2d transfers {r_d.h2d_transfers} > lambda fused "
+                 f"baseline {r_l.h2d_transfers}")
+            assert r_d.d2h_transfers <= r_l.d2h_transfers, \
+                (f"DSL d2h transfers {r_d.d2h_transfers} > lambda fused "
+                 f"baseline {r_l.d2h_transfers}")
+    except Exception:
+        traceback.print_exc()
+        print("smoke.dsl.Q4.1,FAIL")
+        return 1
+    print(f"smoke.dsl.Q4.1,rows_ok,"
+          f"h2d_n={r_l.h2d_transfers}->{r_d.h2d_transfers},"
+          f"d2h_n={r_l.d2h_transfers}->{r_d.d2h_transfers},"
+          f"dispatch={r_l.dispatch_calls}->{r_d.dispatch_calls},"
+          f"refusals={len(r_d.refusals)}")
+    return 0
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

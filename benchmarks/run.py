@@ -39,8 +39,8 @@ import sys
 import time
 import traceback
 
-from . import (backend_compare, fig12_pipeline_speedup, fig13_cpu_usage,
-               fig14_multithreading, fig15_optimization,
+from . import (backend_compare, dsl_compare, fig12_pipeline_speedup,
+               fig13_cpu_usage, fig14_multithreading, fig15_optimization,
                fig16_fig17_vs_kettle, fusion, kernel_bench, optimizer,
                roofline, streaming, theorem1_accuracy)
 
@@ -56,11 +56,12 @@ SECTIONS = {
     "backend": backend_compare.run,
     "optimizer": optimizer.run,
     "fusion": fusion.run,
+    "dsl": dsl_compare.run,
     "roofline": lambda: roofline.run("16x16") + roofline.run("2x16x16"),
 }
 
 SMOKE_FLOWS = ("Q1.1", "Q2.1", "Q4.1", "Q4.1s")
-SMOKE_PARTS = ("engines", "backend", "optimizer", "fusion")
+SMOKE_PARTS = ("engines", "backend", "optimizer", "fusion", "dsl")
 
 
 # ---------------------------------------------------------------------------
@@ -75,7 +76,7 @@ def write_bench_json(sections: dict, mode: str, path: str = None) -> str:
     path.  ``sections`` maps section name -> {"wall_s", "status",
     "cache_stats", ...}; top-level metadata records the backend and scale so
     trajectories across PRs compare like with like."""
-    from repro.core import get_default_backend
+    from repro.core import config, get_default_backend
 
     from .common import BENCH_REPEATS, BENCH_ROWS
     tag = bench_tag()                 # one derivation: file name == payload
@@ -83,6 +84,9 @@ def write_bench_json(sections: dict, mode: str, path: str = None) -> str:
         "tag": tag,
         "mode": mode,
         "backend": get_default_backend().name,
+        # how SSB flows were built ("dsl" | "lambda") — the perf trajectory
+        # must tell the declarative path apart from the legacy lambda path
+        "flow_style": config.flow_style(),
         "bench_rows": BENCH_ROWS,
         "bench_repeats": BENCH_REPEATS,
         "created_unix": time.time(),
@@ -224,6 +228,9 @@ def smoke(parts=None) -> int:
         # segment fusion + arena: fused-vs-unfused byte equality + enforced
         # dispatch/h2d reductions
         "fusion": lambda: fusion.smoke(data),
+        # declarative DSL vs legacy lambda flows: byte equality + transfer
+        # counts <= the lambda fused baseline + zero undeclared refusals
+        "dsl": lambda: dsl_compare.smoke(data),
     }
     failures = 0
     records = {}

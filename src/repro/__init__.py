@@ -1,0 +1,28 @@
+"""Public package surface.
+
+The declarative front end in one import:
+
+    import repro
+
+    f = (repro.flow("q4.1")
+         .source(columns)
+         .filter(repro.col("lo_quantity") < 25)
+         .derive("rev", repro.col("lo_extendedprice") * repro.col("lo_discount"))
+         .aggregate([], {"revenue": ("rev", "sum")})
+         .sink())
+    res = repro.Session(backend="jax").run(f, engine="streaming", optimize=2)
+
+Subpackages: ``repro.core`` (dataflow runtime: graph, engines, optimizer,
+backends, config), ``repro.etl`` (component library + SSB flows),
+``repro.kernels`` / ``repro.models`` / ``repro.train`` / ``repro.launch``
+(the jax/pallas model side).
+"""
+from .core.config import snapshot as config_snapshot
+from .core.expr import Col, Expr, Lit, col, lit, where
+from .session import Flow, FlowBuilder, Session, SessionRun, flow
+
+__all__ = [
+    "Col", "Expr", "Lit", "col", "lit", "where",
+    "Flow", "FlowBuilder", "Session", "SessionRun", "flow",
+    "config_snapshot",
+]

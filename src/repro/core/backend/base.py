@@ -26,12 +26,13 @@ module never imports jax.
 """
 from __future__ import annotations
 
-import os
 import threading
 from typing import (Callable, Dict, List, Mapping, Optional, Sequence, Tuple,
                     TYPE_CHECKING)
 
 import numpy as np
+
+from .. import config
 
 if TYPE_CHECKING:  # pragma: no cover
     from ..shared_cache import SharedCache
@@ -40,7 +41,8 @@ if TYPE_CHECKING:  # pragma: no cover
 AGG_OPS = ("sum", "avg", "min", "max", "count")
 
 #: environment variable naming the default backend for the process
-BACKEND_ENV_VAR = "REPRO_BACKEND"
+#: (typed accessor: ``core.config.backend_name``)
+BACKEND_ENV_VAR = config.ENV_BACKEND
 
 DEFAULT_BACKEND = "numpy"
 
@@ -351,7 +353,7 @@ def resolve_backend(name: Optional[str] = None) -> Backend:
     ``REPRO_BACKEND`` env var > "numpy"."""
     if name is None:
         name = (_default_override
-                or os.environ.get(BACKEND_ENV_VAR, "").strip()
+                or config.backend_name()
                 or DEFAULT_BACKEND)
     return get_backend(name)
 

@@ -24,13 +24,14 @@ width so planner channel sizing matches what actually crosses an edge.
 """
 from __future__ import annotations
 
-import os
 import threading
 import weakref
 from typing import Callable, Dict, List, Mapping, Sequence, Tuple
 
 import numpy as np
 
+from .. import config
+from ..expr import ColumnsView, Expr
 from ..shared_cache import GLOBAL_ARENA, is_host_column, record_transfer
 from .base import AGG_OPS, Backend, SegmentEnv
 
@@ -91,7 +92,7 @@ class JaxBackend(Backend):
         self._jax = jax
         self._jnp = jnp
         self._segment_sum = segment_sum
-        self._segsum_impl = os.environ.get("REPRO_SEGSUM_IMPL", "auto")
+        self._segsum_impl = config.segsum_impl()
 
         def _probe(keys, qualifies, vals):
             idx = jnp.searchsorted(keys, vals)
@@ -182,8 +183,47 @@ class JaxBackend(Backend):
                     got = dev["payload"][col] = self.asarray(dim.payload[col])
         return got
 
+    # ---------------------------------------------------- DSL expression jit
+    def _expr_runner(self, expr: Expr):
+        """One jitted XLA computation per DSL expression: the whole AST
+        traces into a single compiled kernel over exactly ``expr.columns()``
+        device arrays — no host lambda round-trip, no per-op dispatch.  The
+        compiled runner is cached on the expression node itself (expressions
+        are long-lived component attributes), and jit's trace cache bounds
+        retraces per argument shape."""
+        got = expr.__dict__.get("_jax_compiled")
+        if got is None:
+            names = sorted(expr.columns())
+
+            def run(*arrays):
+                return expr.evaluate(ColumnsView(dict(zip(names, arrays))),
+                                     slice(None))
+            got = expr.__dict__["_jax_compiled"] = (names, self._jax.jit(run))
+        return got
+
+    def _eval_expr(self, expr: Expr, cache, rows: slice):
+        """Run the jitted expression over the requested row range, padded to
+        the backend's batch alignment so jit sees bucketed shapes — without
+        this, every post-filter chunk (data-dependent length) would force a
+        fresh XLA compile.  Safe because DSL ops are row-local: the zeroed
+        pad rows are sliced off before anyone observes them."""
+        jnp = self._jnp
+        names, fn = self._expr_runner(expr)
+        view = self._view(cache)
+        cols = [view.col(name)[rows] for name in names]
+        n = cols[0].shape[0]
+        align = max(1, self.batch_align)
+        pad = (-n) % align
+        if pad:
+            cols = [jnp.concatenate(
+                [c, jnp.zeros((pad,) + c.shape[1:], c.dtype)]) for c in cols]
+        out = fn(*cols)
+        return out[:n] if pad else out
+
     # ------------------------------------------------------- operator kernels
     def filter_mask(self, predicate: Callable, cache, rows: slice):
+        if isinstance(predicate, Expr) and predicate.columns():
+            return self._eval_expr(predicate, cache, rows).astype(bool)
         mask = predicate(self._view(cache), rows)
         if isinstance(mask, np.ndarray):
             return mask.astype(bool)       # host-computed mask stays host
@@ -191,6 +231,8 @@ class JaxBackend(Backend):
         return self._jnp.asarray(mask, dtype=bool)
 
     def eval_expression(self, fn: Callable, cache, rows: slice):
+        if isinstance(fn, Expr) and fn.columns():
+            return self._eval_expr(fn, cache, rows)
         out = fn(self._view(cache), rows)
         return out if isinstance(out, np.ndarray) else self._jnp.asarray(out)
 

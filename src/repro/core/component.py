@@ -153,6 +153,14 @@ class Component:
         neighbour's outputs are refused."""
         return None
 
+    def output_schema(self, incols: frozenset) -> Optional[frozenset]:
+        """The column set this component emits given input columns
+        ``incols`` — the static schema-propagation hook behind
+        ``planner.infer_schema`` (build-time read validation in the Session
+        API).  ``None`` means unknown; the inference pass then stops
+        validating downstream of this component."""
+        return None
+
     # ------------------------------------------------------------------ misc
     def est_output_bytes(self) -> Optional[int]:
         """Cache-size metadata: estimated total bytes this component emits
@@ -199,6 +207,9 @@ class SinkComponent(Component):
     """Consumes caches (writes results).  Row-synchronized semantics."""
 
     ctype = ComponentType.SINK
+
+    def output_schema(self, incols: frozenset) -> frozenset:
+        return incols            # a sink writes exactly what it receives
 
     def _run(self, cache: SharedCache) -> List[SharedCache]:
         self.write(cache)
@@ -262,3 +273,6 @@ class StageBoundary(Component):
 
     def consumed_columns(self) -> frozenset:
         return frozenset()
+
+    def output_schema(self, incols: frozenset) -> frozenset:
+        return incols

@@ -1,0 +1,133 @@
+"""Typed runtime configuration — every ``REPRO_*`` environment variable in
+one place.
+
+Historically each subsystem parsed its own environment variable at the point
+of use (backend registry, engine fusion switch, cache arena, debug guard,
+test harness).  This module is the single source of truth: one constant per
+variable, one typed accessor per setting, and a ``snapshot()`` the metadata
+store and benchmark JSON can record so a run's configuration is
+reconstructable.
+
+Accessors read the environment on every call (they are cheap), so tests can
+``monkeypatch.setenv`` without cache invalidation, and a long-lived process
+picks up changes the same way the historical inline ``os.environ`` reads
+did.
+
+Every setting also has a first-class API equivalent (see the README table):
+
+    REPRO_BACKEND        OptimizeOptions(backend=...) / Session(backend=...)
+    REPRO_FUSION         OptimizeOptions(fuse_segments=...)
+    REPRO_ARENA          CacheArena(enabled=...)
+    REPRO_ARENA_MAX_MB   CacheArena(max_bytes=...)
+    REPRO_CACHE_GUARD    debug only (split-overlap checks + buffer poisoning)
+    REPRO_SEGSUM_IMPL    kernels.segment_sum(impl=...)
+    REPRO_OPTEQ_EXAMPLES test harness scale (property-based equivalence)
+    REPRO_FLOW_STYLE     etl.queries builders' use_dsl= argument
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, Optional
+
+#: operator backend for the heavy component kernels ("numpy" / "jax")
+ENV_BACKEND = "REPRO_BACKEND"
+#: "1" turns segment fusion on when OptimizeOptions.fuse_segments is unset
+ENV_FUSION = "REPRO_FUSION"
+#: "0" disables the CacheArena buffer pool
+ENV_ARENA = "REPRO_ARENA"
+#: cap on pooled arena bytes, in MB
+ENV_ARENA_MAX_MB = "REPRO_ARENA_MAX_MB"
+#: "1" enables split-overlap checks + 0xAB buffer poisoning (debug mode)
+ENV_CACHE_GUARD = "REPRO_CACHE_GUARD"
+#: example count for the property-based flow-equivalence harness
+ENV_OPTEQ_EXAMPLES = "REPRO_OPTEQ_EXAMPLES"
+#: segment-sum kernel implementation selector ("auto" / "pallas" /
+#: "interpret" / "reference")
+ENV_SEGSUM_IMPL = "REPRO_SEGSUM_IMPL"
+#: how the SSB query builders construct predicates/expressions:
+#: "dsl" (column-expression AST, exact provenance) or "lambda" (the legacy
+#: callable path, kept for A/B benchmarking)
+ENV_FLOW_STYLE = "REPRO_FLOW_STYLE"
+
+DEFAULT_ARENA_MAX_MB = 256
+DEFAULT_OPTEQ_EXAMPLES = 100
+FLOW_STYLES = ("dsl", "lambda")
+
+
+def _raw(name: str) -> Optional[str]:
+    v = os.environ.get(name)
+    if v is None:
+        return None
+    v = v.strip()
+    return v or None
+
+
+# ---------------------------------------------------------------------------
+#  Typed accessors
+# ---------------------------------------------------------------------------
+def backend_name() -> Optional[str]:
+    """Process-default operator backend name, or ``None`` when unset (the
+    registry then falls back to its builtin default)."""
+    return _raw(ENV_BACKEND)
+
+
+def fusion_default() -> bool:
+    """Segment-fusion default when ``OptimizeOptions.fuse_segments`` is left
+    unset (``REPRO_FUSION=1`` => on)."""
+    return _raw(ENV_FUSION) == "1"
+
+
+def arena_enabled() -> bool:
+    """CacheArena pooling switch (``REPRO_ARENA=0`` => off)."""
+    return _raw(ENV_ARENA) != "0"
+
+
+def arena_max_bytes() -> int:
+    """Cap on pooled arena bytes (``REPRO_ARENA_MAX_MB``, default 256 MB)."""
+    v = _raw(ENV_ARENA_MAX_MB)
+    mb = int(v) if v is not None else DEFAULT_ARENA_MAX_MB
+    return mb << 20
+
+
+def cache_guard_enabled() -> bool:
+    """Debug mode: split-overlap checks + poisoned arena releases
+    (``REPRO_CACHE_GUARD=1``)."""
+    return _raw(ENV_CACHE_GUARD) == "1"
+
+
+def opteq_examples(default: int = DEFAULT_OPTEQ_EXAMPLES) -> int:
+    """Example count per property in the flow-equivalence harness."""
+    v = _raw(ENV_OPTEQ_EXAMPLES)
+    return int(v) if v is not None else int(default)
+
+
+def segsum_impl() -> str:
+    """Implementation selector for the segment-sum kernel."""
+    return _raw(ENV_SEGSUM_IMPL) or "auto"
+
+
+def flow_style() -> str:
+    """How the SSB query builders construct predicates/expressions when the
+    caller does not pass ``use_dsl=`` explicitly: "dsl" (default) or
+    "lambda"."""
+    v = _raw(ENV_FLOW_STYLE) or "dsl"
+    if v not in FLOW_STYLES:
+        raise ValueError(
+            f"{ENV_FLOW_STYLE}={v!r} is not a valid flow style; "
+            f"expected one of {FLOW_STYLES}")
+    return v
+
+
+def snapshot() -> Dict[str, object]:
+    """Every setting's effective value — recorded in benchmark JSON so a
+    run's configuration is reconstructable."""
+    return {
+        "backend": backend_name(),
+        "fusion": fusion_default(),
+        "arena": arena_enabled(),
+        "arena_max_bytes": arena_max_bytes(),
+        "cache_guard": cache_guard_enabled(),
+        "opteq_examples": opteq_examples(),
+        "segsum_impl": segsum_impl(),
+        "flow_style": flow_style(),
+    }

@@ -20,11 +20,11 @@ upstream; block / semi-block roots keep accumulate-then-finish semantics.
 """
 from __future__ import annotations
 
-import os
 import time
 from dataclasses import dataclass, field, replace
 from typing import Dict, List, Optional, Tuple
 
+from . import config
 from .backend import Backend, resolve_backend
 from .component import ComponentType, SourceComponent
 from .executor import StreamingExecutor
@@ -35,8 +35,9 @@ from .planner import PipelinePlan, RuntimePlan, build_plan, plan_runtime
 from .shared_cache import SharedCache, cache_stats_scope, record_copy
 
 #: environment switch for segment fusion when OptimizeOptions.fuse_segments
-#: is left unset (the CI fusion leg runs the whole suite under REPRO_FUSION=1)
-FUSION_ENV_VAR = "REPRO_FUSION"
+#: is left unset (the CI fusion leg runs the whole suite under REPRO_FUSION=1;
+#: typed accessor: ``core.config.fusion_default``)
+FUSION_ENV_VAR = config.ENV_FUSION
 
 
 @dataclass
@@ -65,19 +66,25 @@ class EngineRun:
     pool_stats: Dict[str, int] = field(default_factory=dict)
     # adaptive path (optimize_level=2): graph rewrites applied before the run
     rewrites: List[Dict[str, str]] = field(default_factory=list)
+    # rewrites the optimizer REFUSED for safety (with reasons) — refusals
+    # mentioning an "undeclared" read/write set mark optimizations a lambda
+    # predicate silently disabled (the DSL derives provenance instead)
+    refusals: List[Dict[str, str]] = field(default_factory=list)
 
     def summary(self) -> str:
         s = (f"[{self.engine}/{self.backend}] wall={self.wall_time:.3f}s "
              f"copies={self.copies} "
              f"bytes_copied={self.bytes_copied/1e6:.1f}MB")
         if self.h2d_bytes or self.d2h_bytes:
-            s += (f" h2d={self.h2d_bytes/1e6:.1f}MB"
-                  f" d2h={self.d2h_bytes/1e6:.1f}MB")
+            s += (f" h2d={self.h2d_bytes/1e6:.1f}MB/{self.h2d_transfers}x"
+                  f" d2h={self.d2h_bytes/1e6:.1f}MB/{self.d2h_transfers}x")
         if self.arena_hits or self.arena_misses:
             s += (f" arena={self.arena_hits}h/{self.arena_misses}m/"
                   f"{self.arena_bytes_reused/1e6:.1f}MB")
         if self.rewrites:
             s += f" rewrites={len(self.rewrites)}"
+        if self.refusals:
+            s += f" refusals={len(self.refusals)}"
         return s
 
     def spec(self) -> dict:
@@ -94,7 +101,8 @@ class EngineRun:
                 "arena_hits": self.arena_hits,
                 "arena_misses": self.arena_misses,
                 "arena_bytes_reused": self.arena_bytes_reused,
-                "rewrites": list(self.rewrites)}
+                "rewrites": list(self.rewrites),
+                "refusals": list(self.refusals)}
 
 
 def _assign_backend(flow: Dataflow, backend: Backend) -> None:
@@ -224,7 +232,7 @@ class OptimizeOptions:
     def fusion_enabled(self) -> bool:
         if self.fuse_segments is not None:
             return bool(self.fuse_segments)
-        return os.environ.get(FUSION_ENV_VAR, "").strip() == "1"
+        return config.fusion_default()
 
 
 class OptimizedEngine:
@@ -244,7 +252,7 @@ class OptimizedEngine:
     def _adaptive_rewrite(self, bk: Backend, opts: OptimizeOptions):
         """optimize_level=2: calibrate, rewrite the flow from measured
         statistics, re-partition + re-plan with observed costs.  Returns
-        (effective options, applied rewrites)."""
+        (effective options, applied rewrites, refused rewrites)."""
         from .optimizer import (CostBasedOptimizer, measured_edge_bytes,
                                 run_calibration, suggest_pipeline_degree)
         streaming = opts.streaming and opts.concurrent_trees
@@ -285,7 +293,8 @@ class OptimizedEngine:
                 after_partition=self.g_tau, after_plan=self.runtime_plan)
         # the executor reads m' from the options: hand it a private copy so
         # the caller's options object is never mutated
-        return replace(opts, pipeline_degree=m_prime), rewrites
+        return (replace(opts, pipeline_degree=m_prime), rewrites,
+                optimizer.refusals)
 
     # ---------------------------------------------------------------- run
     def run(self) -> EngineRun:
@@ -294,9 +303,9 @@ class OptimizedEngine:
         self.flow.reset_stats()
         bk = resolve_backend(opts.backend)
         _assign_backend(self.flow, bk)      # before planning: est_output_bytes
-        rewrites = []
+        rewrites, refusals = [], []
         if opts.optimize_level >= 2:
-            opts, rewrites = self._adaptive_rewrite(bk, opts)
+            opts, rewrites, refusals = self._adaptive_rewrite(bk, opts)
         else:
             if opts.fusion_enabled():
                 from .optimizer import fuse_segments_flow
@@ -337,7 +346,8 @@ class OptimizedEngine:
             runtime_plan=self.runtime_plan,
             streamed_edges=list(executor.streamed_edges),
             pool_stats=pool_stats,
-            rewrites=[r.spec() for r in rewrites])
+            rewrites=[r.spec() for r in rewrites],
+            refusals=[r.spec() for r in refusals])
         _run_counters(run, stats.snapshot())
         if self.metadata is not None:
             self.metadata.register_run(self.flow, run)

@@ -229,6 +229,20 @@ class Rewrite:
         return {"rule": self.rule, "detail": self.detail}
 
 
+@dataclass
+class Refusal:
+    """One rewrite the optimizer REFUSED for safety, with the reason —
+    surfaced on ``EngineRun.refusals`` so silently-disabled optimizations
+    (e.g. an undeclared lambda read set) are visible instead of just absent.
+    Refusals whose reason contains ``"undeclared"`` are exactly the ones the
+    expression DSL eliminates (provenance derived from the AST)."""
+    rule: str
+    detail: str
+
+    def spec(self) -> dict:
+        return {"rule": self.rule, "detail": self.detail}
+
+
 def _is_chain_edge(flow: Dataflow, u: str, v: str) -> bool:
     return ((u, v) in flow.edges and flow.out_degree(u) == 1
             and flow.in_degree(v) == 1)
@@ -294,6 +308,17 @@ class CostBasedOptimizer:
         self.max_boundary_inserts = max_boundary_inserts
         self._inserted = 0
         self.rewrites: List[Rewrite] = []
+        #: rewrites refused for safety, with reasons (deduplicated across
+        #: the fixpoint passes) — zero "undeclared" entries on DSL-built
+        #: flows is an acceptance gate
+        self.refusals: List[Refusal] = []
+        self._refused_keys: set = set()
+
+    def _refuse(self, rule: str, detail: str) -> None:
+        key = (rule, detail)
+        if key not in self._refused_keys:
+            self._refused_keys.add(key)
+            self.refusals.append(Refusal(rule, detail))
 
     # ------------------------------------------------------------- driver
     def optimize(self) -> List[Rewrite]:
@@ -329,14 +354,14 @@ class CostBasedOptimizer:
             return False, "order-sensitive neighbour"
         reads = f.consumed_columns()
         if reads is None:
-            return False, f"filter {filt!r} has no declared read set"
+            return False, f"filter {filt!r} has an undeclared read set"
         if f.produced_columns() != frozenset():
             # only pure row-droppers commute: a component that also ADDS
             # columns could feed something its new upstream needs
             return False, f"{filt!r} produces columns — not a pure filter"
         writes = u.produced_columns()
         if writes is None:
-            return False, f"upstream {up!r} has no declared write set"
+            return False, f"upstream {up!r} has an undeclared write set"
         overlap = reads & writes
         if overlap:
             return False, (f"filter reads columns produced by {up!r}: "
@@ -353,14 +378,23 @@ class CostBasedOptimizer:
                 continue
             # a filter is any non-row-preserving row-sync activity with a
             # declared read set (it drops rows, never adds columns)
-            if comp.row_preserving or comp.consumed_columns() is None:
+            if comp.row_preserving:
+                continue
+            if comp.consumed_columns() is None:
+                if comp.produced_columns() == frozenset():
+                    # a would-be commute candidate silently disabled by an
+                    # opaque predicate — exactly what the DSL eliminates
+                    self._refuse("filter-commute",
+                                 f"filter {name!r} has an undeclared read "
+                                 f"set — no commute considered")
                 continue
             preds = flow.pred(name)
             if len(preds) != 1:
                 continue
             up = preds[0]
-            ok, _ = self.can_commute(up, name)
+            ok, why = self.can_commute(up, name)
             if not ok:
+                self._refuse("filter-commute", f"{name} over {up}: {why}")
                 continue
             s_f = self.stats.get(name)
             s_u = self.stats.get(up)

@@ -84,6 +84,55 @@ def discover_segments(flow: Dataflow) -> List[List[str]]:
     return chains
 
 
+# ---------------------------------------------------------------------------
+#  Static schema inference — AST/declared provenance over the whole flow
+# ---------------------------------------------------------------------------
+def infer_schema(flow: Dataflow, strict: bool = False):
+    """Propagate column schemas through the flow from source column sets and
+    each component's ``output_schema`` hook.
+
+    Returns ``{component_name: frozenset(columns) | None}`` — the column set
+    each component EMITS (``None`` once an unknown-schema component poisons
+    the walk).  With the expression DSL this is exact static provenance: the
+    Session front end runs it at build time so a typo'd column name fails at
+    ``sink()`` with the component and the missing column named, instead of a
+    ``KeyError`` deep inside a worker thread mid-run.
+
+    ``strict=True`` additionally requires every component's declared read set
+    (``consumed_columns``) to be covered by its input schema whenever both
+    are known, raising ``ValueError`` otherwise."""
+    schemas: Dict[str, Optional[frozenset]] = {}
+    for name in flow.topo_order():
+        comp = flow.component(name)
+        preds = flow.pred(name)
+        if not preds:
+            incols: Optional[frozenset] = frozenset()
+        else:
+            pred_schemas = [schemas[p] for p in preds]
+            if any(s is None for s in pred_schemas):
+                incols = None
+            else:
+                # fan-in: only columns present on EVERY input branch are
+                # safely readable (concat across branches requires equal
+                # schemas anyway) — a union would let strict mode pass a
+                # read that exists on just one branch
+                incols = frozenset.intersection(*pred_schemas)
+        if incols is not None:
+            reads = comp.consumed_columns()
+            if strict and reads is not None and preds:
+                missing = reads - incols
+                if missing:
+                    raise ValueError(
+                        f"component {name!r} reads column(s) "
+                        f"{sorted(missing)} that are not in its input "
+                        f"schema {sorted(incols)} — check the flow's "
+                        f"expressions and column names")
+            schemas[name] = comp.output_schema(incols)
+        else:
+            schemas[name] = None
+    return schemas
+
+
 @dataclass
 class PipelinePlan:
     n: int                    # number of activities in the execution tree

@@ -39,12 +39,13 @@ wrong answer.
 from __future__ import annotations
 
 import contextvars
-import os
 import threading
 from contextlib import contextmanager
 from typing import Callable, Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
+
+from . import config
 
 # a column is np.ndarray (host) or a device array (e.g. jax.Array)
 Columns = Dict[str, np.ndarray]
@@ -68,7 +69,7 @@ def _to_host(v) -> np.ndarray:
 def cache_guard_enabled() -> bool:
     """True when ``REPRO_CACHE_GUARD=1``: split-overlap checks run and
     released arena buffers are poisoned (debug mode)."""
-    return os.environ.get("REPRO_CACHE_GUARD", "") == "1"
+    return config.cache_guard_enabled()
 
 
 def assert_views_disjoint(caches: List["SharedCache"]) -> None:
@@ -520,9 +521,9 @@ class CacheArena:
     def __init__(self, max_bytes: Optional[int] = None,
                  enabled: Optional[bool] = None):
         if enabled is None:
-            enabled = os.environ.get("REPRO_ARENA", "1") != "0"
+            enabled = config.arena_enabled()
         if max_bytes is None:
-            max_bytes = int(os.environ.get("REPRO_ARENA_MAX_MB", "256")) << 20
+            max_bytes = config.arena_max_bytes()
         self.enabled = bool(enabled)
         self.max_bytes = int(max_bytes)
         self._lock = threading.Lock()

@@ -24,6 +24,7 @@ import numpy as np
 
 from ..core.component import BlockComponent, SourceComponent
 from ..core.engine import OptimizedEngine, OptimizeOptions
+from ..core.expr import col
 from ..core.graph import Dataflow
 from ..core.shared_cache import SharedCache, concat_caches
 from ..etl.components import CollectSink, Filter
@@ -114,8 +115,7 @@ def build_lm_dataflow(cfg: PipelineConfig, window: int,
     """The LM token dataflow for one document window."""
     flow = Dataflow(f"lm-input-w{window}")
     src = SyntheticTokenSource("doc_source", cfg, window)
-    filt = Filter("length_filter",
-                  lambda c, r: c.col("length")[r] >= cfg.min_doc_len)
+    filt = Filter("length_filter", col("length") >= cfg.min_doc_len)
     packer = SequencePacker("sequence_packer", cfg.seq_len, cfg.eos_id,
                             carry=carry)
     sink = CollectSink("batch_sink")

@@ -15,11 +15,20 @@ Heavy components do not inline their kernels: they dispatch through the
 active operator backend (``core/backend/``) — ``numpy`` reference or ``jax``
 accelerated — via ``Component.get_backend()``.  Engines assign the run's
 backend on every component before executing.
+
+Predicates and derived-column expressions are preferably **column-expression
+AST nodes** (``core/expr.py``): their read sets are derived from the AST, so
+the optimizer's commute/fusion rules and the fused-kernel upload sets get
+exact provenance.  Legacy ``fn(cache, rows)`` callables still work as a
+deprecated shim — without a ``reads=`` declaration they emit a
+``DeprecationWarning`` and opt out of every provenance-driven rewrite.
 """
 from __future__ import annotations
 
 import threading
-from typing import Callable, Dict, Iterator, List, Optional, Sequence, Tuple
+import warnings
+from typing import (Callable, Dict, FrozenSet, Iterator, List, Optional,
+                    Sequence, Tuple, Union)
 
 import numpy as np
 
@@ -27,7 +36,55 @@ from ..core.backend import AGG_OPS
 from ..core.component import (BlockComponent, Component, ComponentType,
                               SemiBlockComponent, SinkComponent,
                               SourceComponent)
+from ..core.expr import Col, Expr, expr_reads
 from ..core.shared_cache import GLOBAL_ARENA, SharedCache, concat_caches
+
+ColumnRef = Union[str, Col]
+
+
+def _col_name(ref: ColumnRef) -> str:
+    """Column arguments accept a plain name or a DSL ``col()`` reference.
+    Composite expressions are rejected — materialize them with an
+    ``Expression`` (``FlowBuilder.derive``) first."""
+    if isinstance(ref, Col):
+        return ref.name
+    if isinstance(ref, Expr):
+        raise TypeError(
+            f"{ref!r} is a composite expression; only bare col() references "
+            f"name a column here — derive() it into a column first")
+    if isinstance(ref, str):
+        return ref
+    raise TypeError(f"expected a column name or col() reference, got {ref!r}")
+
+
+def _resolve_reads(fn, reads: Optional[Sequence[str]], owner: str,
+                   kind: str) -> Optional[FrozenSet[str]]:
+    """The declared read set of a predicate/expression.
+
+    DSL ``Expr`` nodes derive it exactly from the AST (a conflicting manual
+    ``reads=`` raises — the declaration would otherwise silently drift from
+    the truth).  Legacy callables keep their hand-declared ``reads=``; a
+    callable WITHOUT one gets a ``DeprecationWarning`` naming the DSL
+    replacement, because ``None`` silently opts the component out of
+    filter-commute, segment fusion and the minimal device upload set."""
+    if isinstance(fn, Expr):
+        derived = expr_reads(fn)
+        if reads is not None and frozenset(reads) != derived:
+            raise ValueError(
+                f"{kind} {owner!r}: reads={sorted(reads)} conflicts with the "
+                f"expression's derived read set {sorted(derived)} — drop the "
+                f"reads= argument (provenance is derived from the AST)")
+        return derived
+    if reads is None:
+        warnings.warn(
+            f"{kind} {owner!r}: opaque callable without reads= — the "
+            f"optimizer and fused kernels cannot see its column provenance, "
+            f"so every provenance-driven rewrite refuses.  Build the "
+            f"predicate/expression with the repro.col() DSL (exact derived "
+            f"reads), or declare reads= explicitly.",
+            DeprecationWarning, stacklevel=3)
+        return None
+    return frozenset(reads)
 
 
 # ---------------------------------------------------------------------------
@@ -46,6 +103,9 @@ class ArraySource(SourceComponent):
 
     def total_rows(self) -> int:
         return self._n
+
+    def output_schema(self, incols: FrozenSet[str]) -> FrozenSet[str]:
+        return frozenset(self.columns)
 
     def est_output_bytes(self) -> int:
         """Cache-size metadata for the runtime planner (channel sizing),
@@ -99,17 +159,28 @@ class RowSyncMT(Component):
 class Filter(RowSyncMT):
     """Keep rows where predicate(cache, rows) is True.  In-place compaction.
 
-    ``reads`` optionally declares the columns the predicate touches; the
-    cost-based optimizer may then commute this filter ahead of adjacent
-    row-preserving components whose outputs are disjoint from the read set.
-    An undeclared (None) read set refuses every commute."""
+    The predicate is preferably a DSL expression
+    (``col("lo_quantity") < 25``) — its read set is then derived exactly
+    from the AST.  Legacy callables may declare ``reads=`` by hand; the
+    cost-based optimizer commutes this filter ahead of adjacent
+    row-preserving components only when the read set is known and disjoint
+    from the neighbour's outputs, so an undeclared (None) read set refuses
+    every commute."""
 
     def __init__(self, name: str,
-                 predicate: Callable[[SharedCache, slice], np.ndarray],
+                 predicate: Union[Expr, Callable[[SharedCache, slice],
+                                                 np.ndarray]],
                  reads: Optional[Sequence[str]] = None):
         super().__init__(name)
+        if isinstance(predicate, Expr) and not predicate.columns():
+            raise ValueError(
+                f"Filter {name!r}: predicate {predicate!r} reads no columns "
+                f"— a constant predicate either keeps or drops every row")
         self.predicate = predicate
-        self.reads = None if reads is None else frozenset(reads)
+        self.reads = _resolve_reads(predicate, reads, name, "Filter")
+
+    def output_schema(self, incols: FrozenSet[str]) -> FrozenSet[str]:
+        return incols
 
     def produced_columns(self) -> frozenset:
         return frozenset()          # drops rows, never adds columns
@@ -162,15 +233,18 @@ class Lookup(RowSyncMT):
 
     row_preserving = True
 
-    def __init__(self, name: str, dim: DimTable, key_col: str,
+    def __init__(self, name: str, dim: DimTable, key_col: ColumnRef,
                  return_cols: Dict[str, str], default: int = -1,
                  matched_flag: Optional[str] = None):
         super().__init__(name)
         self.dim = dim
-        self.key_col = key_col
+        self.key_col = _col_name(key_col)
         self.return_cols = return_cols       # out_name -> dim payload col
         self.default = default
         self.matched_flag = matched_flag     # optional bool col with match bit
+
+    def output_schema(self, incols: FrozenSet[str]) -> FrozenSet[str]:
+        return incols | self.produced_columns()
 
     def produced_columns(self) -> frozenset:
         out = set(self.return_cols)
@@ -209,18 +283,29 @@ class Lookup(RowSyncMT):
 class Expression(RowSyncMT):
     """Compute a new column from existing ones (paper's component 8).
 
-    ``reads`` optionally declares the input columns — provenance metadata for
-    the cost-based optimizer's commute/fusion rules."""
+    ``fn`` is preferably a DSL expression (``col("a") * col("b")``) whose
+    read set is derived from the AST; legacy callables may declare
+    ``reads=`` by hand — provenance metadata for the cost-based optimizer's
+    commute/fusion rules and the fused-kernel upload sets."""
 
     row_preserving = True
 
     def __init__(self, name: str, out_col: str,
-                 fn: Callable[[SharedCache, slice], np.ndarray],
+                 fn: Union[Expr, Callable[[SharedCache, slice], np.ndarray]],
                  reads: Optional[Sequence[str]] = None):
         super().__init__(name)
-        self.out_col = out_col
+        if isinstance(fn, Expr) and not fn.columns():
+            raise ValueError(
+                f"Expression {name!r}: {fn!r} reads no columns — a scalar "
+                f"constant is not a per-row column (it would crash at "
+                f"merge time); derive it from a real column, e.g. "
+                f"col(x) * 0 + value")
+        self.out_col = _col_name(out_col)
         self.fn = fn
-        self.reads = None if reads is None else frozenset(reads)
+        self.reads = _resolve_reads(fn, reads, name, "Expression")
+
+    def output_schema(self, incols: FrozenSet[str]) -> FrozenSet[str]:
+        return incols | {self.out_col}
 
     def produced_columns(self) -> frozenset:
         return frozenset({self.out_col})
@@ -280,10 +365,15 @@ class FusedExpression(Component):
         return self.reads
 
     def segment_ops(self) -> list:
-        # per-sub-expression reads are unknown; the combined external read
-        # set (self.reads, None => unknown) over-approximates each of them
-        return [("expr", out_col, fn, self.reads)
+        # DSL sub-expressions carry their exact per-op read sets; legacy
+        # callables fall back to the combined external read set (self.reads,
+        # None => unknown), which over-approximates each of them
+        return [("expr", out_col, fn,
+                 fn.columns() if isinstance(fn, Expr) else self.reads)
                 for out_col, fn in self.exprs]
+
+    def output_schema(self, incols: FrozenSet[str]) -> FrozenSet[str]:
+        return incols | self.produced_columns()
 
     def _run(self, cache: SharedCache) -> List[SharedCache]:
         bk = self.get_backend()
@@ -365,6 +455,10 @@ class FusedSegment(Component):
     def consumed_columns(self) -> Optional[frozenset]:
         return self._consumed
 
+    def output_schema(self, incols: FrozenSet[str]) -> FrozenSet[str]:
+        from ..core.backend.base import segment_final_live
+        return frozenset(segment_final_live(self.ops, incols))
+
     def kernel_input_columns(self) -> Optional[frozenset]:
         """External columns the segment's compute ops read (the upload set
         for device backends); ``None`` when some op's read set is undeclared
@@ -413,12 +507,15 @@ class Project(Component):
 
     row_preserving = True
 
-    def __init__(self, name: str, keep: Sequence[str]):
+    def __init__(self, name: str, keep: Sequence[ColumnRef]):
         super().__init__(name)
-        self.keep = list(keep)
+        self.keep = [_col_name(k) for k in keep]
 
     def produced_columns(self) -> frozenset:
         return frozenset()           # only removes columns
+
+    def output_schema(self, incols: FrozenSet[str]) -> FrozenSet[str]:
+        return incols & frozenset(self.keep)
 
     def consumed_columns(self) -> frozenset:
         return frozenset(self.keep)
@@ -451,6 +548,9 @@ class Converter(Component):
     def segment_ops(self) -> list:
         return [("convert", dict(self.conversions))]
 
+    def output_schema(self, incols: FrozenSet[str]) -> FrozenSet[str]:
+        return incols
+
     def _run(self, cache: SharedCache) -> List[SharedCache]:
         for col, dt in self.conversions.items():
             # add_column (not a raw columns[] write) bumps cache.version so
@@ -466,6 +566,9 @@ class Splitter(Component):
                  predicate: Callable[[SharedCache, slice], np.ndarray]):
         super().__init__(name)
         self.predicate = predicate
+
+    def output_schema(self, incols: FrozenSet[str]) -> FrozenSet[str]:
+        return incols            # routes rows; column set unchanged
 
     def _run(self, cache: SharedCache) -> List[SharedCache]:
         mask = np.asarray(self.predicate(cache, slice(0, cache.n)), dtype=bool)
@@ -483,15 +586,28 @@ class Aggregate(BlockComponent):
     """Group-by aggregation — the paper's canonical block component
     (sum/avg/min/max).  Accumulates all input caches, then reduces."""
 
-    def __init__(self, name: str, group_by: Sequence[str],
-                 aggs: Dict[str, Tuple[str, str]]):
-        """``aggs``: out_col -> (in_col, op) with op in sum/avg/min/max/count."""
+    def __init__(self, name: str, group_by: Sequence[ColumnRef],
+                 aggs: Dict[str, Tuple[ColumnRef, str]]):
+        """``aggs``: out_col -> (in_col, op) with op in sum/avg/min/max/count.
+        Column arguments accept plain names or DSL ``col()`` references."""
         super().__init__(name)
-        self.group_by = list(group_by)
+        self.group_by = [_col_name(g) for g in group_by]
         for out, (col, op) in aggs.items():
             if op not in AGG_OPS:     # same set every backend validates
                 raise ValueError(f"unknown agg op {op!r}")
-        self.aggs = dict(aggs)
+        self.aggs = {out: (_col_name(col), op)
+                     for out, (col, op) in aggs.items()}
+
+    def produced_columns(self) -> frozenset:
+        return frozenset(self.group_by) | frozenset(self.aggs)
+
+    def consumed_columns(self) -> frozenset:
+        return frozenset(self.group_by) | frozenset(
+            col for col, _ in self.aggs.values())
+
+    def output_schema(self, incols: FrozenSet[str]) -> FrozenSet[str]:
+        # aggregation REPLACES the schema: group keys + aggregate outputs
+        return self.produced_columns()
 
     def finish(self, state: List[SharedCache]) -> SharedCache:
         merged = concat_caches(state, ordered=True, recycle_inputs=True)
@@ -518,11 +634,17 @@ class Aggregate(BlockComponent):
 class Sort(BlockComponent):
     """Total sort — block component (needs all rows)."""
 
-    def __init__(self, name: str, by: Sequence[str],
+    def __init__(self, name: str, by: Sequence[ColumnRef],
                  ascending: bool = True):
         super().__init__(name)
-        self.by = list(by)
+        self.by = [_col_name(b) for b in by]
         self.ascending = ascending
+
+    def consumed_columns(self) -> frozenset:
+        return frozenset(self.by)
+
+    def output_schema(self, incols: FrozenSet[str]) -> FrozenSet[str]:
+        return incols
 
     def finish(self, state: List[SharedCache]) -> SharedCache:
         merged = concat_caches(state, ordered=True, recycle_inputs=True)
@@ -542,6 +664,11 @@ class Union(SemiBlockComponent):
     def __init__(self, name: str):
         super().__init__(name)
 
+    def output_schema(self, incols: FrozenSet[str]) -> FrozenSet[str]:
+        # concat requires identical branch schemas; incols is already the
+        # intersection across the fan-in branches
+        return incols
+
     def finish(self, state: List[SharedCache]) -> SharedCache:
         out = concat_caches(state, ordered=False, recycle_inputs=True)
         self.rows_out += out.n
@@ -551,9 +678,15 @@ class Union(SemiBlockComponent):
 class Merge(SemiBlockComponent):
     """Sorted merge of multiple upstreams by key columns."""
 
-    def __init__(self, name: str, by: Sequence[str]):
+    def __init__(self, name: str, by: Sequence[ColumnRef]):
         super().__init__(name)
-        self.by = list(by)
+        self.by = [_col_name(b) for b in by]
+
+    def consumed_columns(self) -> frozenset:
+        return frozenset(self.by)
+
+    def output_schema(self, incols: FrozenSet[str]) -> FrozenSet[str]:
+        return incols
 
     def finish(self, state: List[SharedCache]) -> SharedCache:
         merged = concat_caches(state, ordered=False, recycle_inputs=True)

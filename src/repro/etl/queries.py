@@ -9,15 +9,24 @@ Q4.1 is the paper's Figure-11 flow: lineorder source -> 4 lookups -> filter
 -> project -> expression -> groupby-sum (block) -> sort (block) -> sink,
 which Algorithm 1 partitions into execution trees T1={1..8}, T2={9},
 T3={10,11}.
+
+Predicates and derived columns are built with the column-expression DSL
+(``core/expr.py``) by default — their read sets are derived from the AST, so
+the optimizer and fused kernels get exact provenance.  ``use_dsl=False``
+(or ``REPRO_FLOW_STYLE=lambda``) rebuilds the pre-DSL flows from legacy
+lambdas with hand-declared ``reads=`` — kept as the A/B reference the
+DSL-vs-lambda equivalence tests and benchmarks compare against.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Dict, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 import numpy as np
 
+from ..core import config
 from ..core.component import StageBoundary
+from ..core.expr import col
 from ..core.graph import Dataflow
 from .components import (Aggregate, ArraySource, CollectSink, DimTable,
                          Expression, Filter, Lookup, Project, Sort)
@@ -30,6 +39,15 @@ class QueryFlow:
     flow: Dataflow
     sink: CollectSink
     oracle: Callable[[SSBData], Dict[str, np.ndarray]]
+    #: how the flow's predicates/expressions were built ("dsl" | "lambda") —
+    #: recorded in benchmark JSON so the perf trajectory tells the two apart
+    style: str = "dsl"
+
+
+def _style(use_dsl: Optional[bool]) -> bool:
+    """Resolve a builder's ``use_dsl`` argument: explicit flag wins, else
+    the process default (``REPRO_FLOW_STYLE``, "dsl" unless overridden)."""
+    return config.flow_style() == "dsl" if use_dsl is None else bool(use_dsl)
 
 
 # ---------------------------------------------------------------------------
@@ -63,22 +81,31 @@ def _dims(data: SSBData):
 # ---------------------------------------------------------------------------
 #  Q1.1 — revenue from discount/quantity band in 1993
 # ---------------------------------------------------------------------------
-def build_q1(data: SSBData) -> QueryFlow:
+def build_q1(data: SSBData, use_dsl: Optional[bool] = None) -> QueryFlow:
+    dsl = _style(use_dsl)
     _, _, _, date = _dims(data)
     flow = Dataflow("ssb-q1.1")
     src = ArraySource("lineorder", data.lineorder)
     lk_date = Lookup("lookup_date", date, "lo_orderdate",
                      {"d_year": "d_year"}, matched_flag="d_ok")
-    filt = Filter("filter", lambda c, r: (
-        c.col("d_ok")[r]
-        & (c.col("d_year")[r] == 1993)
-        & (c.col("lo_discount")[r] >= 1) & (c.col("lo_discount")[r] <= 3)
-        & (c.col("lo_quantity")[r] < 25)),
-        reads=["d_ok", "d_year", "lo_discount", "lo_quantity"])
-    expr = Expression("revenue_expr", "rev",
-                      lambda c, r: c.col("lo_extendedprice")[r]
-                      * c.col("lo_discount")[r],
-                      reads=["lo_extendedprice", "lo_discount"])
+    if dsl:
+        filt = Filter("filter", col("d_ok")
+                      & (col("d_year") == 1993)
+                      & col("lo_discount").between(1, 3)
+                      & (col("lo_quantity") < 25))
+        expr = Expression("revenue_expr", "rev",
+                          col("lo_extendedprice") * col("lo_discount"))
+    else:
+        filt = Filter("filter", lambda c, r: (
+            c.col("d_ok")[r]
+            & (c.col("d_year")[r] == 1993)
+            & (c.col("lo_discount")[r] >= 1) & (c.col("lo_discount")[r] <= 3)
+            & (c.col("lo_quantity")[r] < 25)),
+            reads=["d_ok", "d_year", "lo_discount", "lo_quantity"])
+        expr = Expression("revenue_expr", "rev",
+                          lambda c, r: c.col("lo_extendedprice")[r]
+                          * c.col("lo_discount")[r],
+                          reads=["lo_extendedprice", "lo_discount"])
     agg = Aggregate("sum_revenue", [], {"revenue": ("rev", "sum")})
     sink = CollectSink("sink")
     flow.chain(src, lk_date, filt, expr, agg, sink)
@@ -92,13 +119,15 @@ def build_q1(data: SSBData) -> QueryFlow:
         rev = (lo["lo_extendedprice"][m] * lo["lo_discount"][m]).astype(np.float64)
         return {"revenue": np.array([rev.sum()])}
 
-    return QueryFlow("Q1.1", flow, sink, oracle)
+    return QueryFlow("Q1.1", flow, sink, oracle,
+                     style="dsl" if dsl else "lambda")
 
 
 # ---------------------------------------------------------------------------
 #  Q2.1 — revenue by year/brand for category MFGR#12-equivalent, AMERICA
 # ---------------------------------------------------------------------------
-def build_q2(data: SSBData) -> QueryFlow:
+def build_q2(data: SSBData, use_dsl: Optional[bool] = None) -> QueryFlow:
+    dsl = _style(use_dsl)
     _, supp, part, date = _dims(data)
     CATEGORY = 12
     AMERICA = region_id("AMERICA")
@@ -116,10 +145,14 @@ def build_q2(data: SSBData) -> QueryFlow:
                      {"s_nation": "s_nation"})
     lk_date = Lookup("lookup_date", date, "lo_orderdate",
                      {"d_year": "d_year"})
-    filt = Filter("filter", lambda c, r: (
-        (c.col("p_brand1")[r] >= 0) & (c.col("s_nation")[r] >= 0)
-        & (c.col("d_year")[r] >= 0)),
-        reads=["p_brand1", "s_nation", "d_year"])
+    if dsl:
+        filt = Filter("filter", (col("p_brand1") >= 0)
+                      & (col("s_nation") >= 0) & (col("d_year") >= 0))
+    else:
+        filt = Filter("filter", lambda c, r: (
+            (c.col("p_brand1")[r] >= 0) & (c.col("s_nation")[r] >= 0)
+            & (c.col("d_year")[r] >= 0)),
+            reads=["p_brand1", "s_nation", "d_year"])
     agg = Aggregate("sum_revenue", ["d_year", "p_brand1"],
                     {"revenue": ("lo_revenue", "sum")})
     srt = Sort("sort", ["d_year", "p_brand1"])
@@ -137,13 +170,15 @@ def build_q2(data: SSBData) -> QueryFlow:
         return _group_sum_oracle({"d_year": year[m], "p_brand1": brand[m]},
                                  lo["lo_revenue"][m], "revenue")
 
-    return QueryFlow("Q2.1", flow, sink, oracle)
+    return QueryFlow("Q2.1", flow, sink, oracle,
+                     style="dsl" if dsl else "lambda")
 
 
 # ---------------------------------------------------------------------------
 #  Q3.1 — revenue by c_nation, s_nation, year in ASIA, 1992<=y<=1997
 # ---------------------------------------------------------------------------
-def build_q3(data: SSBData) -> QueryFlow:
+def build_q3(data: SSBData, use_dsl: Optional[bool] = None) -> QueryFlow:
+    dsl = _style(use_dsl)
     ASIA = region_id("ASIA")
     cust_f = DimTable(data.customer["c_custkey"],
                       {"c_nation": data.customer["c_nation"]},
@@ -160,10 +195,15 @@ def build_q3(data: SSBData) -> QueryFlow:
                      {"s_nation": "s_nation"})
     lk_date = Lookup("lookup_date", date, "lo_orderdate",
                      {"d_year": "d_year"})
-    filt = Filter("filter", lambda c, r: (
-        (c.col("c_nation")[r] >= 0) & (c.col("s_nation")[r] >= 0)
-        & (c.col("d_year")[r] >= 1992) & (c.col("d_year")[r] <= 1997)),
-        reads=["c_nation", "s_nation", "d_year"])
+    if dsl:
+        filt = Filter("filter", (col("c_nation") >= 0)
+                      & (col("s_nation") >= 0)
+                      & col("d_year").between(1992, 1997))
+    else:
+        filt = Filter("filter", lambda c, r: (
+            (c.col("c_nation")[r] >= 0) & (c.col("s_nation")[r] >= 0)
+            & (c.col("d_year")[r] >= 1992) & (c.col("d_year")[r] <= 1997)),
+            reads=["c_nation", "s_nation", "d_year"])
     agg = Aggregate("sum_revenue", ["c_nation", "s_nation", "d_year"],
                     {"revenue": ("lo_revenue", "sum")})
     srt = Sort("sort", ["d_year", "c_nation", "s_nation"])
@@ -184,17 +224,20 @@ def build_q3(data: SSBData) -> QueryFlow:
             lo["lo_revenue"][m], "revenue",
             sort_by=["d_year", "c_nation", "s_nation"])
 
-    return QueryFlow("Q3.1", flow, sink, oracle)
+    return QueryFlow("Q3.1", flow, sink, oracle,
+                     style="dsl" if dsl else "lambda")
 
 
 # ---------------------------------------------------------------------------
 #  Q4.1 — the paper's Figure-11 dataflow (profit by year, customer nation)
 # ---------------------------------------------------------------------------
-def build_q4(data: SSBData, staged: bool = False) -> QueryFlow:
+def build_q4(data: SSBData, staged: bool = False,
+             use_dsl: Optional[bool] = None) -> QueryFlow:
     """``staged=True`` inserts an explicit StageBoundary between the lookup
     stage and the filter/project/expression stage — the multi-tree variant
     whose trees are connected by a ROW-SYNCHRONIZED boundary, which the
     streaming executor overlaps (Q4.1s in BUILDERS)."""
+    dsl = _style(use_dsl)
     AMERICA = region_id("AMERICA")
     M1, M2 = mfgr_id("MFGR#1"), mfgr_id("MFGR#2")
     cust_f = DimTable(data.customer["c_custkey"],
@@ -218,16 +261,23 @@ def build_q4(data: SSBData, staged: bool = False) -> QueryFlow:
                      {"p_mfgr": "p_mfgr"})                            # 4
     lk_date = Lookup("lookup_date", date, "lo_orderdate",
                      {"d_year": "d_year"})                            # 5
-    filt = Filter("filter_unmatched", lambda c, r: (                   # 6
-        (c.col("c_nation")[r] >= 0) & (c.col("s_nation")[r] >= 0)
-        & (c.col("p_mfgr")[r] >= 0) & (c.col("d_year")[r] >= 0)),
-        reads=["c_nation", "s_nation", "p_mfgr", "d_year"])
+    if dsl:
+        filt = Filter("filter_unmatched",                              # 6
+                      (col("c_nation") >= 0) & (col("s_nation") >= 0)
+                      & (col("p_mfgr") >= 0) & (col("d_year") >= 0))
+        expr = Expression("profit_expr", "profit",                     # 8
+                          col("lo_revenue") - col("lo_supplycost"))
+    else:
+        filt = Filter("filter_unmatched", lambda c, r: (               # 6
+            (c.col("c_nation")[r] >= 0) & (c.col("s_nation")[r] >= 0)
+            & (c.col("p_mfgr")[r] >= 0) & (c.col("d_year")[r] >= 0)),
+            reads=["c_nation", "s_nation", "p_mfgr", "d_year"])
+        expr = Expression("profit_expr", "profit",
+                          lambda c, r: c.col("lo_revenue")[r]
+                          - c.col("lo_supplycost")[r],
+                          reads=["lo_revenue", "lo_supplycost"])      # 8
     proj = Project("project", ["d_year", "c_nation",
                                "lo_revenue", "lo_supplycost"])        # 7
-    expr = Expression("profit_expr", "profit",
-                      lambda c, r: c.col("lo_revenue")[r]
-                      - c.col("lo_supplycost")[r],
-                      reads=["lo_revenue", "lo_supplycost"])          # 8
     agg = Aggregate("groupby_sum", ["d_year", "c_nation"],
                     {"profit": ("profit", "sum")})                    # 9
     srt = Sort("sort", ["d_year", "c_nation"])                        # 10
@@ -253,11 +303,12 @@ def build_q4(data: SSBData, staged: bool = False) -> QueryFlow:
         return _group_sum_oracle({"d_year": year[m], "c_nation": cn[m]},
                                  profit[m], "profit")
 
-    return QueryFlow("Q4.1s" if staged else "Q4.1", flow, sink, oracle)
+    return QueryFlow("Q4.1s" if staged else "Q4.1", flow, sink, oracle,
+                     style="dsl" if dsl else "lambda")
 
 
-def build_q4_staged(data: SSBData) -> QueryFlow:
-    return build_q4(data, staged=True)
+def build_q4_staged(data: SSBData, use_dsl: Optional[bool] = None) -> QueryFlow:
+    return build_q4(data, staged=True, use_dsl=use_dsl)
 
 
 # ---------------------------------------------------------------------------

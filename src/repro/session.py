@@ -1,0 +1,296 @@
+"""Unified user-facing front end: declarative flow construction + one run
+entry point.
+
+``FlowBuilder`` (``repro.flow("q4.1")``) chains ETL components fluently over
+the column-expression DSL and finishes with ``.sink()``, which validates the
+flow AND statically checks every expression's read columns against the
+propagated schema (``core/planner.infer_schema``) — a typo'd column name
+fails at build time with the component and column named, not as a
+``KeyError`` in a worker thread mid-run.
+
+``Session`` unifies what used to take four engine classes, the backend
+registry, ``OptimizeOptions``, calibration and the metadata store:
+
+    import repro
+    import numpy as np
+
+    f = (repro.flow("q4.1")
+         .source(data.lineorder)
+         .lookup(cust_dim, "lo_custkey", {"c_nation": "c_nation"})
+         .filter(repro.col("c_nation") >= 0)
+         .derive("profit", repro.col("lo_revenue") - repro.col("lo_supplycost"))
+         .aggregate(["d_year", "c_nation"], {"profit": ("profit", "sum")})
+         .sink())
+
+    session = repro.Session(backend="jax")
+    res = session.run(f, engine="streaming", optimize=2, fuse=True)
+    res.table                     # {column: np.ndarray}
+    res.run.summary()             # EngineRun instrumentation
+
+``Session.run`` also accepts any object with ``.flow``/``.sink`` attributes
+(e.g. an ``etl.queries.QueryFlow``) or a bare ``(Dataflow, sink)`` pair.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .core import (Dataflow, EngineRun, MetadataStore, OptimizedEngine,
+                   OptimizeOptions, OrdinaryEngine, StreamingEngine)
+from .core.component import StageBoundary
+from .core.optimizer import FlowStatistics, run_calibration
+from .core.planner import infer_schema
+from .etl.components import (Aggregate, ArraySource, CollectSink, Converter,
+                             DimTable, Expression, Filter, Lookup, Project,
+                             Sort)
+from .etl.kettle import KettleEngine
+
+__all__ = ["Flow", "FlowBuilder", "Session", "SessionRun", "flow"]
+
+
+@dataclass
+class Flow:
+    """A built dataflow plus its collecting sink — what ``FlowBuilder.sink``
+    returns and ``Session.run`` consumes."""
+    name: str
+    flow: Dataflow
+    sink: CollectSink
+    #: statically inferred output schema at the sink (None when an
+    #: unknown-provenance component poisoned the inference)
+    schema: Optional[frozenset] = None
+
+    def result(self) -> Dict[str, np.ndarray]:
+        return self.sink.result()
+
+
+class FlowBuilder:
+    """Fluent linear-chain flow construction.  Every step appends one
+    component; ``sink()`` validates and seals the flow.  Component names are
+    auto-generated (``filter_1``, ``derive_2``, ...) unless ``name=`` is
+    given."""
+
+    def __init__(self, name: str = "flow"):
+        self.name = name
+        self._flow = Dataflow(name)
+        self._chain: list = []
+        self._n = 0
+
+    # ------------------------------------------------------------ internals
+    def _auto(self, prefix: str, name: Optional[str]) -> str:
+        self._n += 1
+        return name if name else f"{prefix}_{self._n}"
+
+    def _append(self, comp) -> "FlowBuilder":
+        if self._chain and isinstance(self._chain[-1], CollectSink):
+            raise ValueError(f"flow {self.name!r} is already sealed by a "
+                             f"sink — no further steps allowed")
+        if not self._chain and not isinstance(comp, ArraySource):
+            raise ValueError(f"flow {self.name!r} must start with .source()")
+        self._chain.append(comp)
+        return self
+
+    @staticmethod
+    def _dim(dim) -> DimTable:
+        """Accept a prebuilt DimTable or a (key, payload[, row_filter])
+        tuple."""
+        if isinstance(dim, DimTable):
+            return dim
+        if isinstance(dim, tuple) and len(dim) in (2, 3):
+            return DimTable(*dim)
+        raise TypeError("lookup dimension must be a DimTable or a "
+                        "(key_array, payload_dict[, row_filter]) tuple")
+
+    # ----------------------------------------------------------------- steps
+    def source(self, columns: Dict[str, np.ndarray], *,
+               name: str = "source") -> "FlowBuilder":
+        """Start the flow from an in-memory columnar table."""
+        if self._chain:
+            raise ValueError(f"flow {self.name!r} already has a source")
+        self._chain.append(ArraySource(name, columns))
+        return self
+
+    def lookup(self, dim, key, returns: Dict[str, str], *,
+               default: int = -1, matched_flag: Optional[str] = None,
+               name: Optional[str] = None) -> "FlowBuilder":
+        """Join a dimension table: ``returns`` maps output column -> dim
+        payload column; unmatched rows get ``default``."""
+        return self._append(Lookup(self._auto("lookup", name),
+                                   self._dim(dim), key, dict(returns),
+                                   default=default,
+                                   matched_flag=matched_flag))
+
+    def filter(self, predicate, *, name: Optional[str] = None,
+               reads: Optional[Sequence[str]] = None) -> "FlowBuilder":
+        """Keep rows where the predicate holds — preferably a DSL expression
+        (exact derived provenance)."""
+        return self._append(Filter(self._auto("filter", name), predicate,
+                                   reads=reads))
+
+    def derive(self, out_col: str, expr, *, name: Optional[str] = None,
+               reads: Optional[Sequence[str]] = None) -> "FlowBuilder":
+        """Compute a new column from existing ones."""
+        return self._append(Expression(self._auto("derive", name), out_col,
+                                       expr, reads=reads))
+
+    def project(self, *keep, name: Optional[str] = None) -> "FlowBuilder":
+        """Keep only the named columns (metadata-only under shared
+        caching)."""
+        return self._append(Project(self._auto("project", name), list(keep)))
+
+    def convert(self, conversions: Optional[Dict[str, np.dtype]] = None, *,
+                name: Optional[str] = None, **dtypes) -> "FlowBuilder":
+        """Convert column dtypes: ``convert({"x": np.int32})`` or
+        ``convert(x=np.int32)``."""
+        conv = dict(conversions or {})
+        conv.update(dtypes)
+        return self._append(Converter(self._auto("convert", name), conv))
+
+    def boundary(self, *, name: Optional[str] = None) -> "FlowBuilder":
+        """Insert an explicit StageBoundary cut (streaming tree boundary)."""
+        return self._append(StageBoundary(self._auto("boundary", name)))
+
+    def aggregate(self, group_by: Sequence, aggs: Dict[str, Tuple], *,
+                  name: Optional[str] = None) -> "FlowBuilder":
+        """Group-by aggregation: ``aggs`` maps output column ->
+        (input column, op) with op in sum/avg/min/max/count."""
+        return self._append(Aggregate(self._auto("aggregate", name),
+                                      list(group_by), dict(aggs)))
+
+    def sort(self, by: Sequence, *, ascending: bool = True,
+             name: Optional[str] = None) -> "FlowBuilder":
+        """Total sort by the given key columns."""
+        return self._append(Sort(self._auto("sort", name), list(by),
+                                 ascending=ascending))
+
+    # ------------------------------------------------------------------ seal
+    def sink(self, *, name: str = "sink") -> Flow:
+        """Seal the flow with a collecting sink, validate the DAG and
+        statically check every declared read set against the propagated
+        schema (exact with DSL expressions)."""
+        sink = CollectSink(name)
+        self._append(sink)
+        self._flow.chain(*self._chain)
+        self._flow.validate()
+        schemas = infer_schema(self._flow, strict=True)
+        return Flow(self.name, self._flow, sink, schema=schemas.get(name))
+
+
+def flow(name: str = "flow") -> FlowBuilder:
+    """Start a declarative flow: ``repro.flow("q4.1").source(...)...``."""
+    return FlowBuilder(name)
+
+
+# ---------------------------------------------------------------------------
+#  Session
+# ---------------------------------------------------------------------------
+@dataclass
+class SessionRun:
+    """One executed flow: the engine instrumentation + the sink table."""
+    run: EngineRun
+    table: Dict[str, np.ndarray]
+
+    def summary(self) -> str:
+        return self.run.summary()
+
+
+class Session:
+    """One entry point over the four engines, backend resolution,
+    ``OptimizeOptions``, calibration and metadata recording.
+
+    ``backend`` and ``options`` set session-wide defaults;
+    ``run(..., **overrides)`` wins per call.  Every run (and calibration)
+    is recorded in the session's ``MetadataStore`` (pass ``metadata=None``
+    explicitly to disable recording)."""
+
+    ENGINES = ("ordinary", "kettle", "optimized", "streaming")
+
+    _OWN_STORE = object()          # sentinel: create a private MetadataStore
+
+    def __init__(self, *, backend: Optional[str] = None,
+                 metadata=_OWN_STORE,
+                 options: Optional[OptimizeOptions] = None):
+        self.backend = backend
+        self.metadata = (MetadataStore() if metadata is Session._OWN_STORE
+                         else metadata)
+        self.defaults = options or OptimizeOptions()
+
+    # ------------------------------------------------------------ plumbing
+    @staticmethod
+    def _flow_pair(f) -> Tuple[Dataflow, Optional[CollectSink]]:
+        if isinstance(f, Flow):
+            return f.flow, f.sink
+        if isinstance(f, Dataflow):
+            return f, None
+        if isinstance(f, tuple) and len(f) == 2:
+            return f
+        if hasattr(f, "flow") and hasattr(f, "sink"):   # e.g. QueryFlow
+            return f.flow, f.sink
+        raise TypeError(
+            f"cannot run {f!r}: expected a built Flow, a QueryFlow-like "
+            f"object with .flow/.sink, a Dataflow, or a (Dataflow, sink) "
+            f"pair")
+
+    # ----------------------------------------------------------------- runs
+    def run(self, f, *, engine: str = "streaming",
+            optimize: Optional[int] = None, fuse: Optional[bool] = None,
+            backend: Optional[str] = None, **opts) -> SessionRun:
+        """Execute a flow.  ``engine`` is one of ``ordinary`` / ``kettle``
+        (the copy-everywhere baselines) / ``optimized`` / ``streaming``;
+        ``optimize`` maps to ``OptimizeOptions.optimize_level`` (>= 2 turns
+        on the cost-based adaptive path), ``fuse`` to segment fusion, and
+        any other ``OptimizeOptions`` field may be overridden by keyword."""
+        df, sink = self._flow_pair(f)
+        if sink is not None and hasattr(sink, "clear"):
+            sink.clear()          # re-running a flow must not accumulate
+        # per-call > Session(backend=) > Session(options=...).backend
+        if backend is None:
+            backend = (self.backend if self.backend is not None
+                       else self.defaults.backend)
+        if engine in ("ordinary", "kettle"):
+            if (optimize or 0) >= 2 or fuse:
+                raise ValueError(
+                    f"engine {engine!r} is a copy-everywhere baseline — "
+                    f"optimize>=2 / fuse=True need the optimized or "
+                    f"streaming engine")
+            bad = set(opts) - {"chunk_rows"}
+            if bad:
+                raise TypeError(f"engine {engine!r} does not take "
+                                f"{sorted(bad)}")
+            cls = OrdinaryEngine if engine == "ordinary" else KettleEngine
+            kw = {"backend": backend}
+            if opts.get("chunk_rows"):
+                kw["chunk_rows"] = opts["chunk_rows"]
+            run = cls(df, **kw).run()
+        elif engine in ("optimized", "streaming"):
+            o = replace(self.defaults, **opts)
+            if backend is not None:    # never clobber options.backend with None
+                o = replace(o, backend=backend)
+            if optimize is not None:
+                o = replace(o, optimize_level=int(optimize))
+            if fuse is not None:
+                o = replace(o, fuse_segments=bool(fuse))
+            cls = StreamingEngine if engine == "streaming" else OptimizedEngine
+            run = cls(df, o, metadata=self.metadata).run()
+        else:
+            raise ValueError(f"unknown engine {engine!r}; "
+                             f"expected one of {self.ENGINES}")
+        if self.metadata is not None and engine in ("ordinary", "kettle"):
+            self.metadata.register_run(df, run)
+        table = sink.result() if sink is not None else {}
+        return SessionRun(run=run, table=table)
+
+    def calibrate(self, f, *, sample_rows: int = 4096,
+                  backend: Optional[str] = None) -> FlowStatistics:
+        """Run the cost-based optimizer's calibration pass (source prefix,
+        sinks suppressed) and record the statistics in the metadata store."""
+        from .core.backend import resolve_backend
+        df, _ = self._flow_pair(f)
+        stats = run_calibration(
+            df, sample_rows=sample_rows,
+            backend=resolve_backend(backend if backend is not None
+                                    else self.backend))
+        if self.metadata is not None:
+            self.metadata.register_statistics(df, stats)
+        return stats

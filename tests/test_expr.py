@@ -1,0 +1,483 @@
+"""Column-expression DSL: semantics, provenance, dtype handling, backend
+compile parity, component integration, the Session front end, and the typed
+config module."""
+import warnings
+
+import numpy as np
+import pytest
+
+import repro
+from repro import Session, col, lit, where
+from repro.core import config
+from repro.core.backend import get_backend, resolve_backend
+from repro.core.expr import ColumnsView, expr_reads
+from repro.core.optimizer import CostBasedOptimizer, run_calibration
+from repro.core.planner import infer_schema
+from repro.core.shared_cache import SharedCache
+from repro.etl.components import (Aggregate, ArraySource, CollectSink,
+                                  DimTable, Expression, Filter, Project, Sort)
+from repro.etl.queries import build_q4
+from repro.etl.ssb import generate
+
+
+COLS = {
+    "a": np.array([0, 1, 2, 3, 4], dtype=np.int64),
+    "b": np.array([2, 2, 0, 2, 2], dtype=np.int64),
+    "f": np.array([0.5, -1.5, 2.0, -2.5, 3.0], dtype=np.float64),
+    "i32": np.array([1, 2, 3, 4, 5], dtype=np.int32),
+}
+
+
+def ev(expr, cols=None):
+    return expr.eval_columns(cols or COLS)
+
+
+# ---------------------------------------------------------------------------
+#  semantics
+# ---------------------------------------------------------------------------
+def test_arithmetic_matches_numpy():
+    np.testing.assert_array_equal(ev(col("a") + col("b")), COLS["a"] + COLS["b"])
+    np.testing.assert_array_equal(ev(col("a") - 1), COLS["a"] - 1)
+    np.testing.assert_array_equal(ev(2 * col("a")), 2 * COLS["a"])
+    np.testing.assert_array_equal(ev(col("a") // 2), COLS["a"] // 2)
+    np.testing.assert_array_equal(ev(col("a") % 3), COLS["a"] % 3)
+    np.testing.assert_array_equal(ev(col("f") / 2), COLS["f"] / 2)
+    np.testing.assert_array_equal(ev(-col("f")), -COLS["f"])
+    np.testing.assert_array_equal(ev(abs(col("f"))), np.abs(COLS["f"]))
+    np.testing.assert_array_equal(ev(10 - col("a")), 10 - COLS["a"])
+
+
+def test_comparisons_and_boolean_ops():
+    np.testing.assert_array_equal(ev(col("a") == 2), COLS["a"] == 2)
+    np.testing.assert_array_equal(ev(col("a") != 2), COLS["a"] != 2)
+    np.testing.assert_array_equal(ev((col("a") > 1) & (col("b") == 2)),
+                                  (COLS["a"] > 1) & (COLS["b"] == 2))
+    np.testing.assert_array_equal(ev((col("a") < 1) | (col("b") < 1)),
+                                  (COLS["a"] < 1) | (COLS["b"] < 1))
+    np.testing.assert_array_equal(ev(~(col("a") >= 3)), ~(COLS["a"] >= 3))
+    np.testing.assert_array_equal(ev((col("a") > 1) ^ (col("b") > 1)),
+                                  (COLS["a"] > 1) ^ (COLS["b"] > 1))
+
+
+def test_between_isin_where_cast():
+    np.testing.assert_array_equal(ev(col("a").between(1, 3)),
+                                  (COLS["a"] >= 1) & (COLS["a"] <= 3))
+    np.testing.assert_array_equal(ev(col("a").isin([0, 4])),
+                                  (COLS["a"] == 0) | (COLS["a"] == 4))
+    np.testing.assert_array_equal(
+        ev(where(col("f") > 0, col("f"), lit(0.0))),
+        np.where(COLS["f"] > 0, COLS["f"], 0.0))
+    out = ev(col("a").cast(np.float32))
+    assert out.dtype == np.float32
+    out = ev((col("a") * col("b")).astype(np.int16))
+    assert out.dtype == np.int16
+    np.testing.assert_array_equal(out, (COLS["a"] * COLS["b"]).astype(np.int16))
+
+
+def test_dtype_promotion_follows_numpy():
+    assert ev(col("i32") + col("a")).dtype == (COLS["i32"] + COLS["a"]).dtype
+    assert ev(col("i32") + col("f")).dtype == (COLS["i32"] + COLS["f"]).dtype
+    assert ev(col("a") / 2).dtype == (COLS["a"] / 2).dtype         # true div
+    assert ev(col("a") > 1).dtype == np.bool_
+
+
+def test_rows_slicing_matches_legacy_callable_convention():
+    e = (col("a") + col("b")) * 2
+    view = ColumnsView(COLS)
+    np.testing.assert_array_equal(e(view, slice(1, 4)),
+                                  (COLS["a"][1:4] + COLS["b"][1:4]) * 2)
+
+
+def test_bool_of_expr_raises():
+    with pytest.raises(TypeError, match="truth value"):
+        bool(col("a") == 1)
+    with pytest.raises(TypeError):
+        if col("a"):              # the `and`/`or` misuse path
+            pass
+
+
+def test_lit_rejects_arrays_and_isin_empty():
+    with pytest.raises(TypeError, match="scalars only"):
+        lit(np.arange(4))
+    with pytest.raises(ValueError):
+        col("a").isin([])
+    assert lit(np.int64(7)).value == 7      # 0-d/np scalars unwrap
+
+
+def test_unknown_column_names_offender():
+    with pytest.raises(KeyError, match="no_such"):
+        ev(col("no_such"))
+
+
+# ---------------------------------------------------------------------------
+#  provenance
+# ---------------------------------------------------------------------------
+def test_columns_derived_exactly():
+    assert col("a").columns() == frozenset({"a"})
+    assert (col("a") + 1).columns() == frozenset({"a"})
+    e = where(col("c") > 0, col("a") * col("b"), lit(0)).cast(np.int32)
+    assert e.columns() == frozenset({"a", "b", "c"})
+    assert (col("a").between(1, 2) & col("b").isin([1, 2])).columns() \
+        == frozenset({"a", "b"})
+    assert expr_reads(col("a") + col("b")) == frozenset({"a", "b"})
+    assert expr_reads(lambda c, r: c.col("a")[r]) is None
+
+
+def test_repr_round_trips_structure():
+    e = (col("a") >= 1) & (col("b") == lit(2))
+    assert "col('a')" in repr(e) and ">=" in repr(e) and "&" in repr(e)
+
+
+# ---------------------------------------------------------------------------
+#  component integration
+# ---------------------------------------------------------------------------
+def test_filter_expression_derive_reads_from_ast():
+    f = Filter("f", (col("a") > 1) & (col("b") == 2))
+    assert f.consumed_columns() == frozenset({"a", "b"})
+    assert f.produced_columns() == frozenset()
+    e = Expression("e", "out", col("a") * col("f"))
+    assert e.consumed_columns() == frozenset({"a", "f"})
+    assert e.produced_columns() == frozenset({"out"})
+    # segment ops carry the exact per-op reads
+    assert f.segment_ops()[0][2] == frozenset({"a", "b"})
+    assert e.segment_ops()[0][3] == frozenset({"a", "f"})
+
+
+def test_conflicting_manual_reads_raises():
+    with pytest.raises(ValueError, match="conflicts"):
+        Filter("f", col("a") > 1, reads=["a", "b"])
+    with pytest.raises(ValueError, match="conflicts"):
+        Expression("e", "o", col("a") + 1, reads=["b"])
+
+
+def test_constant_predicate_raises():
+    with pytest.raises(ValueError, match="reads no columns"):
+        Filter("f", lit(1) == lit(1))
+    with pytest.raises(ValueError, match="reads no columns"):
+        Expression("e", "c", lit(5))
+
+
+def test_legacy_callable_without_reads_warns_deprecation():
+    with pytest.warns(DeprecationWarning, match="repro.col"):
+        f = Filter("f", lambda c, r: c.col("a")[r] > 1)
+    assert f.consumed_columns() is None
+    with pytest.warns(DeprecationWarning):
+        e = Expression("e", "o", lambda c, r: c.col("a")[r] + 1)
+    assert e.consumed_columns() is None
+    # declared reads stay warning-free
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        Filter("f2", lambda c, r: c.col("a")[r] > 1, reads=["a"])
+        Expression("e2", "o", lambda c, r: c.col("a")[r] + 1, reads=["a"])
+
+
+def test_col_references_accepted_for_column_arguments():
+    agg = Aggregate("g", [col("a")], {"s": (col("f"), "sum")})
+    assert agg.group_by == ["a"] and agg.aggs == {"s": ("f", "sum")}
+    assert agg.consumed_columns() == frozenset({"a", "f"})
+    assert agg.produced_columns() == frozenset({"a", "s"})
+    assert Sort("s", [col("a")]).by == ["a"]
+    assert Project("p", [col("a"), "b"]).keep == ["a", "b"]
+    with pytest.raises(TypeError, match="composite"):
+        Aggregate("g", [], {"s": (col("a") + 1, "sum")})
+
+
+def test_filter_runs_identically_from_expr_and_lambda():
+    for backend in ("numpy", "jax"):
+        bk = get_backend(backend)
+        cache_e = SharedCache({k: v.copy() for k, v in COLS.items()}, 5)
+        cache_l = SharedCache({k: v.copy() for k, v in COLS.items()}, 5)
+        fe = Filter("fe", (col("a") > 1) & (col("b") == 2))
+        fl = Filter("fl", lambda c, r: (c.col("a")[r] > 1)
+                    & (c.col("b")[r] == 2), reads=["a", "b"])
+        fe.backend = fl.backend = bk
+        fe.process(cache_e)
+        fl.process(cache_l)
+        for k in COLS:
+            np.testing.assert_array_equal(
+                np.asarray(cache_e.col(k)), np.asarray(cache_l.col(k)),
+                err_msg=f"{backend}:{k}")
+
+
+# ---------------------------------------------------------------------------
+#  jax-vs-numpy compile parity
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("expr", [
+    col("a") + col("b") * 2,
+    (col("a") >= 1) & (col("b") == 2),
+    col("a").between(1, 3) | ~(col("i32") > 3),
+    where(col("f") > 0, col("f") * 2, lit(-1.0)),
+    ((col("a") - col("b")) % 3).cast(np.int32),
+    abs(-col("f")) / 2,
+], ids=lambda e: repr(e)[:48])
+def test_jax_compile_parity(expr):
+    """The SAME AST evaluated eagerly on numpy and through the jax backend's
+    jitted expression runner must agree in value (dtypes modulo the device
+    canonicalization: x64-off jax stores 64-bit as 32-bit)."""
+    jbk = get_backend("jax")
+    host = ev(expr)
+    cache = SharedCache({k: v.copy() for k, v in COLS.items()}, 5)
+    dev = np.asarray(jbk.eval_expression(expr, cache, slice(0, 5)))
+    if np.asarray(host).dtype == np.bool_:
+        np.testing.assert_array_equal(dev.astype(bool), host)
+    else:
+        np.testing.assert_allclose(dev, host, rtol=1e-6)
+
+
+def test_jax_runner_is_cached_and_traces_once_per_shape():
+    e = col("a") * 2 + col("b")
+    jbk = get_backend("jax")
+    cache = SharedCache({k: v.copy() for k, v in COLS.items()}, 5)
+    jbk.eval_expression(e, cache, slice(0, 5))
+    names, fn = e.__dict__["_jax_compiled"]
+    assert names == ["a", "b"]
+    jbk.eval_expression(e, cache, slice(0, 5))
+    assert e.__dict__["_jax_compiled"][1] is fn       # same compiled runner
+
+
+# ---------------------------------------------------------------------------
+#  schema inference
+# ---------------------------------------------------------------------------
+def _mini_flow(pred, with_sink=True):
+    from repro.core import Dataflow
+    flow = Dataflow("mini")
+    comps = [ArraySource("src", {k: v.copy() for k, v in COLS.items()}),
+             Expression("e", "d", col("a") + col("b")),
+             Filter("f", pred),
+             Project("p", ["d", "f"])]
+    sink = CollectSink("sink")
+    if with_sink:
+        comps.append(sink)
+    flow.chain(*comps)
+    return flow, sink
+
+
+def test_infer_schema_exact_with_dsl():
+    flow, _ = _mini_flow(col("d") > 2)
+    schemas = infer_schema(flow, strict=True)
+    assert schemas["e"] == frozenset(COLS) | {"d"}
+    assert schemas["p"] == frozenset({"d", "f"})
+    assert schemas["sink"] == frozenset({"d", "f"})
+
+
+def test_infer_schema_strict_catches_bad_read():
+    flow, _ = _mini_flow(col("typo") > 2)
+    with pytest.raises(ValueError, match="typo"):
+        infer_schema(flow, strict=True)
+
+
+def test_infer_schema_fan_in_intersects_branch_schemas():
+    """A column produced on only ONE input branch of a fan-in is not safely
+    readable downstream — the merged input schema is the intersection, so
+    strict mode rejects a read that a union would have silently passed."""
+    from repro.core import Dataflow
+    from repro.etl.components import Splitter, Union
+    flow = Dataflow("diamond")
+    src = ArraySource("src", dict(COLS))
+    split = Splitter("split", lambda c, r: c.col("a")[r] % 2 == 0)
+    ea = Expression("ea", "x", col("a") + 1)        # only branch A adds 'x'
+    union = Union("union")
+    filt = Filter("filt", col("x") > 0)
+    sink = CollectSink("sink")
+    for comp in (src, split, ea, union, filt, sink):
+        flow.add(comp)
+    flow.connect("src", "split")
+    flow.connect("split", "ea")
+    flow.connect("split", "union")                  # branch B: no 'x'
+    flow.connect("ea", "union")
+    flow.connect("union", "filt")
+    flow.connect("filt", "sink")
+    schemas = infer_schema(flow)
+    assert schemas["union"] == frozenset(COLS)      # 'x' intersected away
+    with pytest.raises(ValueError, match="'x'"):
+        infer_schema(flow, strict=True)
+
+
+def test_session_options_backend_not_clobbered(ssb):
+    """Session(options=OptimizeOptions(backend=...)) must survive run()
+    with no per-call backend override."""
+    from repro.core import OptimizeOptions
+    f = (repro.flow("mini").source(ssb.lineorder)
+         .filter(col("lo_quantity") < 25).sink())
+    session = Session(options=OptimizeOptions(backend="jax"))
+    res = session.run(f, engine="streaming", num_splits=2)
+    assert res.run.backend == "jax"
+    res = session.run(f, engine="streaming", num_splits=2, backend="numpy")
+    assert res.run.backend == "numpy"              # per-call still wins
+
+
+def test_infer_schema_unknown_lambda_poisons_downstream():
+    with pytest.warns(DeprecationWarning):
+        flow, _ = _mini_flow(lambda c, r: c.col("d")[r] > 2)
+    schemas = infer_schema(flow, strict=True)   # no raise: unknown, not wrong
+    assert schemas["e"] is not None
+    assert schemas["f"] is not None             # Filter propagates its input
+    # a component with UNKNOWN output schema (generic FnComponent) poisons
+    # everything downstream of it
+    from repro.core import Dataflow, FnComponent
+    flow2 = Dataflow("mini2")
+    flow2.chain(ArraySource("src", dict(COLS)),
+                FnComponent("fn", lambda cache: None),
+                CollectSink("sink"))
+    schemas2 = infer_schema(flow2, strict=True)
+    assert schemas2["src"] == frozenset(COLS)
+    assert schemas2["fn"] is None and schemas2["sink"] is None
+
+
+# ---------------------------------------------------------------------------
+#  optimizer: zero undeclared-read refusals on DSL flows
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def ssb():
+    return generate(lineorder_rows=4000, customers=300, suppliers=50,
+                    parts=200, seed=11)
+
+
+def _undeclared(refusals):
+    return [r for r in refusals if "undeclared" in r.detail]
+
+
+def test_dsl_flow_has_zero_undeclared_refusals(ssb):
+    qf = build_q4(ssb, use_dsl=True)
+    bk = resolve_backend("numpy")
+    stats = run_calibration(qf.flow, sample_rows=512, backend=bk)
+    opt = CostBasedOptimizer(qf.flow, stats, streaming=True)
+    opt.optimize()
+    assert _undeclared(opt.refusals) == []
+
+
+def test_undeclared_lambda_flow_reports_refusal(ssb):
+    from repro.core import Dataflow
+    flow = Dataflow("undeclared")
+    with pytest.warns(DeprecationWarning):
+        comps = [ArraySource("src", ssb.lineorder),
+                 Expression("e", "d", col("lo_revenue") + 1),
+                 Filter("f", lambda c, r: c.col("lo_quantity")[r] < 25),
+                 CollectSink("sink")]
+    flow.chain(*comps)
+    stats = run_calibration(flow, sample_rows=512,
+                            backend=resolve_backend("numpy"))
+    opt = CostBasedOptimizer(flow, stats, streaming=True)
+    opt.optimize()
+    bad = _undeclared(opt.refusals)
+    assert bad and bad[0].rule == "filter-commute"
+
+
+# ---------------------------------------------------------------------------
+#  Session front end
+# ---------------------------------------------------------------------------
+def test_session_flowbuilder_end_to_end(ssb):
+    date = DimTable(ssb.date["d_datekey"], {"d_year": ssb.date["d_year"]})
+    f = (repro.flow("q1-mini")
+         .source(ssb.lineorder, name="lineorder")
+         .lookup(date, "lo_orderdate", {"d_year": "d_year"},
+                 matched_flag="d_ok")
+         .filter(col("d_ok") & (col("d_year") == 1993)
+                 & col("lo_discount").between(1, 3)
+                 & (col("lo_quantity") < 25))
+         .derive("rev", col("lo_extendedprice") * col("lo_discount"))
+         .aggregate([], {"revenue": ("rev", "sum")})
+         .sink())
+    assert f.schema == frozenset({"revenue"})
+
+    from repro.etl.queries import build_q1
+    expect = build_q1(ssb).oracle(ssb)
+    # the engines follow REPRO_BACKEND: float32 device accumulation cannot
+    # hit the float64 oracle exactly, so use the backend's tolerance
+    rtol = resolve_backend(None).oracle_rtol
+    session = Session()
+    results = {}
+    for engine in Session.ENGINES:
+        res = session.run(f, engine=engine, num_splits=2) \
+            if engine in ("optimized", "streaming") else session.run(f, engine=engine)
+        np.testing.assert_allclose(res.table["revenue"], expect["revenue"],
+                                   rtol=rtol)
+        results[engine] = res
+    # copy-everywhere baselines record more copies than shared caching
+    assert results["streaming"].run.copies < results["ordinary"].run.copies
+    # adaptive + fused re-run stays correct and records its rewrites
+    res = session.run(f, engine="streaming", optimize=2, fuse=True,
+                      num_splits=2, calibration_rows=512)
+    np.testing.assert_allclose(res.table["revenue"], expect["revenue"],
+                               rtol=rtol)
+    assert any(r["rule"] == "fuse-segment" for r in res.run.rewrites)
+    assert not [r for r in res.run.refusals if "undeclared" in r["detail"]]
+    stats = session.calibrate(f, sample_rows=256)
+    assert stats.sample_rows == 256
+
+
+def test_session_rejects_bad_usage(ssb):
+    f = (repro.flow("mini").source(ssb.lineorder)
+         .filter(col("lo_quantity") < 25).sink())
+    session = Session()
+    with pytest.raises(ValueError, match="unknown engine"):
+        session.run(f, engine="warp")
+    with pytest.raises(ValueError, match="baseline"):
+        session.run(f, engine="ordinary", optimize=2)
+    with pytest.raises(TypeError, match="num_splits"):
+        session.run(f, engine="kettle", num_splits=4)
+    with pytest.raises(TypeError, match="cannot run"):
+        session.run(42)
+
+
+def test_flowbuilder_guards():
+    with pytest.raises(ValueError, match="must start with .source"):
+        repro.flow("x").filter(col("a") > 0)
+    b = repro.flow("x").source({"a": np.arange(4)})
+    with pytest.raises(ValueError, match="already has a source"):
+        b.source({"b": np.arange(4)})
+    flow_obj = b.filter(col("a") > 1).sink()
+    with pytest.raises(ValueError, match="sealed"):
+        b.filter(col("a") > 2)
+    # build-time read validation
+    with pytest.raises(ValueError, match="not in its input schema"):
+        (repro.flow("y").source({"a": np.arange(4)})
+         .derive("d", col("missing") + 1).sink())
+    assert flow_obj.schema == frozenset({"a"})
+
+
+def test_session_runs_queryflow_objects(ssb):
+    qf = build_q4(ssb)
+    expect = qf.oracle(ssb)
+    res = Session().run(qf, engine="streaming", num_splits=2)
+    rtol = resolve_backend(None).oracle_rtol
+    for k in expect:
+        np.testing.assert_allclose(res.table[k], expect[k], rtol=rtol)
+
+
+# ---------------------------------------------------------------------------
+#  typed config accessors
+# ---------------------------------------------------------------------------
+def test_config_typed_accessors(monkeypatch):
+    monkeypatch.delenv(config.ENV_BACKEND, raising=False)
+    assert config.backend_name() is None
+    monkeypatch.setenv(config.ENV_BACKEND, " jax ")
+    assert config.backend_name() == "jax"
+    monkeypatch.setenv(config.ENV_FUSION, "1")
+    assert config.fusion_default() is True
+    monkeypatch.setenv(config.ENV_FUSION, "0")
+    assert config.fusion_default() is False
+    monkeypatch.setenv(config.ENV_ARENA, "0")
+    assert config.arena_enabled() is False
+    monkeypatch.setenv(config.ENV_ARENA_MAX_MB, "64")
+    assert config.arena_max_bytes() == 64 << 20
+    monkeypatch.setenv(config.ENV_CACHE_GUARD, "1")
+    assert config.cache_guard_enabled() is True
+    monkeypatch.setenv(config.ENV_OPTEQ_EXAMPLES, "7")
+    assert config.opteq_examples() == 7
+    monkeypatch.setenv(config.ENV_FLOW_STYLE, "lambda")
+    assert config.flow_style() == "lambda"
+    monkeypatch.setenv(config.ENV_FLOW_STYLE, "nope")
+    with pytest.raises(ValueError, match="REPRO_FLOW_STYLE"):
+        config.flow_style()
+    monkeypatch.setenv(config.ENV_FLOW_STYLE, "dsl")
+    snap = config.snapshot()
+    assert snap["arena_max_bytes"] == 64 << 20
+    assert snap["flow_style"] == "dsl"
+
+
+def test_flow_style_switches_builders(ssb, monkeypatch):
+    monkeypatch.setenv(config.ENV_FLOW_STYLE, "lambda")
+    assert build_q4(ssb).style == "lambda"
+    monkeypatch.delenv(config.ENV_FLOW_STYLE, raising=False)
+    assert build_q4(ssb).style == "dsl"

@@ -13,8 +13,6 @@ under both ``numpy`` and ``jax``), so every rewrite is exercised against
 both operator backends.  ``REPRO_OPTEQ_EXAMPLES`` scales the example count
 (default 100 per engine property, per the acceptance bar).
 """
-import os
-
 import numpy as np
 import pytest
 
@@ -24,13 +22,13 @@ try:
 except ImportError:        # pragma: no cover — env without the `test` extra
     from _hypothesis_compat import given, settings, st
 
-from repro.core import (OptimizeOptions, OptimizedEngine, StreamingEngine,
-                        partition)
+from repro.core import (OptimizeOptions, OptimizedEngine, OrdinaryEngine,
+                        StreamingEngine, config, partition)
 from repro.core.component import StageBoundary
 from repro.etl.components import (Aggregate, ArraySource, CollectSink,
                                   DimTable, Expression, Filter, Lookup, Sort)
 
-N_EXAMPLES = int(os.environ.get("REPRO_OPTEQ_EXAMPLES", "100"))
+N_EXAMPLES = config.opteq_examples()
 ROWS = 400                 # fixed size keeps jitted-kernel shapes stable
 KEYSPACE = 40
 
@@ -281,3 +279,84 @@ def test_equivalence_filter_drops_everything():
 def test_equivalence_single_component_flow():
     spec = (5, 1, [])
     _assert_byte_identical(spec, StreamingEngine)
+
+
+# ---------------------------------------------------------------------------
+#  AST-vs-lambda: DSL-built SSB flows are byte-identical to the legacy
+#  lambda-built flows — both backends, every engine, levels 0/2, fused and
+#  unfused (the api_redesign acceptance matrix)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def ssb_dsl_data():
+    from repro.etl.ssb import generate
+    return generate(lineorder_rows=3000, customers=200, suppliers=40,
+                    parts=150, seed=17)
+
+
+def _dsl_backends():
+    from repro.core import available_backends, get_backend
+    out = ["numpy"]
+    if "jax" in available_backends():
+        try:
+            get_backend("jax")
+            out.append("jax")
+        except Exception:      # pragma: no cover — jax present in-container
+            pass
+    return out
+
+
+#: (engine, optimize_level, fuse_segments); the ordinary baseline has no
+#: optimizer/fusion knobs
+_DSL_MATRIX = [("ordinary", None, None)] + [
+    (eng, lvl, fuse)
+    for eng in ("optimized", "streaming")
+    for lvl in (0, 2)
+    for fuse in (False, True)]
+
+
+@pytest.mark.parametrize("qname", ["Q1.1", "Q2.1", "Q3.1", "Q4.1", "Q4.1s"])
+def test_dsl_vs_lambda_ssb_byte_identical(qname, ssb_dsl_data):
+    """Every SSB builder constructed via the expression DSL produces
+    byte-identical sink output to the pre-DSL lambda builder, on both
+    operator backends, across Ordinary/Optimized/Streaming engines at
+    optimize levels 0 and 2 with segment fusion off and on."""
+    from repro.etl import BUILDERS
+    for backend in _dsl_backends():
+        for engine, level, fuse in _DSL_MATRIX:
+            tables = {}
+            for use_dsl in (True, False):
+                qf = BUILDERS[qname](ssb_dsl_data, use_dsl=use_dsl)
+                if engine == "ordinary":
+                    OrdinaryEngine(qf.flow, chunk_rows=1024,
+                                   backend=backend).run()
+                else:
+                    cls = (StreamingEngine if engine == "streaming"
+                           else OptimizedEngine)
+                    cls(qf.flow, OptimizeOptions(
+                        num_splits=2, backend=backend,
+                        optimize_level=level, calibration_rows=256,
+                        fuse_segments=fuse)).run()
+                tables[use_dsl] = qf.sink.result()
+            label = f"{qname}/{backend}/{engine}/lvl={level}/fuse={fuse}"
+            dsl_t, lam_t = tables[True], tables[False]
+            assert set(dsl_t) == set(lam_t), f"{label}: column sets differ"
+            for k in lam_t:
+                assert dsl_t[k].dtype == lam_t[k].dtype, \
+                    f"{label}: dtype of {k} differs"
+                np.testing.assert_array_equal(
+                    dsl_t[k], lam_t[k],
+                    err_msg=f"{label}: column {k} differs (DSL vs lambda)")
+
+
+def test_dsl_flows_report_no_undeclared_refusals(ssb_dsl_data):
+    """On DSL-built SSB flows the cost-based optimizer never refuses a
+    rewrite for an undeclared read/write set (provenance is derived from
+    the AST) — the silent-opt-out failure mode of the lambda API."""
+    from repro.etl import BUILDERS
+    for qname in ("Q1.1", "Q2.1", "Q3.1", "Q4.1", "Q4.1s"):
+        qf = BUILDERS[qname](ssb_dsl_data, use_dsl=True)
+        run = StreamingEngine(qf.flow, OptimizeOptions(
+            num_splits=2, optimize_level=2, calibration_rows=256,
+            fuse_segments=True)).run()
+        bad = [r for r in run.refusals if "undeclared" in r["detail"]]
+        assert not bad, f"{qname}: undeclared-read refusals on a DSL flow: {bad}"

@@ -167,8 +167,11 @@ def test_filter_commute_refuses_undeclared_reads():
     flow, _ = _commute_flow(reads=None)
     opt = CostBasedOptimizer(flow, _stats(flow))
     ok, reason = opt.can_commute("lk", "filt")
-    assert not ok and "no declared read set" in reason
+    assert not ok and "undeclared read set" in reason
     assert opt.optimize() == []
+    # the silent opt-out is now VISIBLE: the refusal is recorded with reason
+    assert any(r.rule == "filter-commute" and "undeclared" in r.detail
+               for r in opt.refusals)
 
 
 def test_filter_commute_refuses_block_neighbour():
