@@ -1,0 +1,170 @@
+"""Bench-regression gate: diff a freshly produced ``BENCH_<tag>.json``
+against the committed baseline in ``benchmarks/baselines/``.
+
+    PYTHONPATH=src python -m benchmarks.bench_diff BENCH_ci-jax-fusion1.json
+    PYTHONPATH=src python -m benchmarks.bench_diff --update BENCH_*.json
+
+The baseline file is looked up by the payload's OWN tag (``baselines/
+BENCH_<tag>.json``), so a CI leg can only ever be compared against the
+baseline seeded for that exact matrix cell.
+
+Field classes (see benchmarks/README.md for the schema):
+
+  exact  — transfer/copy COUNTERS: ``copies``, ``bytes_copied``,
+           ``h2d_transfers``, ``h2d_bytes``, ``d2h_transfers``,
+           ``d2h_bytes`` inside every section's ``cache_stats``, the whole
+           ``counters`` subtree a section may carry (per-flow fused/unfused
+           dispatch + transfer counts), every section's ``status``, and the
+           payload's backend/mode/flow_style.  These are deterministic for a
+           fixed seed and split count — ANY drift is a real behaviour change
+           (a lost fusion, a new per-chunk sync, a changed kernel route) and
+           fails the gate.
+  band   — wall-clock (``wall_s``, rtol ``BENCH_DIFF_WALL_RTOL``, default
+           10.0 — generous because CI machines vary; the gate is the
+           counters, not the clock) and the arena pool counters
+           (``arena_hits`` / ``arena_misses`` / ``arena_bytes_reused``,
+           rtol ``BENCH_DIFF_ARENA_RTOL``, default 0.75 + absolute slack)
+           — arena reuse depends on worker thread timing, so exact equality
+           would flake (deviation from a strict all-exact diff, documented
+           in benchmarks/README.md).
+
+Missing/extra sections are errors: a section silently dropping out of the
+bench is exactly the regression a green CI must not hide.
+
+``--update`` rewrites the baselines from the fresh files instead of
+diffing — run locally after an INTENDED perf-behaviour change and commit
+the result.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import sys
+from typing import List
+
+BASELINE_DIR = os.path.join(os.path.dirname(__file__), "baselines")
+
+#: cache_stats fields compared exactly (deterministic counters)
+EXACT_STATS = ("copies", "bytes_copied", "h2d_transfers", "h2d_bytes",
+               "d2h_transfers", "d2h_bytes")
+#: cache_stats fields compared with a tolerance band (thread-timing noise)
+ARENA_STATS = ("arena_hits", "arena_misses", "arena_bytes_reused")
+#: top-level payload fields that must match exactly
+EXACT_META = ("tag", "mode", "backend", "flow_style")
+
+WALL_RTOL = float(os.environ.get("BENCH_DIFF_WALL_RTOL", "10.0"))
+ARENA_RTOL = float(os.environ.get("BENCH_DIFF_ARENA_RTOL", "0.75"))
+#: absolute slack for arena counters: tiny baselines (a handful of hits)
+#: fluctuate by a few either way regardless of rtol
+ARENA_ATOL = 64
+
+
+def _within(fresh: float, base: float, rtol: float, atol: float = 0.0) -> bool:
+    return abs(fresh - base) <= atol + rtol * abs(base)
+
+
+def _diff_exact_tree(fresh, base, path: str, problems: List[str]) -> None:
+    """Recursive exact comparison (the ``counters`` subtree)."""
+    if isinstance(base, dict) and isinstance(fresh, dict):
+        for k in sorted(set(base) | set(fresh)):
+            if k not in fresh:
+                problems.append(f"{path}.{k}: missing from fresh run")
+            elif k not in base:
+                problems.append(f"{path}.{k}: not in baseline "
+                                f"(run --update to accept)")
+            else:
+                _diff_exact_tree(fresh[k], base[k], f"{path}.{k}", problems)
+    elif fresh != base:
+        problems.append(f"{path}: {fresh!r} != baseline {base!r}")
+
+
+def diff_payload(fresh: dict, base: dict) -> List[str]:
+    """All regressions of ``fresh`` vs ``base`` as human-readable strings
+    (empty list == gate passes)."""
+    problems: List[str] = []
+    for k in EXACT_META:
+        if fresh.get(k) != base.get(k):
+            problems.append(f"{k}: {fresh.get(k)!r} != baseline "
+                            f"{base.get(k)!r}")
+    fs, bs = fresh.get("sections", {}), base.get("sections", {})
+    for name in sorted(set(bs) - set(fs)):
+        problems.append(f"section {name}: missing from fresh run")
+    for name in sorted(set(fs) - set(bs)):
+        problems.append(f"section {name}: not in baseline "
+                        f"(run --update to accept)")
+    for name in sorted(set(fs) & set(bs)):
+        f_sec, b_sec = fs[name], bs[name]
+        if f_sec.get("status") != b_sec.get("status"):
+            problems.append(f"{name}.status: {f_sec.get('status')!r} != "
+                            f"baseline {b_sec.get('status')!r}")
+        f_cs = f_sec.get("cache_stats", {})
+        b_cs = b_sec.get("cache_stats", {})
+        for field in EXACT_STATS:
+            if f_cs.get(field) != b_cs.get(field):
+                problems.append(
+                    f"{name}.cache_stats.{field}: {f_cs.get(field)} != "
+                    f"baseline {b_cs.get(field)} (exact counter)")
+        for field in ARENA_STATS:
+            fv, bv = f_cs.get(field, 0), b_cs.get(field, 0)
+            if not _within(fv, bv, ARENA_RTOL, ARENA_ATOL):
+                problems.append(
+                    f"{name}.cache_stats.{field}: {fv} outside "
+                    f"{ARENA_RTOL:.0%}+{ARENA_ATOL} band of baseline {bv}")
+        fw, bw = f_sec.get("wall_s", 0.0), b_sec.get("wall_s", 0.0)
+        if not _within(fw, bw, WALL_RTOL):
+            problems.append(f"{name}.wall_s: {fw} outside {WALL_RTOL:.0f}x "
+                            f"band of baseline {bw}")
+        if "counters" in b_sec or "counters" in f_sec:
+            _diff_exact_tree(f_sec.get("counters", {}),
+                             b_sec.get("counters", {}),
+                             f"{name}.counters", problems)
+    return problems
+
+
+def _baseline_path(tag: str) -> str:
+    return os.path.join(BASELINE_DIR, f"BENCH_{tag}.json")
+
+
+def main(argv: List[str] = None) -> int:
+    args = list(sys.argv[1:] if argv is None else argv)
+    update = "--update" in args
+    paths = [a for a in args if a != "--update"]
+    if not paths:
+        print("usage: python -m benchmarks.bench_diff [--update] "
+              "BENCH_<tag>.json [...]")
+        return 2
+    rc = 0
+    for path in paths:
+        with open(path) as f:
+            fresh = json.load(f)
+        tag = fresh.get("tag", "local")
+        bpath = _baseline_path(tag)
+        if update:
+            os.makedirs(BASELINE_DIR, exist_ok=True)
+            shutil.copyfile(path, bpath)
+            print(f"bench_diff: baseline {bpath} updated from {path}")
+            continue
+        if not os.path.exists(bpath):
+            print(f"bench_diff: no baseline for tag {tag!r} ({bpath}); "
+                  f"seed it with --update")
+            rc = 1
+            continue
+        with open(bpath) as f:
+            base = json.load(f)
+        problems = diff_payload(fresh, base)
+        if problems:
+            print(f"bench_diff: {path} vs {bpath}: "
+                  f"{len(problems)} regression(s)")
+            for p in problems:
+                print(f"  REGRESSION {p}")
+            rc = 1
+        else:
+            n = len(fresh.get("sections", {}))
+            print(f"bench_diff: {path} vs {bpath}: OK ({n} sections, "
+                  f"counters exact, wall/arena in band)")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -4,9 +4,15 @@ production-relevant shapes (arithmetic intensity -> bound regime on v5e:
 ridge = 197e12 / 819e9 ~ 241 FLOP/byte).
 
 Emits CSV: kernel,shape,ref_ms_cpu,flops,bytes,intensity,v5e_bound
+
+``smoke()`` is the CI part: interpret-vs-reference equality sweeps for the
+data kernels (hash_join probe, radix_groupby, segment_sum) — the Pallas
+kernel BODY validated on CPU — plus the full intensity CSV written to
+``KERNELS_<tag>.csv`` for upload next to the BENCH json.
 """
 from __future__ import annotations
 
+import os
 import time
 
 import jax
@@ -14,15 +20,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.flash_attention import flash_attention_ref
+from repro.kernels.hash_join import hash_build, hash_probe
 from repro.kernels.mamba_scan import mamba_scan_ref
-from repro.kernels.segment_sum import segment_sum_ref
+from repro.kernels.radix_groupby import radix_groupby
+from repro.kernels.segment_sum import segment_sum, segment_sum_ref
 
 RIDGE = 197e12 / 819e9
 
 
 def _time(fn, *args):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        fn(*args).block_until_ready()
+    # one warmup call (compile + first run), then one timed call — the
+    # result is evaluated ONCE per call (a tuple-check must not re-invoke fn)
+    r = fn(*args)
+    (r[0] if isinstance(r, tuple) else r).block_until_ready()
     t0 = time.perf_counter()
     r = fn(*args)
     (r[0] if isinstance(r, tuple) else r).block_until_ready()
@@ -79,7 +89,121 @@ def run() -> list:
     out.append(f"kernels.segment_sum,N{Nr}xC{Cc}xG{Gg},"
                f"{ms:.1f},{flops:.2e},{byts:.2e},{flops/byts:.0f},"
                f"{'compute' if flops/byts > RIDGE else 'memory'}")
+
+    # hash-join probe: the Lookup component at SSB dimension scale
+    Dd, Np_ = 1 << 15, 1 << 20
+    keys = np.sort(rng.choice(1 << 22, size=Dd, replace=False)).astype(np.int64)
+    ht = hash_build((keys,))
+    slot_keys = tuple(jnp.asarray(x) for x in ht["slot_keys"])
+    slot_idx = jnp.asarray(ht["slot_idx"])
+    probes = jnp.asarray(rng.integers(0, 1 << 22, Np_).astype(np.int64))
+    ms = _time(lambda p: hash_probe(slot_keys, slot_idx, (p,),
+                                    ht["max_probes"], impl="reference"),
+               probes)
+    mp = ht["max_probes"]
+    flops = 1.0 * Np_ * (6 + 4 * mp)     # fmix32 + per-step cmp/mask chain
+    byts = (Np_ + Np_ * mp * 2 + ht["table_size"] * 2) * 4
+    out.append(f"kernels.hash_join,D{Dd}xN{Np_}xp{mp},"
+               f"{ms:.1f},{flops:.2e},{byts:.2e},{flops/byts:.1f},memory")
+
+    # radix groupby: dense-id grouped reduce (replaces sort+segment_sum)
+    Nr2, Cc2, Gg2 = 1 << 20, 2, 4096
+    ids = jnp.asarray(rng.integers(0, Gg2, Nr2).astype(np.int32))
+    vals2 = jnp.asarray(rng.normal(size=(Nr2, Cc2)), jnp.float32)
+    ms = _time(lambda i, v: radix_groupby(i, v, Gg2, impl="reference"),
+               ids, vals2)
+    parts = -(-Gg2 // 256)
+    flops = 2.0 * Nr2 * 256 * (Cc2 + 1) * parts    # per-partition one-hot
+    byts = (parts * Nr2 * (Cc2 + 2) + Gg2 * (Cc2 + 1)) * 4
+    out.append(f"kernels.radix_groupby,N{Nr2}xC{Cc2}xG{Gg2},"
+               f"{ms:.1f},{flops:.2e},{byts:.2e},{flops/byts:.0f},"
+               f"{'compute' if flops/byts > RIDGE else 'memory'}")
     return out
+
+
+def smoke(data=None):
+    """CI part: Pallas kernel-body (interpret) vs pure-jnp reference equality
+    for the data kernels, then the intensity CSV written to
+    ``KERNELS_<tag>.csv`` (uploaded with the BENCH json artifacts)."""
+    rng = np.random.default_rng(7)
+    failures = 0
+
+    # hash-join: shuffled unique keys + dup/miss probes, single + multi col
+    try:
+        keys = np.sort(rng.choice(5_000, size=700, replace=False)
+                       ).astype(np.int64)
+        ht = hash_build((keys,))
+        sk = tuple(jnp.asarray(x) for x in ht["slot_keys"])
+        si = jnp.asarray(ht["slot_idx"])
+        probes = jnp.asarray(rng.integers(0, 6_000, 3_000).astype(np.int64))
+        i_r, f_r = hash_probe(sk, si, (probes,), ht["max_probes"],
+                              impl="reference")
+        i_i, f_i = hash_probe(sk, si, (probes,), ht["max_probes"],
+                              impl="interpret")
+        assert np.array_equal(np.asarray(i_r), np.asarray(i_i))
+        assert np.array_equal(np.asarray(f_r), np.asarray(f_i))
+        # vs the searchsorted oracle (found rows index the leftmost match)
+        pv = np.asarray(probes)
+        ss = np.clip(np.searchsorted(keys, pv), 0, len(keys) - 1)
+        hit = keys[ss] == pv
+        assert np.array_equal(np.asarray(f_r), hit)
+        assert np.array_equal(np.asarray(i_r)[hit], ss[hit])
+        print(f"smoke.kernels.hash_join,ok,probes={len(pv)},"
+              f"hits={int(hit.sum())},max_probes={ht['max_probes']}")
+    except Exception:
+        import traceback
+        traceback.print_exc()
+        failures += 1
+        print("smoke.kernels.hash_join,FAIL")
+
+    # radix groupby: interpret vs reference, padding rows included
+    try:
+        ids = rng.integers(-1, 600, size=20_000).astype(np.int32)
+        vals = rng.normal(size=(20_000, 3)).astype(np.float32)
+        s_r, c_r = radix_groupby(jnp.asarray(ids), jnp.asarray(vals), 600,
+                                 impl="reference")
+        s_i, c_i = radix_groupby(jnp.asarray(ids), jnp.asarray(vals), 600,
+                                 impl="interpret")
+        np.testing.assert_allclose(np.asarray(s_r), np.asarray(s_i),
+                                   rtol=1e-5, atol=1e-5)
+        assert np.array_equal(np.asarray(c_r), np.asarray(c_i))
+        print(f"smoke.kernels.radix_groupby,ok,groups=600,"
+              f"rows={int(np.asarray(c_r).sum())}")
+    except Exception:
+        import traceback
+        traceback.print_exc()
+        failures += 1
+        print("smoke.kernels.radix_groupby,FAIL")
+
+    # segment sum: interpret vs reference (regression guard for the shared
+    # one-hot matmul pattern all three reduce kernels use)
+    try:
+        seg = jnp.asarray(rng.integers(0, 64, 8_192).astype(np.int32))
+        v = jnp.asarray(rng.normal(size=(8_192, 2)), jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(segment_sum(seg, v, 64, impl="interpret")),
+            np.asarray(segment_sum(seg, v, 64, impl="reference")),
+            rtol=1e-5, atol=1e-5)
+        print("smoke.kernels.segment_sum,ok")
+    except Exception:
+        import traceback
+        traceback.print_exc()
+        failures += 1
+        print("smoke.kernels.segment_sum,FAIL")
+
+    # the intensity CSV artifact (small shapes run fine on CPU)
+    try:
+        tag = os.environ.get("BENCH_TAG", "").strip() or "local"
+        path = f"KERNELS_{tag}.csv"
+        with open(path, "w") as f:
+            f.write("\n".join(run()) + "\n")
+        print(f"# wrote {path}")
+    except Exception:
+        import traceback
+        traceback.print_exc()
+        failures += 1
+        print("smoke.kernels.csv,FAIL")
+    return failures
 
 
 if __name__ == "__main__":

@@ -61,7 +61,7 @@ SECTIONS = {
 }
 
 SMOKE_FLOWS = ("Q1.1", "Q2.1", "Q4.1", "Q4.1s")
-SMOKE_PARTS = ("engines", "backend", "optimizer", "fusion", "dsl")
+SMOKE_PARTS = ("engines", "backend", "optimizer", "fusion", "dsl", "kernels")
 
 
 # ---------------------------------------------------------------------------
@@ -231,6 +231,9 @@ def smoke(parts=None) -> int:
         # declarative DSL vs legacy lambda flows: byte equality + transfer
         # counts <= the lambda fused baseline + zero undeclared refusals
         "dsl": lambda: dsl_compare.smoke(data),
+        # data-kernel sweeps: hash-join / radix-groupby / segment-sum
+        # ref-vs-interpret equality + the intensity CSV artifact
+        "kernels": kernel_bench.smoke,
     }
     failures = 0
     records = {}
@@ -238,13 +241,19 @@ def smoke(parts=None) -> int:
         t0 = time.time()
         with cache_stats_scope() as stats:
             try:
-                part_failures = runners[part]()
+                got = runners[part]()
             except Exception:
                 traceback.print_exc()
-                part_failures = 1
+                got = 1
+        # runners return either a failure count or (failures, extras) where
+        # extras (e.g. transfer counters) merges into the section record for
+        # bench_diff to lock in
+        part_failures, extras = got if isinstance(got, tuple) else (got, {})
         failures += part_failures
-        records[f"smoke.{part}"] = _section_record(
+        record = _section_record(
             time.time() - t0, "FAIL" if part_failures else "PASS", stats)
+        record.update(extras)
+        records[f"smoke.{part}"] = record
     path = write_bench_json(records, mode="smoke")
     print(f"# wrote {path}")
     print(f"smoke,{'FAIL' if failures else 'PASS'},{failures} failures")

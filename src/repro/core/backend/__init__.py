@@ -3,9 +3,9 @@
 ``numpy`` is the always-available reference; ``jax`` runs the same operator
 kernels jitted on device (groupby through the ``kernels/segment_sum`` Pallas
 op).  See base.py for the interface and selection order."""
-from .base import (AGG_OPS, BACKEND_ENV_VAR, Backend, available_backends,
-                   get_backend, get_default_backend, register_backend,
-                   resolve_backend, set_default_backend)
+from .base import (AGG_OPS, BACKEND_ENV_VAR, SEGMENT_KEEP_MASK, Backend,
+                   available_backends, get_backend, get_default_backend,
+                   register_backend, resolve_backend, set_default_backend)
 from .numpy_backend import NumpyBackend
 
 register_backend("numpy", NumpyBackend)
@@ -19,7 +19,8 @@ def _make_jax_backend() -> Backend:
 register_backend("jax", _make_jax_backend)
 
 __all__ = [
-    "AGG_OPS", "BACKEND_ENV_VAR", "Backend", "NumpyBackend",
+    "AGG_OPS", "BACKEND_ENV_VAR", "SEGMENT_KEEP_MASK", "Backend",
+    "NumpyBackend",
     "available_backends", "get_backend", "get_default_backend",
     "register_backend", "resolve_backend", "set_default_backend",
 ]

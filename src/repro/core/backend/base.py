@@ -40,6 +40,13 @@ if TYPE_CHECKING:  # pragma: no cover
 #: aggregation ops every backend must implement in groupby_reduce
 AGG_OPS = ("sum", "avg", "min", "max", "count")
 
+#: sentinel column a deferring fused segment leaves in its output cache: the
+#: segment's combined keep-mask, NOT applied per chunk (that would force a
+#: device->host sync every chunk).  The terminal ``Aggregate`` pops it after
+#: the device-side concat and compacts the merged cache ONCE.  The name is
+#: illegal as a user column (spaces), so it can never shadow real data.
+SEGMENT_KEEP_MASK = "__segment keep mask__"
+
 #: environment variable naming the default backend for the process
 #: (typed accessor: ``core.config.backend_name``)
 BACKEND_ENV_VAR = config.ENV_BACKEND
@@ -61,6 +68,12 @@ class Backend:
     #: engine-vs-oracle equality checks use this per-backend tolerance
     #: (float32 device accumulation cannot hit float64 exactness)
     oracle_rtol: float = 1e-9
+    #: whether this backend's ``compile_segment`` runner honors
+    #: ``FusedSegment.defer_cols`` — leaving the chunk uncompacted with a
+    #: ``SEGMENT_KEEP_MASK`` column for the terminal Aggregate to apply once.
+    #: Only meaningful for backends where an eager compact costs a
+    #: device->host sync; host backends compact for free and ignore deferral.
+    supports_segment_defer: bool = False
 
     # ------------------------------------------------------------ array ops
     def asarray(self, x) -> object:

@@ -1,12 +1,20 @@
 """Accelerated operator backend: jitted JAX kernels + device-resident columns.
 
 Kernels:
-  - ``searchsorted_probe`` / ``lookup_gather`` — jitted probe over a
-    device-cached dimension table (keys/qualifies/payload are device_put once
-    per table and reused across every chunk).
-  - ``groupby_reduce`` — routed through the repo's ``kernels/segment_sum``
-    Pallas op (MXU one-hot matmul on TPU, jnp reference elsewhere; set
-    ``REPRO_SEGSUM_IMPL=interpret`` to exercise the Pallas kernel body on
+  - ``searchsorted_probe`` / ``lookup_gather`` — probe over a device-cached
+    dimension table (keys/qualifies/payload are device_put once per table and
+    reused across every chunk).  Default route is the ``kernels/hash_join``
+    open-addressing table (host-built once per DimTable, probes handle
+    arbitrary key order and multi-column keys); ``REPRO_JOIN_IMPL=
+    searchsorted`` selects the legacy jitted binary search over the sorted
+    keys.  Both return the same (index, matched) pair bit-for-bit: the hash
+    build keeps the FIRST occurrence of a duplicate key, which over the
+    DimTable's sorted keys is exactly ``searchsorted``'s leftmost index.
+  - ``groupby_reduce`` — dense integer key spaces route through
+    ``kernels/radix_groupby`` (radix-partitioned one-hot matmul, no sort);
+    sparse/non-integer/huge key spaces fall back to the legacy lexsort +
+    ``kernels/segment_sum`` route (``REPRO_GROUPBY_IMPL=sort`` forces it;
+    ``REPRO_SEGSUM_IMPL=interpret`` exercises the Pallas segment-sum body on
     CPU).  Sums accumulate in float32 — the MXU-native width — so
     engine-vs-oracle checks use ``oracle_rtol`` instead of float64 exactness.
   - ``filter_mask`` / ``eval_expression`` — user lambdas evaluated over a
@@ -84,14 +92,29 @@ class JaxBackend(Backend):
     batch_align = 512
     #: float32 accumulation (MXU width) vs the float64 oracles
     oracle_rtol = 1e-3
+    #: fused row-sync chains may defer their combined keep-mask through a
+    #: terminal Aggregate (the per-chunk d2h sync disappears; Aggregate.finish
+    #: applies the mask once after the device-side concat)
+    supports_segment_defer = True
+    #: dense-groupby guards: past either, fall back to the sort route
+    #: (float32 counts are exact below 2^24; the dense cell count bounds the
+    #: group-id space the radix kernel partitions)
+    _DENSE_MAX_ROWS = 1 << 24
+    _DENSE_MAX_CELLS = 1 << 20
 
     def __init__(self) -> None:
         import jax                       # deferred: registry creates lazily
         import jax.numpy as jnp
+        from ...kernels.hash_join import hash_build, hash_probe, hash_probe_ref
+        from ...kernels.radix_groupby import radix_groupby
         from ...kernels.segment_sum import segment_sum
         self._jax = jax
         self._jnp = jnp
         self._segment_sum = segment_sum
+        self._hash_build = hash_build
+        self._hash_probe = hash_probe
+        self._hash_probe_ref = hash_probe_ref
+        self._radix_groupby = radix_groupby
         self._segsum_impl = config.segsum_impl()
 
         def _probe(keys, qualifies, vals):
@@ -183,6 +206,26 @@ class JaxBackend(Backend):
                     got = dev["payload"][col] = self.asarray(dim.payload[col])
         return got
 
+    def _dim_hash(self, dim) -> Dict[str, object]:
+        """Open-addressing hash table over the DimTable's keys: built once on
+        host (``kernels/hash_join.hash_build``), slot arrays device_put once,
+        cached on the table itself like ``_dim_device``.  ``max_probes`` (the
+        static probe-loop bound) stays a Python int — it must never become a
+        tracer."""
+        ht = dim.__dict__.get("_jax_hash_cache")
+        if ht is None:
+            with self._dims_lock:
+                ht = dim.__dict__.get("_jax_hash_cache")
+                if ht is None:
+                    built = self._hash_build((np.asarray(dim.keys),))
+                    ht = dim.__dict__["_jax_hash_cache"] = {
+                        "slot_keys": tuple(self.asarray(k)
+                                           for k in built["slot_keys"]),
+                        "slot_idx": self.asarray(built["slot_idx"]),
+                        "max_probes": int(built["max_probes"]),
+                    }
+        return ht
+
     # ---------------------------------------------------- DSL expression jit
     def _expr_runner(self, expr: Expr):
         """One jitted XLA computation per DSL expression: the whole AST
@@ -248,7 +291,14 @@ class JaxBackend(Backend):
         if pad:
             v = self._jnp.concatenate([v, self._jnp.full((pad,), dim.keys[0],
                                                          dtype=v.dtype)])
-        idx, matched = self._probe_jit(dev["keys"], dev["qualifies"], v)
+        impl = config.join_impl()
+        if impl == "searchsorted":
+            idx, matched = self._probe_jit(dev["keys"], dev["qualifies"], v)
+        else:
+            ht = self._dim_hash(dim)
+            idx, found = self._hash_probe(ht["slot_keys"], ht["slot_idx"],
+                                          (v,), ht["max_probes"], impl=impl)
+            matched = found & dev["qualifies"][idx]
         return idx[:n], matched[:n]
 
     def lookup_gather(self, dim, dim_col: str, idx, matched, default):
@@ -281,6 +331,11 @@ class JaxBackend(Backend):
                     aggs[out] = jnp.max(vals)[None]
             return [], aggs
         keys_d = [self.asarray(k) for k in keys]
+        impl = config.groupby_impl()
+        if impl != "sort":
+            dense = self._groupby_dense(keys_d, values, n, impl)
+            if dense is not None:
+                return dense
         order = jnp.lexsort(tuple(keys_d[::-1]))
         sk = [k[order] for k in keys_d]
         boundary = jnp.zeros((n,), dtype=bool).at[0].set(True)
@@ -311,6 +366,74 @@ class JaxBackend(Backend):
             elif op == "max":
                 aggs[out] = self._jax.ops.segment_max(vals, seg,
                                                       num_segments=n_groups)
+        return group_cols, aggs
+
+    def _groupby_dense(self, keys_d: List, values: Mapping[str, Tuple[object, str]],
+                       n: int, impl: str):
+        """Radix-partitioned groupby over a dense composite key id — no sort.
+
+        Each key column is offset to zero and the tuple is flattened into one
+        dense int32 id (FIRST key column most significant, so ascending id
+        order IS the lexicographic group order the sort route emits).  All
+        sum/avg inputs stack into one [N, C] matrix and reduce in a single
+        ``kernels/radix_groupby`` pass that also yields per-group counts;
+        occupied cells are recovered from the counts (the only extra d2h) and
+        group key columns are reconstructed arithmetically from the cell ids —
+        the row data is never sorted and never leaves the device.
+
+        Returns ``None`` when the key space doesn't qualify (empty input,
+        non-integer keys, cell count past the VMEM-scaled bound, row count
+        past float32-count exactness) — the caller falls back to the sort
+        route.
+        """
+        jnp = self._jnp
+        if n == 0 or n >= self._DENSE_MAX_ROWS:
+            return None
+        for k in keys_d:
+            if not jnp.issubdtype(k.dtype, jnp.integer):
+                return None
+        # one d2h for every column's min/max (stacked into a single transfer)
+        lo_hi = self.to_host(jnp.stack(
+            [jnp.stack([jnp.min(k), jnp.max(k)]) for k in keys_d]))
+        mins = [int(v) for v in lo_hi[:, 0]]
+        ranges = [int(hi) - int(lo) + 1 for lo, hi in lo_hi]
+        cells = 1
+        for r in ranges:
+            cells *= r
+            if cells > self._DENSE_MAX_CELLS:
+                return None
+        strides = [1] * len(keys_d)
+        for i in range(len(keys_d) - 2, -1, -1):
+            strides[i] = strides[i + 1] * ranges[i + 1]
+        ids = jnp.zeros((n,), jnp.int32)
+        for k, mn, st in zip(keys_d, mins, strides):
+            ids = ids + (k.astype(jnp.int32) - mn) * st
+
+        sum_outs = [out for out, (_, op) in values.items()
+                    if op in ("sum", "avg")]
+        mat = [self.asarray(values[out][0]).astype(jnp.float32)
+               for out in sum_outs]
+        vmat = (jnp.stack(mat, axis=1) if mat
+                else jnp.zeros((n, 0), jnp.float32))
+        sums, counts = self._radix_groupby(ids, vmat, cells, impl=impl)
+        counts_h = np.rint(self.to_host(counts)).astype(np.int64)  # one d2h
+        occ = np.flatnonzero(counts_h)
+        occ_d = jnp.asarray(occ.astype(np.int32))
+        group_cols = [((occ_d // st) % rg + mn).astype(k.dtype)
+                      for k, mn, st, rg in zip(keys_d, mins, strides, ranges)]
+        counts_d = jnp.asarray(counts_h[occ])
+        aggs: Dict[str, object] = {}
+        for out, (col, op) in values.items():
+            if op == "count":
+                aggs[out] = counts_h[occ]
+            elif op in ("sum", "avg"):
+                s = sums[occ_d, sum_outs.index(out)]
+                aggs[out] = s / counts_d if op == "avg" else s
+            else:  # min / max: one segment reduce over the dense ids
+                fn = (self._jax.ops.segment_min if op == "min"
+                      else self._jax.ops.segment_max)
+                aggs[out] = fn(self.asarray(col), ids,
+                               num_segments=cells)[occ_d]
         return group_cols, aggs
 
     def sort_rows(self, keys: Sequence, ascending: bool = True):
@@ -352,6 +475,15 @@ class _JaxSegmentRunner:
         self.inputs = segment.kernel_input_columns()
         self._written = segment_written_columns(self.ops)
         self._final_live = segment_final_live
+        #: mask deferral: when the optimizer fused this chain through its
+        #: terminal Aggregate, skip the per-chunk compact (the chunk's only
+        #: d2h) and hand the keep-mask downstream as a sentinel column
+        self.defer_mask = bool(getattr(segment, "defer_cols", None))
+        #: Lookup route inside the fused kernel: hash-probe (traced inline
+        #: via hash_probe_ref — it fuses into the one XLA computation) unless
+        #: pinned back to the legacy binary search
+        self._join_impl = config.join_impl()
+        self._max_probes: List[int] = []   # python-side: static loop bounds
         self._jit = backend._jax.jit(self._kernel, static_argnums=(0,))
         self._layouts: set = set()
         self._dims = None            # built once: stable per (segment, backend)
@@ -388,6 +520,7 @@ class _JaxSegmentRunner:
             elif kind == "lookup":
                 _, dim, key_col, return_cols, default, matched_flag = op
                 d = dims[dim_i]
+                max_probes = self._max_probes[dim_i]  # static (never traced)
                 dim_i += 1
                 vals = env[key_col]
                 keys = d["keys"]
@@ -398,9 +531,17 @@ class _JaxSegmentRunner:
                             vals.shape[0], default,
                             d["payload"][dim_col].dtype)
                 else:
-                    idx = jnp.clip(jnp.searchsorted(keys, vals),
-                                   0, keys.shape[0] - 1)
-                    matched = (keys[idx] == vals) & d["qualifies"][idx]
+                    if max_probes:
+                        # hash-probe route, traced inline so the open-
+                        # addressing loop fuses into this one XLA computation
+                        idx, found = self._bk._hash_probe_ref(
+                            d["slot_keys"], d["slot_idx"], (vals,),
+                            max_probes)
+                        matched = found & d["qualifies"][idx]
+                    else:
+                        idx = jnp.clip(jnp.searchsorted(keys, vals),
+                                       0, keys.shape[0] - 1)
+                        matched = (keys[idx] == vals) & d["qualifies"][idx]
                     for out_name, dim_col in return_cols.items():
                         payload = d["payload"][dim_col]
                         env[out_name] = jnp.where(
@@ -482,16 +623,27 @@ class _JaxSegmentRunner:
             # table (cached on the table), structurally identical per call,
             # so building the pytree once keeps per-chunk Python cost flat
             dims = []
+            max_probes = []
             for op in self.ops:
                 if op[0] == "lookup":
                     _, dim, _, return_cols, _, _ = op
                     dev = bk._dim_device(dim)
-                    dims.append({
+                    entry = {
                         "keys": dev["keys"],
                         "qualifies": dev["qualifies"],
                         "payload": {dcol: bk._dim_payload(dim, dcol)
                                     for dcol in return_cols.values()},
-                    })
+                    }
+                    if (self._join_impl != "searchsorted"
+                            and len(dim.keys) > 0):
+                        ht = bk._dim_hash(dim)
+                        entry["slot_keys"] = ht["slot_keys"]
+                        entry["slot_idx"] = ht["slot_idx"]
+                        max_probes.append(ht["max_probes"])
+                    else:
+                        max_probes.append(0)   # 0 => legacy searchsorted
+                    dims.append(entry)
+            self._max_probes = max_probes
             self._dims = dims
 
         layout = (bucket, tuple(entries))
@@ -503,6 +655,19 @@ class _JaxSegmentRunner:
         for name in self._written:
             if name in out_cols and name in final_live:
                 cache.add_column(name, out_cols[name][:n])
+        if self.defer_mask:
+            # fused-through-Aggregate: the per-chunk compact (this chunk's
+            # ONLY d2h) is deferred — the keep-mask rides along as a device
+            # sentinel column and Aggregate.finish applies it once to the
+            # merged cache
+            from .base import SEGMENT_KEEP_MASK
+            if keep_mask is not None:
+                cache.add_column(SEGMENT_KEEP_MASK, keep_mask[:n])
+                final_live = final_live | {SEGMENT_KEEP_MASK}
+            if final_live != set(cache.names):
+                cache.keep_columns(
+                    [k for k in cache.names if k in final_live])
+            return
         if keep_mask is not None:
             cache.compact(keep_mask[:n])
         if final_live != set(cache.names):

@@ -19,6 +19,12 @@ class NumpyBackend(Backend):
     name = "numpy"
     batch_align = 1
     oracle_rtol = 1e-9
+    #: host compaction is a free boolean index — nothing to defer, so the
+    #: composed host runner keeps applying the keep-mask eagerly per chunk
+    #: even when the optimizer marked the segment for mask deferral (output
+    #: is byte-identical either way; only transfer counts differ on device
+    #: backends)
+    supports_segment_defer = False
 
     # ------------------------------------------------------------ array ops
     def asarray(self, x) -> np.ndarray:

@@ -21,6 +21,8 @@ Every setting also has a first-class API equivalent (see the README table):
     REPRO_ARENA_MAX_MB   CacheArena(max_bytes=...)
     REPRO_CACHE_GUARD    debug only (split-overlap checks + buffer poisoning)
     REPRO_SEGSUM_IMPL    kernels.segment_sum(impl=...)
+    REPRO_JOIN_IMPL      kernels.hash_join probe route in JaxBackend lookups
+    REPRO_GROUPBY_IMPL   kernels.radix_groupby route in JaxBackend groupbys
     REPRO_OPTEQ_EXAMPLES test harness scale (property-based equivalence)
     REPRO_FLOW_STYLE     etl.queries builders' use_dsl= argument
 """
@@ -44,6 +46,15 @@ ENV_OPTEQ_EXAMPLES = "REPRO_OPTEQ_EXAMPLES"
 #: segment-sum kernel implementation selector ("auto" / "pallas" /
 #: "interpret" / "reference")
 ENV_SEGSUM_IMPL = "REPRO_SEGSUM_IMPL"
+#: Lookup probe route on the jax backend: hash-join kernel impls ("auto" /
+#: "pallas" / "interpret" / "reference") or "searchsorted" (legacy
+#: binary-search probe over the sorted DimTable)
+ENV_JOIN_IMPL = "REPRO_JOIN_IMPL"
+#: groupby route on the jax backend: radix-groupby kernel impls ("auto" /
+#: "pallas" / "interpret" / "reference") or "sort" (legacy lexsort +
+#: segment-sum route; also the automatic fallback for sparse/non-integer
+#: key spaces)
+ENV_GROUPBY_IMPL = "REPRO_GROUPBY_IMPL"
 #: how the SSB query builders construct predicates/expressions:
 #: "dsl" (column-expression AST, exact provenance) or "lambda" (the legacy
 #: callable path, kept for A/B benchmarking)
@@ -52,6 +63,8 @@ ENV_FLOW_STYLE = "REPRO_FLOW_STYLE"
 DEFAULT_ARENA_MAX_MB = 256
 DEFAULT_OPTEQ_EXAMPLES = 100
 FLOW_STYLES = ("dsl", "lambda")
+JOIN_IMPLS = ("auto", "pallas", "interpret", "reference", "searchsorted")
+GROUPBY_IMPLS = ("auto", "pallas", "interpret", "reference", "sort")
 
 
 def _raw(name: str) -> Optional[str]:
@@ -106,6 +119,28 @@ def segsum_impl() -> str:
     return _raw(ENV_SEGSUM_IMPL) or "auto"
 
 
+def join_impl() -> str:
+    """Lookup probe route on the jax backend: a hash-join kernel impl or
+    "searchsorted" for the legacy binary-search probe."""
+    v = _raw(ENV_JOIN_IMPL) or "auto"
+    if v not in JOIN_IMPLS:
+        raise ValueError(
+            f"{ENV_JOIN_IMPL}={v!r} is not a valid join impl; "
+            f"expected one of {JOIN_IMPLS}")
+    return v
+
+
+def groupby_impl() -> str:
+    """Groupby route on the jax backend: a radix-groupby kernel impl or
+    "sort" for the legacy lexsort + segment-sum route."""
+    v = _raw(ENV_GROUPBY_IMPL) or "auto"
+    if v not in GROUPBY_IMPLS:
+        raise ValueError(
+            f"{ENV_GROUPBY_IMPL}={v!r} is not a valid groupby impl; "
+            f"expected one of {GROUPBY_IMPLS}")
+    return v
+
+
 def flow_style() -> str:
     """How the SSB query builders construct predicates/expressions when the
     caller does not pass ``use_dsl=`` explicitly: "dsl" (default) or
@@ -129,5 +164,7 @@ def snapshot() -> Dict[str, object]:
         "cache_guard": cache_guard_enabled(),
         "opteq_examples": opteq_examples(),
         "segsum_impl": segsum_impl(),
+        "join_impl": join_impl(),
+        "groupby_impl": groupby_impl(),
         "flow_style": flow_style(),
     }

@@ -263,16 +263,34 @@ def fuse_segments_flow(flow: Dataflow) -> List[Rewrite]:
     optimize level when enabled (``OptimizeOptions.fuse_segments`` /
     ``REPRO_FUSION=1``).  Refuses across block / semi-block components,
     fan-in/fan-out, explicit ``StageBoundary`` cuts, order-sensitive and
-    chunk-sensitive members (the discovery rules)."""
+    chunk-sensitive members (the discovery rules).
+
+    Chains are discovered THROUGH a terminal ``Aggregate`` consumer
+    (``discover_segments(through_aggregates=True)``): the aggregate never
+    joins the fused kernel, but its presence lets the segment defer its
+    combined keep-mask (``FusedSegment.defer_mask_to``) — deferral-capable
+    backends then skip the per-chunk compact, the mask rides downstream as a
+    device column, and ``Aggregate.finish`` applies it once after the merge.
+    """
     from ..etl.components import FusedSegment   # deferred (layering)
     out: List[Rewrite] = []
-    for chain in discover_segments(flow):
-        comps = [flow.component(n) for n in chain]
+    for chain in discover_segments(flow, through_aggregates=True):
+        tail = flow.component(chain[-1])
+        agg = (tail if getattr(tail, "segment_terminal_aggregate", False)
+               else None)
+        members = chain[:-1] if agg is not None else chain
+        comps = [flow.component(n) for n in members]
         fused = FusedSegment.from_components(comps)
-        flow.collapse_chain(chain, fused)
+        flow.collapse_chain(members, fused)
         out.append(Rewrite("fuse-segment",
-                           f"{'+'.join(chain)} -> {fused.name} "
-                           f"({len(chain)} dispatches -> 1)"))
+                           f"{'+'.join(members)} -> {fused.name} "
+                           f"({len(members)} dispatches -> 1)"))
+        if agg is not None:
+            fused.defer_mask_to(agg)
+            out.append(Rewrite(
+                "fuse-segment-aggregate",
+                f"{fused.name} defers keep-mask to {agg.name} "
+                f"(per-chunk mask sync -> one at finish)"))
     if out:
         flow.validate()
     return out

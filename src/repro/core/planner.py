@@ -47,7 +47,8 @@ def _segment_fusable(comp) -> bool:
             and comp.segment_ops() is not None)
 
 
-def discover_segments(flow: Dataflow) -> List[List[str]]:
+def discover_segments(flow: Dataflow,
+                      through_aggregates: bool = False) -> List[List[str]]:
     """Find every maximal chain of fusable row-synchronized components.
 
     A chain extends across an edge u -> v only when it is a simple chain
@@ -55,7 +56,16 @@ def discover_segments(flow: Dataflow) -> List[List[str]]:
     fusable; fan-in/fan-out, block / semi-block components, sinks, explicit
     ``StageBoundary`` cuts, order-sensitive and chunk-sensitive members all
     terminate (or refuse) a segment.  Only chains of length >= 2 are
-    returned — fusing a single component would only rename it."""
+    returned — fusing a single component would only rename it.
+
+    ``through_aggregates=True`` additionally extends each found chain through
+    its single downstream consumer when that consumer declares
+    ``segment_terminal_aggregate`` (the ``Aggregate`` block component): the
+    aggregate then appears as the chain's LAST member.  It does not join the
+    fused kernel — the optimizer strips it before collapsing — but marks the
+    segment for keep-mask deferral: the per-chunk compact moves into
+    ``Aggregate.finish``, applied once after the merge (the d2h mask sync a
+    device backend would otherwise pay per chunk disappears)."""
     chains: List[List[str]] = []
     seen: set = set()
     for name in flow.topo_order():
@@ -79,8 +89,15 @@ def discover_segments(flow: Dataflow) -> List[List[str]]:
             chain.append(nxt)
             seen.add(nxt)
             cur = nxt
-        if len(chain) >= 2:
-            chains.append(chain)
+        if len(chain) < 2:
+            continue
+        if through_aggregates:
+            succs = flow.succ(cur)
+            if len(succs) == 1 and flow.in_degree(succs[0]) == 1:
+                nxt = flow.component(succs[0])
+                if getattr(nxt, "segment_terminal_aggregate", False):
+                    chain.append(succs[0])
+        chains.append(chain)
     return chains
 
 

@@ -32,7 +32,7 @@ from typing import (Callable, Dict, FrozenSet, Iterator, List, Optional,
 
 import numpy as np
 
-from ..core.backend import AGG_OPS
+from ..core.backend import AGG_OPS, SEGMENT_KEEP_MASK
 from ..core.component import (BlockComponent, Component, ComponentType,
                               SemiBlockComponent, SinkComponent,
                               SourceComponent)
@@ -419,6 +419,12 @@ class FusedSegment(Component):
         self._consumed = consumed
         self.row_preserving = row_pres
         self._compiled: Dict[str, Callable] = {}
+        #: mask deferral (set by the optimizer's fuse-segment-aggregate
+        #: rewrite): columns the terminal Aggregate consumes / its name.
+        #: Backends with ``supports_segment_defer`` then skip the per-chunk
+        #: compact and emit the keep-mask as a SEGMENT_KEEP_MASK column.
+        self.defer_cols: Optional[frozenset] = None
+        self.defer_to: Optional[str] = None
 
     @classmethod
     def from_components(cls, comps: Sequence[Component]) -> "FusedSegment":
@@ -487,9 +493,21 @@ class FusedSegment(Component):
             # project: metadata-only, nothing to upload
         return frozenset(needed)
 
+    def defer_mask_to(self, agg: "Aggregate") -> None:
+        """Mark this segment as fused through its terminal ``Aggregate``:
+        deferral-capable backends keep the chunk uncompacted (device-resident,
+        no per-chunk d2h mask sync) and ``agg.finish`` applies the combined
+        keep-mask once after the merge.  Host backends ignore the marking —
+        their eager compact is free and byte-identical."""
+        self.defer_cols = frozenset(agg.consumed_columns())
+        self.defer_to = agg.name
+        self._compiled.clear()        # runners bake in the deferral mode
+
     def spec(self) -> Dict[str, str]:
         out = super().spec()
         out["members"] = ",".join(self.members)
+        if self.defer_to:
+            out["defer_mask_to"] = self.defer_to
         return out
 
     def _run(self, cache: SharedCache) -> List[SharedCache]:
@@ -586,6 +604,11 @@ class Aggregate(BlockComponent):
     """Group-by aggregation — the paper's canonical block component
     (sum/avg/min/max).  Accumulates all input caches, then reduces."""
 
+    #: segment fusion may extend a row-sync chain through this component:
+    #: the fused segment defers its keep-mask (no per-chunk d2h) and finish()
+    #: applies it once to the merged cache before reducing
+    segment_terminal_aggregate = True
+
     def __init__(self, name: str, group_by: Sequence[ColumnRef],
                  aggs: Dict[str, Tuple[ColumnRef, str]]):
         """``aggs``: out_col -> (in_col, op) with op in sum/avg/min/max/count.
@@ -611,6 +634,14 @@ class Aggregate(BlockComponent):
 
     def finish(self, state: List[SharedCache]) -> SharedCache:
         merged = concat_caches(state, ordered=True, recycle_inputs=True)
+        if SEGMENT_KEEP_MASK in merged.names:
+            # an upstream fused segment deferred its keep-mask: drop the
+            # sentinel and compact the MERGED cache once — on device backends
+            # this is the single d2h mask sync that replaced one per chunk
+            mask = merged.col(SEGMENT_KEEP_MASK)
+            merged.keep_columns(
+                [c for c in merged.names if c != SEGMENT_KEEP_MASK])
+            merged.compact(mask)
         n = merged.n
         if n == 0:
             cols = {g: np.array([], dtype=np.int64) for g in self.group_by}

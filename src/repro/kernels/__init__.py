@@ -3,6 +3,14 @@
 #   segment_sum     — grouped aggregation (the paper's BLOCK component,
 #                     Fig-11 component 9 `groupby_sum`) adapted to the MXU:
 #                     one-hot matmul accumulate instead of a GPU atomic-scatter.
+#   hash_join       — open-addressing hash build (host) + Pallas probe for the
+#                     Lookup component: the device-cached DimTable becomes a
+#                     VMEM-resident hash table, probes return gather indices +
+#                     qualify mask for arbitrary (unsorted, multi-column) keys.
+#   radix_groupby   — radix-partitioned grouped aggregation over dense key
+#                     ids: partitions the id space so the one-hot accumulator
+#                     stays VMEM-bounded at any group count, replacing the
+#                     sort + segment-sum route.
 #   flash_attention — the staggering activity of every transformer cell
 #                     (causal/bidirectional GQA + sliding window), online
 #                     softmax with K/V streamed HBM->VMEM block by block.

@@ -1,0 +1,107 @@
+"""Pallas TPU kernel: open-addressing hash probe (the Lookup join).
+
+The paper's Lookup component is a key -> row-index join against a cached
+dimension table.  The legacy device route is a jitted ``searchsorted``
+(O(log d) per probe, keys must be pre-sorted); this kernel probes an
+open-addressing table built once on the host (``ref.hash_build``) —
+arbitrary key order, multi-column keys, O(1 + cluster) gathers per probe.
+
+ADAPTATION (DESIGN §4): TPUs have no per-lane scatter/gather memory unit,
+but the probe table is small (2*d slots, int32) and lives fully in VMEM as
+a broadcast block; the probe loop is a ``fori_loop`` of vectorized
+``jnp.take`` gathers (one per probe distance, bounded by the build's static
+``max_probes`` = longest occupied run + 1).  Rows resolve independently —
+a done-mask freezes resolved lanes, so the loop cost is the WORST lane's
+cluster, which the <=0.5 load factor keeps short.
+
+VMEM working set per step:
+    table: (1 + n_keys) * T * 4 bytes     (slot_idx + per-column slot keys)
+  + rows_tile * n_keys * 4                (probe values tile)
+With T = 2^17 (64k-row dimension) and 2 key columns: ~1.6 MB << 16 MB.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import hash_keys
+
+
+def _hash_probe_kernel(*refs, n_keys: int, table_size: int, max_probes: int):
+    val_refs = refs[:n_keys]
+    key_refs = refs[n_keys:2 * n_keys]
+    idx_ref = refs[2 * n_keys]
+    out_idx_ref = refs[2 * n_keys + 1]
+    out_found_ref = refs[2 * n_keys + 2]
+
+    vals = [r[...][:, 0] for r in val_refs]               # [R] each
+    slot_keys = [r[...][:, 0] for r in key_refs]          # [T] each
+    slot_idx = idx_ref[...][:, 0]                         # [T]
+    n = vals[0].shape[0]
+    h = hash_keys(vals)
+
+    def body(step, carry):
+        idx, found, done = carry
+        cand = ((h + jnp.uint32(step))
+                & jnp.uint32(table_size - 1)).astype(jnp.int32)
+        occ = jnp.take(slot_idx, cand, mode="clip")
+        eq = jnp.ones(n, dtype=bool)
+        for sk, v in zip(slot_keys, vals):
+            eq = eq & (jnp.take(sk, cand, mode="clip") == v)
+        hit = (~done) & (occ >= 0) & eq
+        miss = (~done) & (occ < 0)
+        idx = jnp.where(hit, occ, idx)
+        return idx, found | hit, done | hit | miss
+
+    idx = jnp.zeros(n, dtype=jnp.int32)
+    found = jnp.zeros(n, dtype=bool)
+    done = jnp.zeros(n, dtype=bool)
+    idx, found, _ = jax.lax.fori_loop(0, max_probes, body, (idx, found, done))
+    out_idx_ref[...] = idx[:, None]
+    out_found_ref[...] = found[:, None].astype(jnp.int32)
+
+
+def hash_probe_pallas(slot_keys: Sequence[jax.Array], slot_idx: jax.Array,
+                      val_cols: Sequence[jax.Array], max_probes: int,
+                      rows_tile: int = 512, interpret: bool = False
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """slot_keys: per-key-column [T] arrays; slot_idx: [T] int32 (-1 empty);
+    val_cols: per-key-column [N] probe values.  Returns ``(idx int32 [N],
+    found bool [N])`` — first-occurrence row index, 0 for misses."""
+    n_keys = len(val_cols)
+    N = val_cols[0].shape[0]
+    T = int(slot_idx.shape[0])
+    n_tiles = max(1, -(-N // rows_tile))
+    pad = n_tiles * rows_tile - N
+    vals2d = []
+    for v in val_cols:
+        if pad:
+            v = jnp.pad(v, ((0, pad),))
+        vals2d.append(v[:, None])
+    keys2d = [k[:, None] for k in slot_keys]
+    idx2d = slot_idx.astype(jnp.int32)[:, None]
+
+    kernel = functools.partial(_hash_probe_kernel, n_keys=n_keys,
+                               table_size=T, max_probes=int(max_probes))
+    idx, found = pl.pallas_call(
+        kernel,
+        grid=(n_tiles,),
+        in_specs=(
+            [pl.BlockSpec((rows_tile, 1), lambda t: (t, 0))] * n_keys
+            + [pl.BlockSpec((T, 1), lambda t: (0, 0))] * (n_keys + 1)
+        ),
+        out_specs=[
+            pl.BlockSpec((rows_tile, 1), lambda t: (t, 0)),
+            pl.BlockSpec((rows_tile, 1), lambda t: (t, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_tiles * rows_tile, 1), jnp.int32),
+            jax.ShapeDtypeStruct((n_tiles * rows_tile, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(*vals2d, *keys2d, idx2d)
+    return idx[:N, 0], found[:N, 0].astype(bool)

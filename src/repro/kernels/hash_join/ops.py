@@ -1,0 +1,39 @@
+"""Public hash-probe op: jit'd wrapper choosing the Pallas kernel (TPU) or
+interpret=True (CPU validation) with the pure-jnp oracle as fallback.  The
+table comes from the host-side ``hash_build`` (build once per dimension
+table, probe per chunk)."""
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple
+
+import jax
+
+from .kernel import hash_probe_pallas
+from .ref import hash_probe_ref
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("max_probes", "impl", "rows_tile"))
+def hash_probe(slot_keys: Sequence[jax.Array], slot_idx: jax.Array,
+               val_cols: Sequence[jax.Array], max_probes: int,
+               impl: str = "auto", rows_tile: int = 512
+               ) -> Tuple[jax.Array, jax.Array]:
+    """Probe an open-addressing hash table: returns ``(idx, found)`` where
+    ``idx[i]`` is the build's first-occurrence row index of ``val_cols[i]``
+    (0 when not found) and ``found[i]`` marks presence.
+
+    impl: 'pallas' (TPU), 'interpret' (Pallas body on CPU), 'reference'
+    (pure jnp), 'auto' (pallas on TPU else reference).
+    """
+    slot_keys = tuple(slot_keys)
+    val_cols = tuple(val_cols)
+    if impl == "auto":
+        impl = ("pallas" if jax.default_backend() == "tpu" else "reference")
+    if impl == "pallas":
+        return hash_probe_pallas(slot_keys, slot_idx, val_cols, max_probes,
+                                 rows_tile=rows_tile)
+    if impl == "interpret":
+        return hash_probe_pallas(slot_keys, slot_idx, val_cols, max_probes,
+                                 rows_tile=rows_tile, interpret=True)
+    return hash_probe_ref(slot_keys, slot_idx, val_cols, max_probes)

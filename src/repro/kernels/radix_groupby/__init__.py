@@ -1,0 +1,4 @@
+from .ops import radix_groupby
+from .ref import radix_groupby_ref
+
+__all__ = ["radix_groupby", "radix_groupby_ref"]

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the radix-partitioned groupby (the allclose
+reference): grouped float32 sums + occupancy counts over dense group ids."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def radix_groupby_ref(ids: jax.Array, values: jax.Array, n_groups: int
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """ids: [N] int (-1 = padding); values: [N, C] (C may be 0).
+    Returns ``(sums [n_groups, C] float32, counts [n_groups] float32)`` —
+    counts are float32 row tallies (exact below 2^24 rows per group), the
+    accumulator dtype of the MXU one-hot matmul route."""
+    valid = ids >= 0
+    safe = jnp.where(valid, ids, 0)
+    vals = jnp.where(valid[:, None], values.astype(jnp.float32), 0.0)
+    ext = jnp.concatenate([vals, valid.astype(jnp.float32)[:, None]], axis=1)
+    out = jax.ops.segment_sum(ext, safe, num_segments=n_groups)
+    return out[:, :-1], out[:, -1]

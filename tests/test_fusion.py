@@ -110,6 +110,59 @@ def test_discover_refuses_fan_out():
     assert discover_segments(flow) == []
 
 
+def test_discover_through_terminal_aggregate():
+    """``through_aggregates=True`` extends a chain through the single
+    Aggregate that consumes it — the planner's marker for keep-mask
+    deferral.  Default discovery is unchanged."""
+    qf = BUILDERS["Q4.1"](_data())
+    segs = discover_segments(qf.flow, through_aggregates=True)
+    assert segs == [["lookup_customer", "lookup_supplier", "lookup_part",
+                     "lookup_date", "filter_unmatched", "project",
+                     "profit_expr", "groupby_sum"]]
+    # the appended tail really is the Aggregate, not a fusable member
+    agg = qf.flow.component("groupby_sum")
+    assert getattr(agg, "segment_terminal_aggregate", False)
+
+
+def test_discover_through_aggregate_requires_direct_single_edge():
+    """No extension when something sits between the chain and the
+    Aggregate, or when the Aggregate has fan-in."""
+    agg = Aggregate("agg", ["k"], {"s": ("v", "sum")})
+    flow = _chain_flow(_src(), _expr("e1", "a"), _expr("e2", "b"), agg,
+                       CollectSink("sink"))
+    assert discover_segments(flow, through_aggregates=True) == [
+        ["e1", "e2", "agg"]]
+
+    # fan-in: a second producer also feeds the Aggregate
+    flow2 = Dataflow("fanin")
+    src, e1, e2 = _src(), _expr("e1", "a"), _expr("e2", "b")
+    agg2 = Aggregate("agg", ["k"], {"s": ("v", "sum")})
+    side = _src(50, seed=3)
+    side.name = "side"
+    flow2.chain(src, e1, e2, agg2, CollectSink("sink"))
+    flow2.add(side)
+    flow2.connect(side, agg2)
+    assert discover_segments(flow2, through_aggregates=True) == [
+        ["e1", "e2"]]
+
+
+def test_fuse_segments_flow_defers_mask_to_aggregate():
+    """The fuse-segment-aggregate rewrite: the Aggregate stays a separate
+    vertex, the FusedSegment carries the deferral metadata."""
+    agg = Aggregate("agg", ["k"], {"s": ("v", "sum")})
+    flow = _chain_flow(_src(), _expr("e1", "a"), _filt("f1"), agg,
+                       CollectSink("sink"))
+    rewrites = fuse_segments_flow(flow)
+    assert [r.rule for r in rewrites] == ["fuse-segment",
+                                          "fuse-segment-aggregate"]
+    fused = flow.component("fusedseg(e1+f1)")
+    assert fused.defer_to == "agg"
+    assert fused.defer_cols == agg.consumed_columns()
+    assert "defer_mask_to" in fused.spec()
+    assert "agg" in set(flow.vertices)     # aggregate NOT collapsed
+    partition(flow)
+
+
 def test_fused_segment_provenance_and_spec():
     lk = Lookup("lk", DimTable(np.arange(1, 5, dtype=np.int64),
                                {"p": np.arange(4, dtype=np.int64)}),
@@ -168,11 +221,16 @@ def test_fused_engine_byte_identical(qname):
         assert fused[k].dtype == static[k].dtype
         np.testing.assert_array_equal(fused[k], static[k], err_msg=k)
     assert any(x["rule"] == "fuse-segment" for x in r_f.rewrites)
+    # both SSB Q4 flows end their row-sync chain in groupby_sum: the
+    # keep-mask deferral rewrite must fire alongside plain fusion
+    assert any(x["rule"] == "fuse-segment-aggregate" for x in r_f.rewrites)
     # the headline: the whole row-sync chain dispatches once per chunk
     assert r_f.dispatch_calls < r_s.dispatch_calls
     if get_default_backend().name == "jax":
         assert r_f.h2d_transfers < r_s.h2d_transfers
-        assert r_f.d2h_transfers <= r_s.d2h_transfers
+        # deferral removes the per-chunk keep-mask sync: one compact at
+        # Aggregate.finish replaces num_splits per-chunk compacts
+        assert r_s.d2h_transfers - r_f.d2h_transfers >= 4 - 1
 
 
 def test_fusion_env_var_and_metadata_run_record(monkeypatch):

@@ -6,7 +6,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_attention import flash_attention, flash_attention_ref
+from repro.kernels.hash_join import (hash_build, hash_keys, hash_keys_np,
+                                     hash_probe, hash_probe_ref)
 from repro.kernels.mamba_scan import mamba_scan, mamba_scan_ref
+from repro.kernels.radix_groupby import radix_groupby, radix_groupby_ref
 from repro.kernels.segment_sum import segment_sum, segment_sum_ref
 
 RNG = np.random.default_rng(1234)
@@ -44,6 +47,167 @@ def test_segment_sum_matches_paper_groupby(ssb_tiny):
     expect = np.zeros(7)
     np.add.at(expect, year, profit)
     np.testing.assert_allclose(np.array(got)[:, 0], expect, rtol=1e-5)
+
+
+# ----------------------------------------------------------------- hash join
+def _probe_oracle(key_rows, probe_rows):
+    """First-occurrence membership oracle: (index, found) per probe row."""
+    lut = {}
+    for i, row in enumerate(map(tuple, key_rows)):
+        lut.setdefault(row, i)
+    found = np.array([tuple(r) in lut for r in probe_rows])
+    idx = np.array([lut.get(tuple(r), 0) for r in probe_rows], np.int64)
+    return idx, found
+
+
+def _probe(built, cols, impl, **kw):
+    return hash_probe(tuple(jnp.asarray(k) for k in built["slot_keys"]),
+                      jnp.asarray(built["slot_idx"]),
+                      tuple(jnp.asarray(c) for c in cols),
+                      built["max_probes"], impl=impl, **kw)
+
+
+def test_hash_keys_host_device_identical():
+    """The host (build-time) and traced (probe-time) hash must agree bit for
+    bit — open addressing falls apart on any mismatch."""
+    for dt in (np.int64, np.int32, np.uint32, np.int16):
+        k1 = RNG.integers(0, np.iinfo(dt).max, 500).astype(dt)
+        k2 = RNG.integers(0, 100, 500).astype(dt)
+        h_np = hash_keys_np((k1, k2))
+        h_j = hash_keys((jnp.asarray(k1), jnp.asarray(k2)))
+        np.testing.assert_array_equal(h_np, np.asarray(h_j))
+
+
+@pytest.mark.parametrize("d,n,key_range,tile", [
+    (1, 16, 50, 512),            # tiny table (min size floor)
+    (500, 2_000, 3_000, 512),    # ~17% hit rate, misses exercised
+    (1000, 1_500, 1_000, 256),   # dense: most probes hit
+    (997, 777, 100_000, 128),    # sparse keys, ragged row tile
+])
+def test_hash_probe_sweep(d, n, key_range, tile):
+    keys = np.sort(RNG.choice(key_range, size=min(d, key_range),
+                              replace=False)).astype(np.int64)
+    built = hash_build((keys,))
+    probes = RNG.integers(0, key_range + 10, n).astype(np.int64)
+    oi, of = _probe_oracle(keys[:, None], probes[:, None])
+    for impl in ("reference", "interpret"):
+        idx, found = _probe(built, (probes,), impl, rows_tile=tile)
+        idx, found = np.asarray(idx), np.asarray(found)
+        np.testing.assert_array_equal(found, of)
+        np.testing.assert_array_equal(idx[of], oi[of])
+
+
+def test_hash_probe_arbitrary_key_order():
+    """Unlike searchsorted, the hash table needs NO key ordering: a shuffled
+    build probes identically (modulo the first-occurrence index mapping)."""
+    keys = RNG.choice(10_000, size=800, replace=False).astype(np.int64)
+    shuffled = keys.copy()
+    RNG.shuffle(shuffled)
+    built = hash_build((shuffled,))
+    probes = RNG.integers(0, 11_000, 2_500).astype(np.int64)
+    oi, of = _probe_oracle(shuffled[:, None], probes[:, None])
+    idx, found = _probe(built, (probes,), "reference")
+    np.testing.assert_array_equal(np.asarray(found), of)
+    np.testing.assert_array_equal(np.asarray(idx)[of], oi[of])
+
+
+def test_hash_probe_duplicate_keys_keep_first():
+    """Duplicate build keys: probes must land on the FIRST occurrence —
+    over sorted keys that is exactly searchsorted's leftmost index, the
+    byte-compat contract with the legacy DimTable probe."""
+    base = np.sort(RNG.choice(500, size=200, replace=False))
+    keys = np.sort(np.concatenate([base, base[:50], base[:25]]))
+    built = hash_build((keys.astype(np.int64),))
+    probes = np.arange(-5, 520).astype(np.int64)
+    ss = np.clip(np.searchsorted(keys, probes), 0, len(keys) - 1)
+    hit = keys[ss] == probes
+    idx, found = _probe(built, (probes,), "reference")
+    np.testing.assert_array_equal(np.asarray(found), hit)
+    np.testing.assert_array_equal(np.asarray(idx)[hit], ss[hit])
+
+
+@pytest.mark.parametrize("impl", ["reference", "interpret"])
+def test_hash_probe_multi_column(impl):
+    rows = np.unique(RNG.integers(0, 40, size=(600, 3)), axis=0)
+    built = hash_build(tuple(rows[:, j].astype(np.int64) for j in range(3)))
+    probes = RNG.integers(0, 45, size=(2_000, 3)).astype(np.int64)
+    oi, of = _probe_oracle(rows, probes)
+    idx, found = _probe(built, tuple(probes[:, j] for j in range(3)), impl)
+    idx, found = np.asarray(idx), np.asarray(found)
+    np.testing.assert_array_equal(found, of)
+    np.testing.assert_array_equal(idx[of], oi[of])
+
+
+def test_hash_probe_all_miss_and_empty_probe():
+    keys = np.arange(100, dtype=np.int64) * 7
+    built = hash_build((keys,))
+    probes = (np.arange(50, dtype=np.int64) * 7) + 3   # never in table
+    idx, found = _probe(built, (probes,), "reference")
+    assert not np.asarray(found).any()
+    idx, found = _probe(built, (np.zeros(0, np.int64),), "reference")
+    assert np.asarray(idx).shape == (0,) and np.asarray(found).shape == (0,)
+
+
+def test_hash_probe_ref_traceable():
+    """hash_probe_ref must trace under jit with max_probes static — the
+    fused segment kernel inlines it."""
+    keys = np.sort(RNG.choice(1_000, 300, replace=False)).astype(np.int64)
+    built = hash_build((keys,))
+    sk = tuple(jnp.asarray(k) for k in built["slot_keys"])
+    si = jnp.asarray(built["slot_idx"])
+    probes = RNG.integers(0, 1_100, 800).astype(np.int64)
+
+    @jax.jit
+    def f(p):
+        return hash_probe_ref(sk, si, (p,), built["max_probes"])
+
+    idx, found = f(jnp.asarray(probes))
+    oi, of = _probe_oracle(keys[:, None], probes[:, None])
+    np.testing.assert_array_equal(np.asarray(found), of)
+    np.testing.assert_array_equal(np.asarray(idx)[of], oi[of])
+
+
+# -------------------------------------------------------------- radix groupby
+@pytest.mark.parametrize("n,c,g,part,tile", [
+    (100, 1, 8, 256, 128),
+    (4_000, 3, 300, 64, 512),     # multiple partitions
+    (2_048, 2, 1_000, 256, 256),  # sparse occupancy
+    (513, 0, 16, 256, 512),       # counts only (C=0)
+    (7, 2, 700, 128, 512),        # more groups than rows
+])
+def test_radix_groupby_sweep(n, c, g, part, tile):
+    ids = RNG.integers(-1, g, n).astype(np.int32)     # -1 = padding rows
+    vals = RNG.normal(size=(n, c)).astype(np.float32)
+    s_ref, c_ref = radix_groupby_ref(jnp.asarray(ids), jnp.asarray(vals), g)
+    s_got, c_got = radix_groupby(jnp.asarray(ids), jnp.asarray(vals), g,
+                                 impl="interpret", part_groups=part,
+                                 rows_tile=tile)
+    np.testing.assert_allclose(np.asarray(s_got), np.asarray(s_ref),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(c_got), np.asarray(c_ref))
+
+
+def test_radix_groupby_matches_numpy():
+    ids = RNG.integers(0, 97, 5_000).astype(np.int32)
+    vals = RNG.normal(size=(5_000, 2)).astype(np.float32)
+    sums, counts = radix_groupby(jnp.asarray(ids), jnp.asarray(vals), 97,
+                                 impl="interpret")
+    expect_c = np.bincount(ids, minlength=97)
+    np.testing.assert_array_equal(np.asarray(counts), expect_c)
+    for j in range(2):
+        expect_s = np.zeros(97)
+        np.add.at(expect_s, ids, vals[:, j])
+        np.testing.assert_allclose(np.asarray(sums)[:, j], expect_s,
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_radix_groupby_all_padding():
+    ids = np.full(300, -1, np.int32)
+    vals = RNG.normal(size=(300, 2)).astype(np.float32)
+    sums, counts = radix_groupby(jnp.asarray(ids), jnp.asarray(vals), 32,
+                                 impl="interpret")
+    np.testing.assert_array_equal(np.asarray(sums), np.zeros((32, 2)))
+    np.testing.assert_array_equal(np.asarray(counts), np.zeros(32))
 
 
 # --------------------------------------------------------- flash attention

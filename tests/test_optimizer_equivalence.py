@@ -348,6 +348,78 @@ def test_dsl_vs_lambda_ssb_byte_identical(qname, ssb_dsl_data):
                     err_msg=f"{label}: column {k} differs (DSL vs lambda)")
 
 
+# ---------------------------------------------------------------------------
+#  kernel impl routes: the hash-join probe and the dense radix groupby must
+#  be byte-identical to the legacy searchsorted/sort routes AND to the
+#  numpy-backend oracle, across the same property harness
+# ---------------------------------------------------------------------------
+def _run_with_impls(spec, backend, join_impl, groupby_impl, fuse=False):
+    import os
+    _, num_splits, _ = spec
+    saved = {k: os.environ.get(k)
+             for k in (config.ENV_JOIN_IMPL, config.ENV_GROUPBY_IMPL)}
+    os.environ[config.ENV_JOIN_IMPL] = join_impl
+    os.environ[config.ENV_GROUPBY_IMPL] = groupby_impl
+    try:
+        flow, sink = build_flow(spec)
+        StreamingEngine(flow, OptimizeOptions(
+            num_splits=num_splits, backend=backend,
+            fuse_segments=fuse)).run()
+        return sink.result()
+    finally:
+        for k, v in saved.items():
+            if v is None:
+                os.environ.pop(k, None)
+            else:
+                os.environ[k] = v
+
+
+def _assert_tables_equal(got, oracle, label, check_dtype=True):
+    """check_dtype=False for cross-backend comparisons: jax computes narrow
+    ints where numpy keeps int64 (a backend property, not a route property)
+    — there the oracle is the VALUES, not the width."""
+    assert set(got) == set(oracle), f"{label}: column sets differ"
+    for k in oracle:
+        if check_dtype:
+            assert got[k].dtype == oracle[k].dtype, f"{label}: dtype of {k}"
+        np.testing.assert_array_equal(got[k], oracle[k],
+                                      err_msg=f"{label}: column {k}")
+
+
+@given(flow_spec())
+@settings(max_examples=max(N_EXAMPLES // 4, 10), deadline=None)
+def test_kernel_impl_routes_byte_identical(spec):
+    """For every generated DAG: the jax backend under the hash-probe +
+    dense-groupby routes produces byte-identical sinks to the legacy
+    searchsorted + sort routes and to the numpy-backend oracle."""
+    if "jax" not in _dsl_backends():      # pragma: no cover
+        pytest.skip("jax backend unavailable")
+    oracle = _run_with_impls(spec, "numpy", "searchsorted", "sort")
+    legacy = _run_with_impls(spec, "jax", "searchsorted", "sort")
+    kernel = _run_with_impls(spec, "jax", "reference", "reference")
+    # within-backend: new routes vs legacy routes, dtypes strict
+    _assert_tables_equal(kernel, legacy, f"kernel-vs-legacy (spec={spec})")
+    # cross-backend: values vs the numpy oracle (int widths differ by design)
+    _assert_tables_equal(kernel, oracle, f"kernel-vs-oracle (spec={spec})",
+                         check_dtype=False)
+
+
+def test_kernel_impl_interpret_route_fused():
+    """The Pallas kernel BODIES (interpret mode) behind the same flows, with
+    segment fusion on — the fused runner inlines the hash probe, the
+    Aggregate rides the dense groupby."""
+    if "jax" not in _dsl_backends():      # pragma: no cover
+        pytest.skip("jax backend unavailable")
+    spec = (7, 4, [("lookup", 3, 0, True),
+                   ("expr", 3, 4, False),
+                   ("filter", 4, 30, True),
+                   ("agg", 2, 5, "sum"),
+                   ("sort", 0)])
+    legacy = _run_with_impls(spec, "jax", "searchsorted", "sort")
+    got = _run_with_impls(spec, "jax", "interpret", "interpret", fuse=True)
+    _assert_tables_equal(got, legacy, "interpret-routes+fusion")
+
+
 def test_dsl_flows_report_no_undeclared_refusals(ssb_dsl_data):
     """On DSL-built SSB flows the cost-based optimizer never refuses a
     rewrite for an undeclared read/write set (provenance is derived from
