@@ -31,6 +31,10 @@ Field classes (see benchmarks/README.md for the schema):
 Missing/extra sections are errors: a section silently dropping out of the
 bench is exactly the regression a green CI must not hide.
 
+A failing diff prints ONE summary table of every gated field (fresh vs
+baseline, field class, ok/REGRESS) before the per-problem lines and the
+non-zero exit — all counter deltas are visible from a single red CI log.
+
 ``--update`` rewrites the baselines from the fresh files instead of
 diffing — run locally after an INTENDED perf-behaviour change and commit
 the result.
@@ -122,6 +126,63 @@ def diff_payload(fresh: dict, base: dict) -> List[str]:
     return problems
 
 
+def summary_rows(fresh: dict, base: dict) -> List[tuple]:
+    """EVERY gated field as ``(path, class, fresh, baseline, status)`` —
+    the full-context table printed with a failing diff, so one red CI run
+    shows all counter deltas at once instead of only the first problems."""
+    rows: List[tuple] = []
+
+    def add(path, klass, fv, bv, ok):
+        rows.append((path, klass, fv, bv, "ok" if ok else "REGRESS"))
+
+    for k in EXACT_META:
+        add(k, "exact", fresh.get(k), base.get(k),
+            fresh.get(k) == base.get(k))
+    fs, bs = fresh.get("sections", {}), base.get("sections", {})
+    for name in sorted(set(fs) | set(bs)):
+        f_sec, b_sec = fs.get(name), bs.get(name)
+        if f_sec is None or b_sec is None:
+            add(name, "sect", "present" if f_sec else "MISSING",
+                "present" if b_sec else "MISSING", False)
+            continue
+        add(f"{name}.status", "exact", f_sec.get("status"),
+            b_sec.get("status"), f_sec.get("status") == b_sec.get("status"))
+        f_cs = f_sec.get("cache_stats", {})
+        b_cs = b_sec.get("cache_stats", {})
+        for field in EXACT_STATS:
+            add(f"{name}.{field}", "exact", f_cs.get(field),
+                b_cs.get(field), f_cs.get(field) == b_cs.get(field))
+        for field in ARENA_STATS:
+            fv, bv = f_cs.get(field, 0), b_cs.get(field, 0)
+            add(f"{name}.{field}", "band", fv, bv,
+                _within(fv, bv, ARENA_RTOL, ARENA_ATOL))
+        fw, bw = f_sec.get("wall_s", 0.0), b_sec.get("wall_s", 0.0)
+        add(f"{name}.wall_s", "band", fw, bw, _within(fw, bw, WALL_RTOL))
+
+        def walk(fv, bv, path):
+            if isinstance(fv, dict) or isinstance(bv, dict):
+                fd = fv if isinstance(fv, dict) else {}
+                bd = bv if isinstance(bv, dict) else {}
+                for k in sorted(set(fd) | set(bd)):
+                    walk(fd.get(k), bd.get(k), f"{path}.{k}")
+            else:
+                add(path, "exact", fv, bv, fv == bv)
+        if "counters" in f_sec or "counters" in b_sec:
+            walk(f_sec.get("counters", {}), b_sec.get("counters", {}),
+                 f"{name}.counters")
+    return rows
+
+
+def render_summary(rows: List[tuple]) -> List[str]:
+    w = max(len(r[0]) for r in rows) if rows else 5
+    lines = [f"  {'field'.ljust(w)}  {'class':5}  "
+             f"{'fresh':>14}  {'baseline':>14}  status"]
+    for path, klass, fv, bv, status in rows:
+        lines.append(f"  {path.ljust(w)}  {klass:5}  "
+                     f"{str(fv):>14}  {str(bv):>14}  {status}")
+    return lines
+
+
 def _baseline_path(tag: str) -> str:
     return os.path.join(BASELINE_DIR, f"BENCH_{tag}.json")
 
@@ -156,6 +217,10 @@ def main(argv: List[str] = None) -> int:
         if problems:
             print(f"bench_diff: {path} vs {bpath}: "
                   f"{len(problems)} regression(s)")
+            # the full comparison table FIRST — every gated field with its
+            # fresh/baseline values — then the individual regression lines
+            for line in render_summary(summary_rows(fresh, base)):
+                print(line)
             for p in problems:
                 print(f"  REGRESSION {p}")
             rc = 1

@@ -77,6 +77,7 @@ def write_bench_json(sections: dict, mode: str, path: str = None) -> str:
     "cache_stats", ...}; top-level metadata records the backend and scale so
     trajectories across PRs compare like with like."""
     from repro.core import config, get_default_backend
+    from repro.obs import trace as obs_trace
 
     from .common import BENCH_REPEATS, BENCH_ROWS
     tag = bench_tag()                 # one derivation: file name == payload
@@ -90,6 +91,12 @@ def write_bench_json(sections: dict, mode: str, path: str = None) -> str:
         "bench_rows": BENCH_ROWS,
         "bench_repeats": BENCH_REPEATS,
         "created_unix": time.time(),
+        # run identity — joins this payload to metadata-store records and
+        # REPRO_TRACE artifacts from the same invocation (top-level only:
+        # bench_diff gates the per-section records, not these)
+        "run_id": obs_trace.new_run_id(),
+        "created_iso": obs_trace.iso_now(),
+        "git_sha": obs_trace.git_sha(),
         "sections": sections,
     }
     path = path or f"BENCH_{tag}.json"

@@ -1,0 +1,108 @@
+"""Tracing-overhead gate: assert the ``REPRO_TRACE=1`` instrumented path
+stays within ``TRACE_OVERHEAD_RTOL`` (default 10%) of the untraced wall on
+Q4.1, and that a traced run's metric counters reconcile EXACTLY with its
+``EngineRun`` cache statistics.
+
+    PYTHONPATH=src python -m benchmarks.trace_overhead
+
+Interleaves best-of-N wall measurements (off, on, off, on, ...) so machine
+drift hits both sides equally, writes the trace artifact to
+``TRACE_<tag>.json`` (uploaded by the CI smoke legs, loadable in
+ui.perfetto.dev) and exits non-zero on an overhead or reconciliation
+failure.  Scale via env: TRACE_ROWS (default 200,000), TRACE_REPEATS
+(default 5), TRACE_OVERHEAD_RTOL (default 0.10).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+ROWS = int(os.environ.get("TRACE_ROWS", "200000"))
+REPEATS = int(os.environ.get("TRACE_REPEATS", "5"))
+RTOL = float(os.environ.get("TRACE_OVERHEAD_RTOL", "0.10"))
+
+#: metric counter -> EngineRun field pairs that must agree exactly
+RECONCILE = ("copies", "bytes_copied", "h2d_transfers", "h2d_bytes",
+             "d2h_transfers", "d2h_bytes", "dispatch_calls",
+             "arena_hits", "arena_misses", "arena_bytes_reused")
+
+
+def _run_once(data, traced: bool):
+    from repro.core import OptimizeOptions, StreamingEngine, config
+    from repro.etl import BUILDERS
+    if traced:
+        os.environ[config.ENV_TRACE] = "1"
+    else:
+        os.environ.pop(config.ENV_TRACE, None)
+    qf = BUILDERS["Q4.1"](data)
+    return StreamingEngine(qf.flow, OptimizeOptions(num_splits=4)).run()
+
+
+def main() -> int:
+    from repro.core import config
+    from repro.etl.ssb import generate
+
+    tag = os.environ.get("BENCH_TAG", "").strip() or "local"
+    trace_path = os.environ.get(config.ENV_TRACE_PATH) or f"TRACE_{tag}.json"
+    os.environ[config.ENV_TRACE_PATH] = trace_path
+    prior_trace = os.environ.get(config.ENV_TRACE)
+
+    data = generate(lineorder_rows=ROWS, customers=2_000, suppliers=200,
+                    parts=1_000, seed=5)
+    _run_once(data, traced=False)           # warm caches/JIT off the clock
+
+    walls = {False: [], True: []}
+    last_traced = None
+    try:
+        for _ in range(REPEATS):
+            for traced in (False, True):    # interleaved: drift hits both
+                r = _run_once(data, traced)
+                walls[traced].append(r.wall_time)
+                if traced:
+                    last_traced = r
+    finally:
+        if prior_trace is None:
+            os.environ.pop(config.ENV_TRACE, None)
+        else:
+            os.environ[config.ENV_TRACE] = prior_trace
+
+    off, on = min(walls[False]), min(walls[True])
+    ratio = on / off if off else float("inf")
+    print(f"trace_overhead,rows={ROWS},off_s={off:.4f},on_s={on:.4f},"
+          f"ratio={ratio:.3f},limit={1 + RTOL:.2f}")
+
+    failures = 0
+    if ratio > 1.0 + RTOL:
+        print(f"trace_overhead,FAIL,traced wall {on:.4f}s exceeds "
+              f"{1 + RTOL:.2f}x untraced {off:.4f}s")
+        failures += 1
+
+    # exact reconciliation: tracer counters == the same run's CacheStats
+    counters = last_traced.metrics.get("counters", {})
+    for field in RECONCILE:
+        got, want = counters.get(field, 0), getattr(last_traced, field)
+        ok = got == want
+        print(f"trace_reconcile,{field},{got},{want},"
+              f"{'ok' if ok else 'FAIL'}")
+        failures += 0 if ok else 1
+
+    if last_traced.trace_file:
+        with open(last_traced.trace_file) as f:
+            payload = json.load(f)
+        n_events = len(payload.get("traceEvents", []))
+        print(f"trace_artifact,{last_traced.trace_file},events={n_events}")
+        if not n_events:
+            print("trace_artifact,FAIL,empty traceEvents")
+            failures += 1
+    else:
+        print("trace_artifact,FAIL,no trace file exported")
+        failures += 1
+
+    print(f"trace_overhead,{'FAIL' if failures else 'PASS'},"
+          f"{failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -33,11 +33,13 @@ width so planner channel sizing matches what actually crosses an edge.
 from __future__ import annotations
 
 import threading
+import time
 import weakref
 from typing import Callable, Dict, List, Mapping, Sequence, Tuple
 
 import numpy as np
 
+from ...obs import trace as obs_trace
 from .. import config
 from ..expr import ColumnsView, Expr
 from ..shared_cache import GLOBAL_ARENA, is_host_column, record_transfer
@@ -153,8 +155,10 @@ class JaxBackend(Backend):
             # the next borrower's bytes.  Forcing the copy restores the
             # ownership boundary the h2d accounting already models (real
             # accelerators copy on transfer regardless).
+            t0 = time.perf_counter() if obs_trace.ACTIVE.get() else 0.0
             out = self._jnp.array(x, copy=True)
-            record_transfer("h2d", x.nbytes)
+            record_transfer("h2d", x.nbytes,
+                            seconds=(time.perf_counter() - t0) if t0 else 0.0)
             return out
         if isinstance(x, self._jax.Array):
             return x
@@ -163,8 +167,10 @@ class JaxBackend(Backend):
     def to_host(self, x) -> np.ndarray:
         if isinstance(x, np.ndarray):
             return x
+        t0 = time.perf_counter() if obs_trace.ACTIVE.get() else 0.0
         out = np.asarray(x)
-        record_transfer("d2h", out.nbytes)
+        record_transfer("d2h", out.nbytes,
+                        seconds=(time.perf_counter() - t0) if t0 else 0.0)
         return out
 
     def concat(self, parts: Sequence):
@@ -611,9 +617,11 @@ class _JaxSegmentRunner:
                 dst[n:] = 0
             # copy=True + block: the device buffer must not alias the
             # staging memory, which goes straight back to the arena
+            t0 = time.perf_counter() if obs_trace.ACTIVE.get() else 0.0
             packed = jnp.array(staging, copy=True)
-            record_transfer("h2d", total)
             packed.block_until_ready()
+            record_transfer("h2d", total,
+                            seconds=(time.perf_counter() - t0) if t0 else 0.0)
             GLOBAL_ARENA.release(root)
         else:
             packed = jnp.zeros((0,), np.uint8)

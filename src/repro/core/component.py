@@ -18,6 +18,7 @@ from typing import Callable, Dict, Iterable, Iterator, List, Optional, Sequence
 
 import numpy as np
 
+from ..obs import trace as obs_trace
 from .shared_cache import SharedCache, concat_caches
 
 
@@ -95,11 +96,16 @@ class Component:
         (usually the same object; splitters return several)."""
         t0 = time.perf_counter()
         n_in = cache.n
+        split = cache.split_index
         out = self._run(cache)
-        self.busy_time += time.perf_counter() - t0
+        t1 = time.perf_counter()
+        self.busy_time += t1 - t0
         self.calls += 1
         self.rows_in += n_in
-        self.rows_out += sum(c.n for c in out)
+        n_out = sum(c.n for c in out)
+        self.rows_out += n_out
+        if obs_trace.ACTIVE.get():
+            obs_trace.on_dispatch(self.name, t0, t1, split, n_in, n_out)
         return out
 
     def _run(self, cache: SharedCache) -> List[SharedCache]:  # pragma: no cover
@@ -123,8 +129,11 @@ class Component:
     def accumulate(self, state, cache: SharedCache) -> None:
         t0 = time.perf_counter()
         state.append(cache)
-        self.busy_time += time.perf_counter() - t0
+        t1 = time.perf_counter()
+        self.busy_time += t1 - t0
         self.rows_in += cache.n
+        if obs_trace.ACTIVE.get():
+            obs_trace.on_accumulate(self.name, t0, t1, cache.n)
 
     def finish(self, state) -> SharedCache:
         """Consume accumulated caches, emit the result as one cache."""

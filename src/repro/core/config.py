@@ -25,6 +25,8 @@ Every setting also has a first-class API equivalent (see the README table):
     REPRO_GROUPBY_IMPL   kernels.radix_groupby route in JaxBackend groupbys
     REPRO_OPTEQ_EXAMPLES test harness scale (property-based equivalence)
     REPRO_FLOW_STYLE     etl.queries builders' use_dsl= argument
+    REPRO_TRACE          repro.obs.trace.trace_scope() (explicit scoping)
+    REPRO_TRACE_PATH     repro.obs.trace.export_run() target path
 """
 from __future__ import annotations
 
@@ -59,6 +61,15 @@ ENV_GROUPBY_IMPL = "REPRO_GROUPBY_IMPL"
 #: "dsl" (column-expression AST, exact provenance) or "lambda" (the legacy
 #: callable path, kept for A/B benchmarking)
 ENV_FLOW_STYLE = "REPRO_FLOW_STYLE"
+#: "1" enables per-run structured tracing (repro.obs): engines open a
+#: tracer scope, record spans/metrics, and export a Perfetto-loadable
+#: Chrome-trace JSON file
+ENV_TRACE = "REPRO_TRACE"
+#: path of the exported trace file (default "repro_trace.json"); one file
+#: accumulates every traced run of the process as its own Perfetto process
+ENV_TRACE_PATH = "REPRO_TRACE_PATH"
+
+DEFAULT_TRACE_PATH = "repro_trace.json"
 
 DEFAULT_ARENA_MAX_MB = 256
 DEFAULT_OPTEQ_EXAMPLES = 100
@@ -153,6 +164,20 @@ def flow_style() -> str:
     return v
 
 
+def trace_enabled() -> bool:
+    """Per-run structured tracing + trace-file export (``REPRO_TRACE=1``).
+    An explicitly opened ``repro.obs.trace.trace_scope`` records regardless;
+    this switch additionally makes every engine run open its own scope and
+    write ``trace_path()``."""
+    return _raw(ENV_TRACE) == "1"
+
+
+def trace_path() -> str:
+    """Export path for the Chrome-trace/Perfetto JSON file
+    (``REPRO_TRACE_PATH``, default ``repro_trace.json``)."""
+    return _raw(ENV_TRACE_PATH) or DEFAULT_TRACE_PATH
+
+
 def snapshot() -> Dict[str, object]:
     """Every setting's effective value — recorded in benchmark JSON so a
     run's configuration is reconstructable."""
@@ -167,4 +192,6 @@ def snapshot() -> Dict[str, object]:
         "join_impl": join_impl(),
         "groupby_impl": groupby_impl(),
         "flow_style": flow_style(),
+        "trace": trace_enabled(),
+        "trace_path": trace_path(),
     }

@@ -24,6 +24,7 @@ import time
 from dataclasses import dataclass, field, replace
 from typing import Dict, List, Optional, Tuple
 
+from ..obs import trace as obs_trace
 from . import config
 from .backend import Backend, resolve_backend
 from .component import ComponentType, SourceComponent
@@ -32,7 +33,8 @@ from .graph import Dataflow
 from .metadata import MetadataStore
 from .partitioner import ExecutionTreeGraph, partition
 from .planner import PipelinePlan, RuntimePlan, build_plan, plan_runtime
-from .shared_cache import SharedCache, cache_stats_scope, record_copy
+from .shared_cache import (GLOBAL_ARENA, SharedCache, cache_stats_scope,
+                           record_copy)
 
 #: environment switch for segment fusion when OptimizeOptions.fuse_segments
 #: is left unset (the CI fusion leg runs the whole suite under REPRO_FUSION=1;
@@ -70,6 +72,16 @@ class EngineRun:
     # mentioning an "undeclared" read/write set mark optimizations a lambda
     # predicate silently disabled (the DSL derives provenance instead)
     refusals: List[Dict[str, str]] = field(default_factory=list)
+    # run identity (joins this run to its metadata / bench-JSON / trace
+    # artifacts) + per-run observability (repro.obs)
+    run_id: str = field(default_factory=obs_trace.new_run_id)
+    created: str = field(default_factory=obs_trace.iso_now)
+    git_sha: Optional[str] = field(default_factory=obs_trace.git_sha)
+    #: MetricsRegistry.snapshot() of the run's tracer ({} when tracing off);
+    #: its counters reconcile exactly with the CacheStats fields above
+    metrics: Dict[str, object] = field(default_factory=dict)
+    #: exported Chrome-trace/Perfetto file (REPRO_TRACE=1), else None
+    trace_file: Optional[str] = None
 
     def summary(self) -> str:
         s = (f"[{self.engine}/{self.backend}] wall={self.wall_time:.3f}s "
@@ -102,7 +114,11 @@ class EngineRun:
                 "arena_misses": self.arena_misses,
                 "arena_bytes_reused": self.arena_bytes_reused,
                 "rewrites": list(self.rewrites),
-                "refusals": list(self.refusals)}
+                "refusals": list(self.refusals),
+                "run_id": self.run_id, "created": self.created,
+                "git_sha": self.git_sha,
+                "metrics": dict(self.metrics),
+                "trace_file": self.trace_file}
 
 
 def _assign_backend(flow: Dataflow, backend: Backend) -> None:
@@ -127,6 +143,36 @@ def _run_counters(run: EngineRun, snap: Dict[str, int]) -> None:
     run.arena_hits = snap["arena_hits"]
     run.arena_misses = snap["arena_misses"]
     run.arena_bytes_reused = snap["arena_bytes_reused"]
+
+
+def _finish_obs(tracer, run: EngineRun,
+                pool_stats: Optional[Dict[str, int]] = None,
+                channel_hwm: Optional[int] = None) -> None:
+    """End-of-run observability: derive the gauges (arena hit rate, pool
+    utilization, channel high-water), attach the metric snapshot to the run
+    and export the trace (no-op when tracing is off)."""
+    if tracer is None:
+        return
+    m = tracer.metrics
+    attempts = run.arena_hits + run.arena_misses
+    if attempts:
+        m.gauge_set("arena_hit_rate", run.arena_hits / attempts)
+    m.gauge_set("arena_pooled_bytes", GLOBAL_ARENA.pooled_bytes)
+    if pool_stats:
+        m.gauge_set("pool_width", pool_stats.get("width", 0))
+        m.gauge_set("pool_threads_hwm", pool_stats.get("threads_hwm", 0))
+        m.gauge_set("pool_tasks_run", pool_stats.get("tasks_run", 0))
+        width = pool_stats.get("width") or 0
+        if width:
+            m.gauge_set("pool_utilization",
+                        pool_stats.get("runnable_hwm", 0) / width)
+    if channel_hwm is not None:
+        m.gauge_set("channel_occupancy_hwm", channel_hwm)
+    run.metrics = m.snapshot()
+    run.trace_file = obs_trace.export_run(
+        tracer, meta={"run_id": run.run_id, "created": run.created,
+                      "git_sha": run.git_sha, "engine": run.engine,
+                      "backend": run.backend, "wall_s": run.wall_time})
 
 
 # --------------------------------------------------------------------------
@@ -167,35 +213,42 @@ class OrdinaryEngine:
         self.flow.reset_stats()
         bk = resolve_backend(self.backend)
         _assign_backend(self.flow, bk)
-        t_start = time.perf_counter()
-        with cache_stats_scope() as stats:
-            states: Dict[str, list] = {
-                n: c.new_state() for n, c in self.flow.vertices.items()
-                if c.ctype in (ComponentType.BLOCK, ComponentType.SEMI_BLOCK)}
-            # stream every source, chunk by chunk
-            for sname in self.flow.sources():
-                src = self.flow.component(sname)
-                if isinstance(src, SourceComponent):
-                    for chunk in src.chunks(self.chunk_rows):
-                        self._route(sname, [chunk], states)
-                        chunk.recycle()
-                else:
-                    raise TypeError(f"source {sname!r} is not a SourceComponent")
-            # finalize block/semi-block components in topological order
-            for name in self.flow.topo_order():
-                comp = self.flow.component(name)
-                if comp.ctype in (ComponentType.BLOCK, ComponentType.SEMI_BLOCK):
-                    out = comp.finish(states[name])
-                    self._route(name, [out], states)
-                    out.recycle()
-        wall = time.perf_counter() - t_start
-        run = EngineRun(
-            wall_time=wall, copies=0, bytes_copied=0,
-            engine="ordinary",
-            backend=bk.name,
-            dispatch_calls=_dispatch_calls(self.flow),
-            activity_times={n: c.busy_time for n, c in self.flow.vertices.items()})
-        _run_counters(run, stats.snapshot())
+        with obs_trace.run_scope(flow=self.flow.name, engine="ordinary",
+                                 backend=bk.name) as tracer:
+            t_start = time.perf_counter()
+            with cache_stats_scope() as stats, obs_trace.measured(tracer), \
+                    obs_trace.span("phase", "execute"):
+                states: Dict[str, list] = {
+                    n: c.new_state() for n, c in self.flow.vertices.items()
+                    if c.ctype in (ComponentType.BLOCK, ComponentType.SEMI_BLOCK)}
+                # stream every source, chunk by chunk
+                for sname in self.flow.sources():
+                    src = self.flow.component(sname)
+                    if isinstance(src, SourceComponent):
+                        for chunk in src.chunks(self.chunk_rows):
+                            self._route(sname, [chunk], states)
+                            chunk.recycle()
+                    else:
+                        raise TypeError(
+                            f"source {sname!r} is not a SourceComponent")
+                # finalize block/semi-block components in topological order
+                for name in self.flow.topo_order():
+                    comp = self.flow.component(name)
+                    if comp.ctype in (ComponentType.BLOCK,
+                                      ComponentType.SEMI_BLOCK):
+                        out = comp.finish(states[name])
+                        self._route(name, [out], states)
+                        out.recycle()
+            wall = time.perf_counter() - t_start
+            run = EngineRun(
+                wall_time=wall, copies=0, bytes_copied=0,
+                engine="ordinary",
+                backend=bk.name,
+                dispatch_calls=_dispatch_calls(self.flow),
+                activity_times={n: c.busy_time
+                                for n, c in self.flow.vertices.items()})
+            _run_counters(run, stats.snapshot())
+            _finish_obs(tracer, run)
         return run
 
 
@@ -266,25 +319,30 @@ class OptimizedEngine:
             pool_width=opts.pool_width,
             channel_capacity=opts.channel_capacity,
             streaming=streaming, backend=bk)
-        stats = run_calibration(self.flow, sample_rows=opts.calibration_rows,
-                                backend=bk)
+        with obs_trace.span("phase", "calibrate",
+                            sample_rows=opts.calibration_rows):
+            stats = run_calibration(self.flow,
+                                    sample_rows=opts.calibration_rows,
+                                    backend=bk)
         optimizer = CostBasedOptimizer(self.flow, stats, streaming=streaming,
                                        fuse_segments=opts.fusion_enabled())
-        rewrites = optimizer.optimize()
+        with obs_trace.span("phase", "optimize"):
+            rewrites = optimizer.optimize()
         _assign_backend(self.flow, bk)     # rewrites may add components
-        self.g_tau = partition(self.flow)
-        m_prime = (opts.pipeline_degree
-                   or suggest_pipeline_degree(stats, opts.num_splits,
-                                              cores=opts.cores))
-        self.runtime_plan = plan_runtime(
-            self.flow, self.g_tau,
-            num_splits=opts.num_splits, m_prime=m_prime,
-            mt_threads=opts.mt_threads, cores=opts.cores,
-            pool_width=opts.pool_width,
-            channel_capacity=opts.channel_capacity,
-            streaming=streaming, backend=bk,
-            edge_bytes_override=measured_edge_bytes(self.flow, self.g_tau,
-                                                    stats))
+        with obs_trace.span("phase", "plan"):
+            self.g_tau = partition(self.flow)
+            m_prime = (opts.pipeline_degree
+                       or suggest_pipeline_degree(stats, opts.num_splits,
+                                                  cores=opts.cores))
+            self.runtime_plan = plan_runtime(
+                self.flow, self.g_tau,
+                num_splits=opts.num_splits, m_prime=m_prime,
+                mt_threads=opts.mt_threads, cores=opts.cores,
+                pool_width=opts.pool_width,
+                channel_capacity=opts.channel_capacity,
+                streaming=streaming, backend=bk,
+                edge_bytes_override=measured_edge_bytes(self.flow, self.g_tau,
+                                                        stats))
         if self.metadata is not None:
             self.metadata.register_statistics(self.flow, stats)
             self.metadata.register_adaptive(
@@ -303,54 +361,62 @@ class OptimizedEngine:
         self.flow.reset_stats()
         bk = resolve_backend(opts.backend)
         _assign_backend(self.flow, bk)      # before planning: est_output_bytes
-        rewrites, refusals = [], []
-        if opts.optimize_level >= 2:
-            opts, rewrites, refusals = self._adaptive_rewrite(bk, opts)
-        else:
-            if opts.fusion_enabled():
-                from .optimizer import fuse_segments_flow
-                rewrites = fuse_segments_flow(self.flow)
-                _assign_backend(self.flow, bk)   # fusion adds components
-            self.g_tau = partition(self.flow)
-            m_prime = opts.pipeline_degree or opts.num_splits
-            self.runtime_plan = plan_runtime(
-                self.flow, self.g_tau,
-                num_splits=opts.num_splits, m_prime=m_prime,
-                mt_threads=opts.mt_threads, cores=opts.cores,
-                pool_width=opts.pool_width,
-                channel_capacity=opts.channel_capacity,
-                streaming=opts.streaming and opts.concurrent_trees,
-                backend=bk)
-        if self.metadata is not None:
-            self.metadata.register_flow(self.flow)
-            self.metadata.register_partitioning(self.flow, self.g_tau)
-            self.metadata.register_runtime_plan(self.flow, self.runtime_plan)
+        with obs_trace.run_scope(flow=self.flow.name, engine=self.engine_name,
+                                 backend=bk.name) as tracer:
+            rewrites, refusals = [], []
+            if opts.optimize_level >= 2:
+                opts, rewrites, refusals = self._adaptive_rewrite(bk, opts)
+            else:
+                if opts.fusion_enabled():
+                    from .optimizer import fuse_segments_flow
+                    rewrites = fuse_segments_flow(self.flow)
+                    _assign_backend(self.flow, bk)   # fusion adds components
+                with obs_trace.span("phase", "plan"):
+                    self.g_tau = partition(self.flow)
+                    m_prime = opts.pipeline_degree or opts.num_splits
+                    self.runtime_plan = plan_runtime(
+                        self.flow, self.g_tau,
+                        num_splits=opts.num_splits, m_prime=m_prime,
+                        mt_threads=opts.mt_threads, cores=opts.cores,
+                        pool_width=opts.pool_width,
+                        channel_capacity=opts.channel_capacity,
+                        streaming=opts.streaming and opts.concurrent_trees,
+                        backend=bk)
+            if self.metadata is not None:
+                self.metadata.register_flow(self.flow)
+                self.metadata.register_partitioning(self.flow, self.g_tau)
+                self.metadata.register_runtime_plan(self.flow,
+                                                    self.runtime_plan)
 
-        executor = StreamingExecutor(self.flow, self.g_tau, opts,
-                                     self.runtime_plan)
-        t_start = time.perf_counter()
-        with cache_stats_scope() as stats:
-            try:
-                executor.execute()
-            finally:
-                pool_stats = executor.pool.stats()
-                executor.shutdown()
-        wall = time.perf_counter() - t_start
-        run = EngineRun(
-            wall_time=wall, copies=0, bytes_copied=0,
-            engine=self.engine_name,
-            backend=bk.name,
-            dispatch_calls=_dispatch_calls(self.flow),
-            activity_times={n: c.busy_time for n, c in self.flow.vertices.items()},
-            trees=[list(t.members) for t in self.g_tau.trees],
-            runtime_plan=self.runtime_plan,
-            streamed_edges=list(executor.streamed_edges),
-            pool_stats=pool_stats,
-            rewrites=[r.spec() for r in rewrites],
-            refusals=[r.spec() for r in refusals])
-        _run_counters(run, stats.snapshot())
-        if self.metadata is not None:
-            self.metadata.register_run(self.flow, run)
+            executor = StreamingExecutor(self.flow, self.g_tau, opts,
+                                         self.runtime_plan)
+            t_start = time.perf_counter()
+            with cache_stats_scope() as stats, obs_trace.measured(tracer), \
+                    obs_trace.span("phase", "execute"):
+                try:
+                    executor.execute()
+                finally:
+                    pool_stats = executor.pool.stats()
+                    executor.shutdown()
+            wall = time.perf_counter() - t_start
+            run = EngineRun(
+                wall_time=wall, copies=0, bytes_copied=0,
+                engine=self.engine_name,
+                backend=bk.name,
+                dispatch_calls=_dispatch_calls(self.flow),
+                activity_times={n: c.busy_time
+                                for n, c in self.flow.vertices.items()},
+                trees=[list(t.members) for t in self.g_tau.trees],
+                runtime_plan=self.runtime_plan,
+                streamed_edges=list(executor.streamed_edges),
+                pool_stats=pool_stats,
+                rewrites=[r.spec() for r in rewrites],
+                refusals=[r.spec() for r in refusals])
+            _run_counters(run, stats.snapshot())
+            _finish_obs(tracer, run, pool_stats=pool_stats,
+                        channel_hwm=executor.channel_hwm())
+            if self.metadata is not None:
+                self.metadata.register_run(self.flow, run)
         return run
 
 

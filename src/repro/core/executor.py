@@ -38,11 +38,13 @@ from __future__ import annotations
 
 import contextvars
 import threading
+import time
 from collections import deque
 from contextlib import contextmanager, nullcontext
 from typing import (TYPE_CHECKING, Callable, Dict, Iterator, List, Optional,
                     Tuple)
 
+from ..obs import trace as obs_trace
 from .component import SourceComponent
 from .graph import Dataflow
 from .partitioner import ExecutionTreeGraph, streamable_tree_ids
@@ -160,6 +162,8 @@ class SharedWorkerPool:
         self._seq = 0
         self.spawned_total = 0          # instrumentation
         self.tasks_run = 0
+        self.threads_hwm = 0            # peak live worker threads
+        self.runnable_hwm = 0           # peak concurrently-runnable workers
 
     # ------------------------------------------------------------- internals
     def _runnable(self) -> int:
@@ -171,6 +175,7 @@ class SharedWorkerPool:
         t = threading.Thread(target=self._worker, daemon=True,
                              name=f"{self.name}-{self._seq}")
         self._threads.add(t)
+        self.threads_hwm = max(self.threads_hwm, len(self._threads))
         t.start()
 
     def _worker(self) -> None:
@@ -189,6 +194,8 @@ class SharedWorkerPool:
                         self._idle -= 1
                     fn, args, ctx, fut = self._work.popleft()
                     self.tasks_run += 1
+                    self.runnable_hwm = max(self.runnable_hwm,
+                                            self._runnable())
                 try:
                     # run under the submitter's contextvars context so scoped
                     # instrumentation (cache_stats_scope) follows the task —
@@ -239,7 +246,9 @@ class SharedWorkerPool:
         with self._cond:
             return {"width": self.width, "threads": len(self._threads),
                     "blocked": self._blocked, "spawned_total": self.spawned_total,
-                    "tasks_run": self.tasks_run}
+                    "tasks_run": self.tasks_run,
+                    "threads_hwm": self.threads_hwm,
+                    "runnable_hwm": self.runnable_hwm}
 
     def shutdown(self, wait: bool = True) -> None:
         with self._cond:
@@ -277,6 +286,7 @@ class AdmissionGate:
                 self._inflight += 1
                 return
         ctx = pool.blocking() if pool is not None else nullcontext()
+        t0 = time.perf_counter() if obs_trace.ACTIVE.get() else 0.0
         with ctx:                              # slow path: managed wait
             with self._cond:
                 while self._inflight >= self.limit:
@@ -286,6 +296,9 @@ class AdmissionGate:
                 if self._abort is not None:
                     self._abort.check()
                 self._inflight += 1
+        if t0:
+            obs_trace.on_wait("gate.acquire", t0, time.perf_counter(),
+                              limit=self.limit)
 
     def release(self) -> None:
         with self._cond:
@@ -358,13 +371,15 @@ class ChannelGroup:
             self._check_abort()
             if buf.capacity is None or len(buf.items) < buf.capacity:
                 buf.items.append(item)
-                self.max_depth = max(self.max_depth,
-                                     sum(len(b.items) for b in
-                                         self._buffers.values()))
+                depth = sum(len(b.items) for b in self._buffers.values())
+                self.max_depth = max(self.max_depth, depth)
                 self._cond.notify_all()
+                if obs_trace.ACTIVE.get():
+                    obs_trace.counter("channel", self.name, depth=depth)
                 return
         ctx = (self._pool.blocking() if self._pool is not None
                else nullcontext())
+        t0 = time.perf_counter() if obs_trace.ACTIVE.get() else 0.0
         with ctx:                              # slow path: backpressure
             with self._cond:
                 while len(buf.items) >= buf.capacity:
@@ -372,7 +387,12 @@ class ChannelGroup:
                     self._cond.wait(0.2)
                 self._check_abort()
                 buf.items.append(item)
+                depth = sum(len(b.items) for b in self._buffers.values())
                 self._cond.notify_all()
+        if t0:
+            obs_trace.on_wait("channel.put", t0, time.perf_counter(),
+                              channel=self.name)
+            obs_trace.counter("channel", self.name, depth=depth)
 
     def close(self, key: Tuple[int, int]) -> None:
         with self._cond:
@@ -406,16 +426,22 @@ class ChannelGroup:
                 return CLOSED
         ctx = (self._pool.blocking() if self._pool is not None
                else nullcontext())
-        with ctx:                              # slow path: managed wait
-            with self._cond:
-                while True:
-                    self._check_abort()
-                    item = self._try_get_locked(keys)
-                    if item is not None:
-                        return item
-                    if all(not b.open for b in self._buffers.values()):
-                        return CLOSED
-                    self._cond.wait(0.2)
+        t0 = time.perf_counter() if obs_trace.ACTIVE.get() else 0.0
+        try:
+            with ctx:                          # slow path: managed wait
+                with self._cond:
+                    while True:
+                        self._check_abort()
+                        item = self._try_get_locked(keys)
+                        if item is not None:
+                            return item
+                        if all(not b.open for b in self._buffers.values()):
+                            return CLOSED
+                        self._cond.wait(0.2)
+        finally:
+            if t0:
+                obs_trace.on_wait("channel.get", t0, time.perf_counter(),
+                                  channel=self.name)
 
     def __iter__(self) -> Iterator[Delivery]:
         while True:
@@ -433,8 +459,12 @@ class ChannelGroup:
         if not self._closed_evt.is_set():
             ctx = (self._pool.blocking() if self._pool is not None
                    else nullcontext())
+            t0 = time.perf_counter() if obs_trace.ACTIVE.get() else 0.0
             with ctx:
                 self._closed_evt.wait()
+            if t0:
+                obs_trace.on_wait("channel.drain", t0, time.perf_counter(),
+                                  channel=self.name)
         with self._cond:
             self._check_abort()
             items: List[Delivery] = []
@@ -494,6 +524,10 @@ class StreamingExecutor:
             grp.add_edge((a, b), capacity=depth)
 
     # ------------------------------------------------------------------ util
+    def channel_hwm(self) -> int:
+        """Peak buffered splits across all inter-tree channel groups."""
+        return max((g.max_depth for g in self._groups.values()), default=0)
+
     def _wake_components(self) -> None:
         for comp in self.flow.vertices.values():
             with comp.cond:

@@ -10,6 +10,15 @@ from typing import Dict, List, Optional
 from .graph import Dataflow
 from .partitioner import ExecutionTreeGraph
 
+#: EngineRun.spec scalar fields serialized as XML attributes, with the
+#: coercion applied on import (everything is a string in XML)
+_RUN_INT_FIELDS = ("copies", "bytes_copied", "h2d_transfers", "h2d_bytes",
+                   "d2h_transfers", "d2h_bytes", "dispatch_calls",
+                   "arena_hits", "arena_misses", "arena_bytes_reused")
+_RUN_FLOAT_FIELDS = ("wall_time",)
+_RUN_STR_FIELDS = ("engine", "backend", "run_id", "created", "git_sha",
+                   "trace_file")
+
 
 class MetadataStore:
     def __init__(self) -> None:
@@ -111,6 +120,25 @@ class MetadataStore:
             for e in p["edges"]:
                 ET.SubElement(pf, "tree-edge",
                               attrib={"src": str(e[0]), "dst": str(e[1])})
+        runs = ET.SubElement(root, "runs")
+        for name, spec in self.runs.items():
+            attrib = {"dataflow": name}
+            for k in _RUN_STR_FIELDS + _RUN_INT_FIELDS + _RUN_FLOAT_FIELDS:
+                v = spec.get(k)
+                if v is not None:       # None (e.g. no git repo) => omitted
+                    attrib[k] = str(v)
+            r = ET.SubElement(runs, "run", attrib=attrib)
+            for rw in spec.get("rewrites", []):
+                ET.SubElement(r, "rewrite",
+                              attrib={k: str(v) for k, v in rw.items()})
+            for rf in spec.get("refusals", []):
+                ET.SubElement(r, "refusal",
+                              attrib={k: str(v) for k, v in rf.items()})
+            metrics = spec.get("metrics")
+            if metrics:
+                # nested counters/gauges/histograms: carried as JSON text
+                m = ET.SubElement(r, "metrics")
+                m.text = json.dumps(metrics, sort_keys=True)
         return ET.tostring(root, encoding="unicode")
 
     @classmethod
@@ -133,6 +161,26 @@ class MetadataStore:
                 "edges": [[int(e.attrib["src"]), int(e.attrib["dst"])]
                           for e in pf if e.tag == "tree-edge"],
             }
+        for r in root.find("runs") if root.find("runs") is not None else []:
+            spec: dict = {}
+            for k in _RUN_STR_FIELDS:
+                if k in r.attrib:
+                    spec[k] = r.attrib[k]
+            for k in _RUN_INT_FIELDS:
+                if k in r.attrib:
+                    spec[k] = int(r.attrib[k])
+            for k in _RUN_FLOAT_FIELDS:
+                if k in r.attrib:
+                    spec[k] = float(r.attrib[k])
+            spec.setdefault("git_sha", None)
+            spec.setdefault("trace_file", None)
+            spec["rewrites"] = [dict(ch.attrib) for ch in r
+                                if ch.tag == "rewrite"]
+            spec["refusals"] = [dict(ch.attrib) for ch in r
+                                if ch.tag == "refusal"]
+            m = r.find("metrics")
+            spec["metrics"] = json.loads(m.text) if m is not None else {}
+            store.runs[r.attrib["dataflow"]] = spec
         return store
 
     # --------------------------------------------------------------- JSON

@@ -27,6 +27,7 @@ import time
 from contextlib import nullcontext
 from typing import Callable, Dict, List, Optional
 
+from ..obs import trace as obs_trace
 from .component import Component
 from .executor import AdmissionGate, RunAbort, SharedWorkerPool, TaskFuture
 from .graph import Dataflow
@@ -108,6 +109,7 @@ class ActivityRunner:
                 comp.busy = True                # paper line 8
                 return
         ctx = self.pool.blocking() if self.pool is not None else nullcontext()
+        t0 = time.perf_counter() if obs_trace.ACTIVE.get() else 0.0
         with ctx:
             with comp.cond:
                 while not self._ready(cache):
@@ -115,6 +117,9 @@ class ActivityRunner:
                         self.abort.check()
                     comp.cond.wait(0.2)         # paper line 7
                 comp.busy = True                # paper line 8
+        if t0:
+            obs_trace.on_wait("activity.busy", t0, time.perf_counter(),
+                              component=comp.name, split=cache.split_index)
 
     def process(self, cache: SharedCache, shared: bool) -> List[SharedCache]:
         comp = self.comp
@@ -141,10 +146,15 @@ class ActivityRunner:
                    for r in ranges]
         parts = [f.result() for f in futures]       # row-order synchronizer:
         out = comp.merge_ranges(cache, ranges, parts)   # merge in input order
-        comp.busy_time += time.perf_counter() - t0
+        t1 = time.perf_counter()
+        comp.busy_time += t1 - t0
         comp.calls += 1
         comp.rows_in += cache.n
-        comp.rows_out += sum(c.n for c in out)
+        n_out = sum(c.n for c in out)
+        comp.rows_out += n_out
+        if obs_trace.ACTIVE.get():
+            obs_trace.on_dispatch(comp.name, t0, t1, cache.split_index,
+                                  cache.n, n_out, mt=len(ranges))
         return out
 
 

@@ -40,12 +40,14 @@ from __future__ import annotations
 
 import contextvars
 import threading
+import time
 from contextlib import contextmanager
 from typing import Callable, Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
 from . import config
+from ..obs import trace as obs_trace
 
 # a column is np.ndarray (host) or a device array (e.g. jax.Array)
 Columns = Dict[str, np.ndarray]
@@ -61,8 +63,10 @@ def _to_host(v) -> np.ndarray:
     """Materialize on host, recording the d2h transfer for device arrays."""
     if is_host_column(v):
         return v
+    t0 = time.perf_counter() if obs_trace.ACTIVE.get() else 0.0
     out = np.asarray(v)
-    record_transfer("d2h", out.nbytes)
+    record_transfer("d2h", out.nbytes,
+                    seconds=(time.perf_counter() - t0) if t0 else 0.0)
     return out
 
 
@@ -479,20 +483,31 @@ def _all_stats():
 
 
 def record_copy(cache: SharedCache) -> None:
-    """Record one physical cache copy in the global and scoped collectors."""
+    """Record one physical cache copy in the global and scoped collectors
+    (and, under an active trace scope, as an ``obs`` event + metric)."""
     for s in _all_stats():
         s.record(cache)
+    if obs_trace.ACTIVE.get():
+        obs_trace.on_copy(cache.nbytes())
 
 
-def record_transfer(direction: str, nbytes: int) -> None:
-    """Record one host<->device transfer in the global + scoped collectors."""
+def record_transfer(direction: str, nbytes: int, seconds: float = 0.0) -> None:
+    """Record one host<->device transfer in the global + scoped collectors.
+    ``seconds`` is the measured copy duration where the caller timed it —
+    trace spans get a real width, ``CacheStats`` ignores it.  This funnel is
+    the single source for both ``CacheStats`` and the ``obs`` tracer, which
+    is what makes their transfer counters reconcile exactly."""
     for s in _all_stats():
         s.record_transfer(direction, nbytes)
+    if obs_trace.ACTIVE.get():
+        obs_trace.on_transfer(direction, nbytes, seconds)
 
 
 def _record_arena(hit: bool, nbytes: int) -> None:
     for s in _all_stats():
         s.record_arena(hit, nbytes)
+    if obs_trace.ACTIVE.get():
+        obs_trace.on_arena(hit, nbytes)
 
 
 # ---------------------------------------------------------------------------
@@ -585,6 +600,8 @@ class CacheArena:
         if not (isinstance(root, np.ndarray) and root.dtype == np.uint8
                 and root.ndim == 1 and root.flags["OWNDATA"]):
             return
+        if obs_trace.ACTIVE.get():
+            obs_trace.on_arena_release(root.nbytes)
         bucket = root.nbytes
         if bucket < _ARENA_MIN_BUCKET or bucket & (bucket - 1):
             return                       # not one of our pow2 buckets

@@ -26,6 +26,7 @@ deprecated shim — without a ``reads=`` declaration they emit a
 from __future__ import annotations
 
 import threading
+import time
 import warnings
 from typing import (Callable, Dict, FrozenSet, Iterator, List, Optional,
                     Sequence, Tuple, Union)
@@ -38,6 +39,7 @@ from ..core.component import (BlockComponent, Component, ComponentType,
                               SourceComponent)
 from ..core.expr import Col, Expr, expr_reads
 from ..core.shared_cache import GLOBAL_ARENA, SharedCache, concat_caches
+from ..obs import trace as obs_trace
 
 ColumnRef = Union[str, Col]
 
@@ -515,7 +517,14 @@ class FusedSegment(Component):
         runner = self._compiled.get(bk.name)
         if runner is None:
             runner = self._compiled[bk.name] = bk.compile_segment(self)
-        runner(cache)
+        if obs_trace.ACTIVE.get():
+            n_in = cache.n
+            t0 = time.perf_counter()
+            runner(cache)
+            obs_trace.on_kernel(self.name, bk.name, t0, time.perf_counter(),
+                                n_in)
+        else:
+            runner(cache)
         return [cache]
 
 

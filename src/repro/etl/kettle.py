@@ -20,9 +20,10 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from ..core.component import ComponentType, SourceComponent
-from ..core.engine import EngineRun, _run_counters
+from ..core.engine import EngineRun, _finish_obs, _run_counters
 from ..core.graph import Dataflow
 from ..core.shared_cache import SharedCache, cache_stats_scope, record_copy
+from ..obs import trace as obs_trace
 
 _EOS = object()
 
@@ -76,8 +77,14 @@ class KettleEngine:
                         for r in ranges]
                 parts = [f.result() for f in futs]
                 outs = comp.merge_ranges(cache, ranges, parts)
-                comp.busy_time += time.perf_counter() - t0
+                t1 = time.perf_counter()
+                comp.busy_time += t1 - t0
                 comp.calls += 1
+                if obs_trace.ACTIVE.get():
+                    obs_trace.on_dispatch(comp.name, t0, t1,
+                                          cache.split_index, cache.n,
+                                          sum(c.n for c in outs),
+                                          mt=len(ranges))
                 return outs
             return comp.process(cache, shared=True)
 
@@ -114,30 +121,35 @@ class KettleEngine:
                 errors.append(e)
                 route_eos(name)
 
-        t_start = time.perf_counter()
-        with cache_stats_scope() as stats:
-            # raw step threads do not inherit contextvars: run each under a
-            # context captured INSIDE the scope so the per-run collector
-            # sees every hop copy
-            ctx = contextvars.copy_context()
-            threads = [threading.Thread(
-                target=lambda n=n: ctx.copy().run(step_thread, n),
-                daemon=True, name=f"kettle-{n}")
-                for n in flow.topo_order()]
-            for th in threads:
-                th.start()
-            for th in threads:
-                th.join()
-            if pool is not None:
-                pool.shutdown()
-        wall = time.perf_counter() - t_start
-        if errors:
-            raise errors[0]
-        run = EngineRun(
-            wall_time=wall, copies=0, bytes_copied=0,
-            engine="kettle",
-            backend=bk.name,
-            dispatch_calls=sum(c.calls for c in flow.vertices.values()),
-            activity_times={n: c.busy_time for n, c in flow.vertices.items()})
-        _run_counters(run, stats.snapshot())
+        with obs_trace.run_scope(flow=flow.name, engine="kettle",
+                                 backend=bk.name) as tracer:
+            t_start = time.perf_counter()
+            with cache_stats_scope() as stats, obs_trace.measured(tracer), \
+                    obs_trace.span("phase", "execute"):
+                # raw step threads do not inherit contextvars: run each under
+                # a context captured INSIDE the scope so the per-run
+                # collectors (cache stats AND tracer) see every hop copy
+                ctx = contextvars.copy_context()
+                threads = [threading.Thread(
+                    target=lambda n=n: ctx.copy().run(step_thread, n),
+                    daemon=True, name=f"kettle-{n}")
+                    for n in flow.topo_order()]
+                for th in threads:
+                    th.start()
+                for th in threads:
+                    th.join()
+                if pool is not None:
+                    pool.shutdown()
+            wall = time.perf_counter() - t_start
+            if errors:
+                raise errors[0]
+            run = EngineRun(
+                wall_time=wall, copies=0, bytes_copied=0,
+                engine="kettle",
+                backend=bk.name,
+                dispatch_calls=sum(c.calls for c in flow.vertices.values()),
+                activity_times={n: c.busy_time
+                                for n, c in flow.vertices.items()})
+            _run_counters(run, stats.snapshot())
+            _finish_obs(tracer, run)
         return run

@@ -191,6 +191,23 @@ class SessionRun:
     run: EngineRun
     table: Dict[str, np.ndarray]
 
+    @property
+    def run_id(self) -> str:
+        """Opaque identifier joining this run to its metadata-store record,
+        benchmark JSON and trace-file process (see ``repro.obs``)."""
+        return self.run.run_id
+
+    @property
+    def trace_file(self) -> Optional[str]:
+        """Exported Perfetto trace (``REPRO_TRACE=1``), else ``None``."""
+        return self.run.trace_file
+
+    @property
+    def metrics(self) -> Dict[str, object]:
+        """The run tracer's metric snapshot (counters / gauges /
+        histograms); ``{}`` when tracing was off."""
+        return self.run.metrics
+
     def summary(self) -> str:
         return self.run.summary()
 

@@ -1,0 +1,254 @@
+"""Observability: tracer scoping, metric reconciliation, Perfetto export,
+the attribution report, and the zero-cost disabled path."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import (OptimizedEngine, OptimizeOptions, OrdinaryEngine,
+                        StreamingEngine)
+from repro.core.executor import SharedWorkerPool
+from repro.etl.queries import build_q4
+from repro.etl.ssb import generate
+from repro.obs import metrics as obs_metrics
+from repro.obs import report as obs_report
+from repro.obs import trace as obs_trace
+
+
+@pytest.fixture(scope="module")
+def data():
+    return generate(lineorder_rows=5000, customers=100, suppliers=40,
+                    parts=60, seed=7)
+
+
+# ---------------------------------------------------------------------------
+#  Metrics registry
+# ---------------------------------------------------------------------------
+def test_metrics_registry_counters_gauges_histograms():
+    m = obs_metrics.MetricsRegistry()
+    m.inc("a")
+    m.inc("a", 4)
+    m.gauge_set("g", 2.5)
+    m.gauge_max("hw", 3)
+    m.gauge_max("hw", 1)           # max keeps the high water
+    m.observe("lat", 0.001)
+    m.observe("lat", 0.002)
+    snap = m.snapshot()
+    assert snap["counters"]["a"] == 5
+    assert snap["gauges"]["g"] == 2.5
+    assert snap["gauges"]["hw"] == 3
+    h = snap["histograms"]["lat"]
+    assert h["count"] == 2
+    assert h["sum_s"] == pytest.approx(0.003)
+    assert sum(n for _, n in h["buckets"]) + h["overflow"] == 2
+
+
+def test_histogram_bucket_monotone():
+    h = obs_metrics.Histogram()
+    for s in (1e-6, 1e-4, 1e-2, 1.0):
+        h.observe(s)
+    snap = h.snapshot()
+    les = [le for le, _ in snap["buckets"]]
+    assert les == sorted(les)
+    assert snap["min_s"] == pytest.approx(1e-6)
+    assert snap["max_s"] == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+#  Tracer scoping
+# ---------------------------------------------------------------------------
+def test_trace_scope_disabled_is_null():
+    assert not obs_trace.active()
+    s1 = obs_trace.span("compute", "x")
+    s2 = obs_trace.span("compute", "y")
+    assert s1 is s2                      # shared no-op singleton: no alloc
+    with s1:
+        pass
+
+
+def test_trace_scope_records_spans_and_nests():
+    with obs_trace.trace_scope() as outer:
+        with obs_trace.span("phase", "outer-span"):
+            with obs_trace.trace_scope() as inner:
+                with obs_trace.span("compute", "inner-span", rows=3):
+                    pass
+    names = [e["name"] for e in outer.events]
+    assert "outer-span" in names and "inner-span" in names   # outer sees all
+    assert [e["name"] for e in inner.events] == ["inner-span"]
+    ev = inner.events[0]
+    assert ev["ph"] == "X" and ev["cat"] == "compute"
+    assert ev["args"]["rows"] == 3
+    assert ev["dur"] >= 0
+    assert not obs_trace.active()
+
+
+def test_scope_propagates_through_worker_pool():
+    """SharedWorkerPool runs tasks under the submitter's contextvars, so a
+    span emitted on a pool thread lands in the submitting scope's tracer."""
+    pool = SharedWorkerPool(width=2, name="obs-test")
+    try:
+        with obs_trace.trace_scope() as tr:
+            fut = pool.submit(lambda: obs_trace.complete(
+                "compute", "pool-task", 0.0, 0.001))
+            fut.result()
+        assert [e["name"] for e in tr.events] == ["pool-task"]
+        assert tr.events[0]["tid"] != 0
+    finally:
+        pool.shutdown()
+
+
+def test_run_scope_yields_none_when_disabled(monkeypatch):
+    monkeypatch.delenv("REPRO_TRACE", raising=False)
+    with obs_trace.run_scope(flow="f") as tr:
+        assert tr is None
+
+
+# ---------------------------------------------------------------------------
+#  Engine integration + exact reconciliation
+# ---------------------------------------------------------------------------
+def _reconcile(run):
+    c = run.metrics.get("counters", {})
+    for field in ("copies", "bytes_copied", "h2d_transfers", "h2d_bytes",
+                  "d2h_transfers", "d2h_bytes", "dispatch_calls",
+                  "arena_hits", "arena_misses", "arena_bytes_reused"):
+        assert c.get(field, 0) == getattr(run, field), field
+
+
+@pytest.mark.parametrize("engine_cls", [OptimizedEngine, StreamingEngine])
+def test_engine_metrics_reconcile_exactly(data, engine_cls):
+    qf = build_q4(data, staged=engine_cls is StreamingEngine)
+    with obs_trace.trace_scope() as tr:
+        run = engine_cls(qf.flow, OptimizeOptions(num_splits=4)).run()
+    _reconcile(run)
+    # every component dispatch produced exactly one compute span
+    dispatch_spans = [e for e in tr.events if e["cat"] == "compute"
+                     and not (e.get("args") or {}).get("phase")]
+    assert len(dispatch_spans) == run.dispatch_calls
+    # the execute phase span exists and has real width
+    phases = [e["name"] for e in tr.events if e["cat"] == "phase"]
+    assert "execute" in phases and "plan" in phases
+    # run identity is present
+    assert len(run.run_id) == 32
+    assert run.created.endswith("+00:00")
+    # gauges were derived
+    g = run.metrics["gauges"]
+    assert g["pool_width"] >= 1
+    assert "arena_pooled_bytes" in g
+
+
+def test_ordinary_engine_traces_and_reconciles(data):
+    qf = build_q4(data)
+    with obs_trace.trace_scope():
+        run = OrdinaryEngine(qf.flow, chunk_rows=2048).run()
+    _reconcile(run)
+    assert run.copies > 0                  # copy-everywhere baseline
+    assert run.metrics["counters"]["copies"] == run.copies
+
+
+def test_adaptive_run_calibration_outside_measure_window(data):
+    """optimize_level=2 calibrates inside the tracer scope but OUTSIDE the
+    metric window: dispatch_calls must still reconcile exactly."""
+    qf = build_q4(data)
+    with obs_trace.trace_scope() as tr:
+        run = OptimizedEngine(qf.flow, OptimizeOptions(
+            num_splits=2, optimize_level=2, calibration_rows=512)).run()
+    _reconcile(run)
+    phases = [e["name"] for e in tr.events if e["cat"] == "phase"]
+    for expect in ("calibrate", "optimize", "plan", "execute"):
+        assert expect in phases, expect
+
+
+def test_untraced_run_has_empty_metrics(data, monkeypatch):
+    monkeypatch.delenv("REPRO_TRACE", raising=False)
+    qf = build_q4(data)
+    run = OptimizedEngine(qf.flow, OptimizeOptions(num_splits=2)).run()
+    assert run.metrics == {}
+    assert run.trace_file is None
+    assert len(run.run_id) == 32           # identity is always on
+
+
+# ---------------------------------------------------------------------------
+#  Export + report
+# ---------------------------------------------------------------------------
+def test_trace_file_export_and_report(data, tmp_path, monkeypatch):
+    path = tmp_path / "trace.json"
+    monkeypatch.setenv("REPRO_TRACE", "1")
+    monkeypatch.setenv("REPRO_TRACE_PATH", str(path))
+    qf = build_q4(data)
+    run = OptimizedEngine(qf.flow, OptimizeOptions(num_splits=2)).run()
+    assert run.trace_file == str(path)
+
+    payload = json.loads(path.read_text())
+    events = payload["traceEvents"]
+    assert events, "empty trace"
+    # Chrome-trace shape: process metadata + X spans with ts/dur
+    assert any(e.get("ph") == "M" and e.get("name") == "process_name"
+               for e in events)
+    spans = [e for e in events if e.get("ph") == "X"]
+    assert all("ts" in e and "dur" in e for e in spans)
+    run_meta = payload["otherData"]["runs"]
+    assert run_meta and run_meta[-1]["run_id"] == run.run_id
+
+    result = obs_report.analyze(payload)
+    rep = result["runs"][-1]
+    assert rep["meta"]["run_id"] == run.run_id
+    cats = rep["categories"]
+    assert cats["compute"] > 0             # self-time µs per class
+    assert set(rep["components"])           # per-component attribution
+    text = obs_report.render(result)
+    assert "compute" in text and run.run_id[:8] in text
+
+    # CLI entry point: --json round trip
+    rc = obs_report.main([str(path), "--json"])
+    assert rc == 0
+
+
+def test_trace_file_accumulates_runs_as_processes(data, tmp_path,
+                                                  monkeypatch):
+    path = tmp_path / "multi.json"
+    monkeypatch.setenv("REPRO_TRACE", "1")
+    monkeypatch.setenv("REPRO_TRACE_PATH", str(path))
+    r1 = OptimizedEngine(build_q4(data).flow,
+                         OptimizeOptions(num_splits=2)).run()
+    r2 = StreamingEngine(build_q4(data, staged=True).flow,
+                         OptimizeOptions(num_splits=2)).run()
+    payload = json.loads(path.read_text())
+    pids = {e["pid"] for e in payload["traceEvents"] if e.get("ph") == "X"}
+    ids = [m["run_id"] for m in payload["otherData"]["runs"]]
+    assert len(pids) >= 2                   # one Perfetto process per run
+    assert r1.run_id in ids and r2.run_id in ids
+
+
+def test_report_self_time_subtracts_nesting():
+    """A child span's time is attributed to the child, not double-counted
+    in the parent (stack-based self-time)."""
+    with obs_trace.trace_scope() as tr:
+        obs_trace.complete("phase", "parent", 0.0, 0.010)
+        obs_trace.complete("compute", "child", 0.002, 0.004)
+    tr.meta = {"run_id": "x" * 32}
+    payload = {"traceEvents": tr.to_chrome(pid=1),
+               "otherData": {"runs": [tr.meta]}}
+    rep = obs_report.analyze(payload)["runs"][0]
+    assert rep["categories"]["overhead"] == pytest.approx(6000, rel=0.01)
+    assert rep["categories"]["compute"] == pytest.approx(4000, rel=0.01)
+    # 10ms parent minus the 4ms nested child = 6ms coordination overhead
+
+
+# ---------------------------------------------------------------------------
+#  Disabled-path cost guard
+# ---------------------------------------------------------------------------
+def test_results_identical_traced_vs_untraced(data):
+    qf1 = build_q4(data)
+    run1 = OptimizedEngine(qf1.flow, OptimizeOptions(num_splits=4)).run()
+    base = qf1.sink.result()
+    qf2 = build_q4(data)
+    with obs_trace.trace_scope():
+        run2 = OptimizedEngine(qf2.flow, OptimizeOptions(num_splits=4)).run()
+    got = qf2.sink.result()
+    assert set(got) == set(base)
+    for k in base:
+        np.testing.assert_array_equal(got[k], base[k])
+    # instrumentation must not change the deterministic counters either
+    for field in ("copies", "bytes_copied", "h2d_transfers", "d2h_transfers",
+                  "dispatch_calls"):
+        assert getattr(run1, field) == getattr(run2, field), field

@@ -94,3 +94,41 @@ def test_metadata_xml_json_roundtrip():
     j = MetadataStore.from_json(store.to_json())
     assert j.dataflows["ssb-q4.1"]["edges"] == \
         store.dataflows["ssb-q4.1"]["edges"]
+
+
+def test_metadata_run_roundtrip_xml_and_json():
+    """EngineRun records — including run identity, refusals and the obs
+    metric snapshot — survive BOTH serializations."""
+    from repro.core import OptimizedEngine, OptimizeOptions
+    from repro.obs import trace as obs_trace
+
+    data = generate(lineorder_rows=2000, customers=50, suppliers=20,
+                    parts=30)
+    qf = build_q4(data)
+    store = MetadataStore()
+    with obs_trace.trace_scope():      # populate run.metrics
+        run = OptimizedEngine(qf.flow, OptimizeOptions(num_splits=2),
+                              metadata=store).run()
+    run.refusals = [{"rule": "filter-hop", "reason": "undeclared reads"}]
+    store.register_run(qf.flow, run)   # re-register with the refusal
+    spec = store.runs["ssb-q4.1"]
+    assert spec["run_id"] == run.run_id
+    assert spec["metrics"]["counters"]["dispatch_calls"] == \
+        run.dispatch_calls
+
+    for restored in (MetadataStore.from_xml(store.to_xml()),
+                     MetadataStore.from_json(store.to_json())):
+        got = restored.runs["ssb-q4.1"]
+        assert got["run_id"] == run.run_id
+        assert got["created"] == run.created
+        assert got["git_sha"] == run.git_sha
+        assert got["engine"] == run.engine
+        assert got["backend"] == run.backend
+        assert got["wall_time"] == pytest.approx(run.wall_time)
+        for field in ("copies", "bytes_copied", "h2d_transfers",
+                      "d2h_transfers", "dispatch_calls", "arena_hits",
+                      "arena_misses", "arena_bytes_reused"):
+            assert got[field] == getattr(run, field), field
+        assert got["refusals"] == run.refusals
+        assert got["metrics"]["counters"]["dispatch_calls"] == \
+            run.dispatch_calls
