@@ -12,7 +12,8 @@ Field classes (see benchmarks/README.md for the schema):
 
   exact  — transfer/copy COUNTERS: ``copies``, ``bytes_copied``,
            ``h2d_transfers``, ``h2d_bytes``, ``d2h_transfers``,
-           ``d2h_bytes`` inside every section's ``cache_stats``, the whole
+           ``d2h_bytes``, ``dim_h2d_transfers``, ``dim_h2d_bytes`` and
+           ``segment_compiles`` inside every section's ``cache_stats``, the whole
            ``counters`` subtree a section may carry (per-flow fused/unfused
            dispatch + transfer counts), every section's ``status``, and the
            payload's backend/mode/flow_style.  These are deterministic for a
@@ -51,7 +52,8 @@ BASELINE_DIR = os.path.join(os.path.dirname(__file__), "baselines")
 
 #: cache_stats fields compared exactly (deterministic counters)
 EXACT_STATS = ("copies", "bytes_copied", "h2d_transfers", "h2d_bytes",
-               "d2h_transfers", "d2h_bytes")
+               "d2h_transfers", "d2h_bytes", "dim_h2d_transfers",
+               "dim_h2d_bytes", "segment_compiles")
 #: cache_stats fields compared with a tolerance band (thread-timing noise)
 ARENA_STATS = ("arena_hits", "arena_misses", "arena_bytes_reused")
 #: top-level payload fields that must match exactly

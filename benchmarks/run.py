@@ -42,7 +42,7 @@ import traceback
 from . import (backend_compare, dsl_compare, fig12_pipeline_speedup,
                fig13_cpu_usage, fig14_multithreading, fig15_optimization,
                fig16_fig17_vs_kettle, fusion, kernel_bench, optimizer,
-               roofline, streaming, theorem1_accuracy)
+               roofline, serving, streaming, theorem1_accuracy)
 
 SECTIONS = {
     "fig12": fig12_pipeline_speedup.run,
@@ -52,6 +52,7 @@ SECTIONS = {
     "fig1617": fig16_fig17_vs_kettle.run,
     "theorem1": theorem1_accuracy.run,
     "kernels": kernel_bench.run,
+    "serving": serving.run,
     "streaming": streaming.run,
     "backend": backend_compare.run,
     "optimizer": optimizer.run,
@@ -61,7 +62,8 @@ SECTIONS = {
 }
 
 SMOKE_FLOWS = ("Q1.1", "Q2.1", "Q4.1", "Q4.1s")
-SMOKE_PARTS = ("engines", "backend", "optimizer", "fusion", "dsl", "kernels")
+SMOKE_PARTS = ("engines", "backend", "optimizer", "fusion", "dsl", "kernels",
+               "serving")
 
 
 # ---------------------------------------------------------------------------
@@ -241,6 +243,10 @@ def smoke(parts=None) -> int:
         # data-kernel sweeps: hash-join / radix-groupby / segment-sum
         # ref-vs-interpret equality + the intensity CSV artifact
         "kernels": kernel_bench.smoke,
+        # resident serving: warm ticks must record zero segment recompiles
+        # and zero dim-table h2d re-uploads; replayed deltas byte-identical
+        # to the one-shot batch run
+        "serving": lambda: serving.smoke(data),
     }
     failures = 0
     records = {}

@@ -19,10 +19,12 @@ backends, config), ``repro.etl`` (component library + SSB flows),
 """
 from .core.config import snapshot as config_snapshot
 from .core.expr import Col, Expr, Lit, col, lit, where
-from .session import Flow, FlowBuilder, Session, SessionRun, flow
+from .session import (Flow, FlowBuilder, ServeSession, Session, SessionRun,
+                      TickResult, flow, replay_deltas)
 
 __all__ = [
     "Col", "Expr", "Lit", "col", "lit", "where",
-    "Flow", "FlowBuilder", "Session", "SessionRun", "flow",
+    "Flow", "FlowBuilder", "ServeSession", "Session", "SessionRun",
+    "TickResult", "flow", "replay_deltas",
     "config_snapshot",
 ]

@@ -11,7 +11,7 @@ from .component import (BlockComponent, Component, ComponentType, FnComponent,
                         SemiBlockComponent, SinkComponent, SourceComponent,
                         StageBoundary)
 from .engine import (EngineRun, OptimizedEngine, OptimizeOptions,
-                     OrdinaryEngine, StreamingEngine)
+                     OrdinaryEngine, ServingEngine, StreamingEngine)
 from .executor import (ChannelGroup, ExecutionAborted, RunAbort,
                        SharedWorkerPool, StreamingExecutor, TaskFuture)
 from .expr import Col, ColumnsView, Expr, Lit, col, expr_reads, lit, where
@@ -42,7 +42,7 @@ __all__ = [
     "BlockComponent", "Component", "ComponentType", "FnComponent",
     "SemiBlockComponent", "SinkComponent", "SourceComponent", "StageBoundary",
     "EngineRun", "OptimizedEngine", "OptimizeOptions", "OrdinaryEngine",
-    "StreamingEngine",
+    "ServingEngine", "StreamingEngine",
     "ChannelGroup", "ExecutionAborted", "RunAbort", "SharedWorkerPool",
     "StreamingExecutor", "TaskFuture",
     "Col", "ColumnsView", "Expr", "Lit", "col", "expr_reads", "lit", "where",

@@ -154,8 +154,10 @@ class Backend:
         kernel (the jax backend jits the whole segment: one h2d in, one d2h
         out per chunk).  The returned runner is cached on the segment by the
         component, so compilation happens once per (segment, backend)."""
+        from ..shared_cache import record_segment_compile   # cycle-free
         ops = list(segment.ops)
         backend = self
+        record_segment_compile()
 
         def run(cache) -> None:
             _run_segment_host(backend, ops, cache)

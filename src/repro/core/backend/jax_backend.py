@@ -42,7 +42,8 @@ import numpy as np
 from ...obs import trace as obs_trace
 from .. import config
 from ..expr import ColumnsView, Expr
-from ..shared_cache import GLOBAL_ARENA, is_host_column, record_transfer
+from ..shared_cache import (GLOBAL_ARENA, is_host_column, record_dim_upload,
+                            record_segment_compile, record_transfer)
 from .base import AGG_OPS, Backend, SegmentEnv
 
 
@@ -184,6 +185,17 @@ class JaxBackend(Backend):
         # x64 disabled => int64/float64 host columns live as 4-byte device
         return int(np.dtype(self._jax.dtypes.canonicalize_dtype(dtype)).itemsize)
 
+    def bucket_rows(self, n: int) -> int:
+        """Pad target for a data-dependent row count: ``batch_align`` times
+        the next power of two of the needed alignment units.  Keeps the
+        number of DISTINCT jit shapes logarithmic in the row-count range —
+        linear multiple-of-align bucketing retraces once per distinct chunk
+        size, which under a resident serving session with varying tick sizes
+        means unbounded warm-tick recompiles."""
+        align = max(1, self.batch_align)
+        units = max(1, -(-int(n) // align))
+        return align * (1 << (units - 1).bit_length())
+
     # ------------------------------------------------------- dim-table cache
     def _dim_device(self, dim) -> Dict[str, object]:
         """Device-resident mirror of a DimTable, device_put once per table
@@ -195,6 +207,8 @@ class JaxBackend(Backend):
             with self._dims_lock:
                 dev = dim.__dict__.get("_jax_device_cache")
                 if dev is None:
+                    record_dim_upload(dim.keys.nbytes)
+                    record_dim_upload(dim.qualifies.nbytes)
                     dev = dim.__dict__["_jax_device_cache"] = {
                         "keys": self.asarray(dim.keys),
                         "qualifies": self.asarray(dim.qualifies),
@@ -209,6 +223,7 @@ class JaxBackend(Backend):
             with self._dims_lock:
                 got = dev["payload"].get(col)
                 if got is None:
+                    record_dim_upload(dim.payload[col].nbytes)
                     got = dev["payload"][col] = self.asarray(dim.payload[col])
         return got
 
@@ -224,6 +239,9 @@ class JaxBackend(Backend):
                 ht = dim.__dict__.get("_jax_hash_cache")
                 if ht is None:
                     built = self._hash_build((np.asarray(dim.keys),))
+                    for k in built["slot_keys"]:
+                        record_dim_upload(np.asarray(k).nbytes)
+                    record_dim_upload(np.asarray(built["slot_idx"]).nbytes)
                     ht = dim.__dict__["_jax_hash_cache"] = {
                         "slot_keys": tuple(self.asarray(k)
                                            for k in built["slot_keys"]),
@@ -261,8 +279,7 @@ class JaxBackend(Backend):
         view = self._view(cache)
         cols = [view.col(name)[rows] for name in names]
         n = cols[0].shape[0]
-        align = max(1, self.batch_align)
-        pad = (-n) % align
+        pad = self.bucket_rows(n) - n
         if pad:
             cols = [jnp.concatenate(
                 [c, jnp.zeros((pad,) + c.shape[1:], c.dtype)]) for c in cols]
@@ -293,7 +310,7 @@ class JaxBackend(Backend):
         dev = self._dim_device(dim)
         v = self.asarray(vals)
         n = v.shape[0]
-        pad = (-n) % self.batch_align          # bound jit retraces per shape
+        pad = self.bucket_rows(n) - n          # bound jit retraces per shape
         if pad:
             v = self._jnp.concatenate([v, self._jnp.full((pad,), dim.keys[0],
                                                          dtype=v.dtype)])
@@ -577,8 +594,7 @@ class _JaxSegmentRunner:
         bk = self._bk
         jnp = self._jnp
         n = cache.n
-        align = max(1, bk.batch_align)
-        bucket = max(align, -(-n // align) * align)
+        bucket = bk.bucket_rows(n)
 
         names = (sorted(self.inputs) if self.inputs is not None
                  else sorted(cache.names))
@@ -655,7 +671,11 @@ class _JaxSegmentRunner:
             self._dims = dims
 
         layout = (bucket, tuple(entries))
-        self._layouts.add(layout)
+        if layout not in self._layouts:
+            # a layout never seen by this runner => the jit call below traces
+            # and compiles a fresh executable for it
+            self._layouts.add(layout)
+            record_segment_compile()
         out_cols, keep_mask = self._jit(layout, packed, dev_cols, self._dims)
         self.kernel_calls += 1
 

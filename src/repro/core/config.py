@@ -68,8 +68,21 @@ ENV_TRACE = "REPRO_TRACE"
 #: path of the exported trace file (default "repro_trace.json"); one file
 #: accumulates every traced run of the process as its own Perfetto process
 ENV_TRACE_PATH = "REPRO_TRACE_PATH"
+#: cap on buffered trace events — per tracer AND across the runs the trace
+#: file retains; oldest events/runs rotate out so a resident serving session
+#: stays bounded (0 disables the cap)
+ENV_TRACE_MAX_EVENTS = "REPRO_TRACE_MAX_EVENTS"
+#: "0" relaxes the serving watermark contract from strict (a regressing
+#: watermark raises) to clamping (a regressing watermark is lifted to the
+#: session high-water mark)
+ENV_SERVE_STRICT_WATERMARK = "REPRO_SERVE_STRICT_WATERMARK"
+#: number of recent per-tick wall times a ServeSession retains for its
+#: closing p50/p99 summary
+ENV_SERVE_HISTORY = "REPRO_SERVE_HISTORY"
 
 DEFAULT_TRACE_PATH = "repro_trace.json"
+DEFAULT_TRACE_MAX_EVENTS = 200_000
+DEFAULT_SERVE_HISTORY = 4096
 
 DEFAULT_ARENA_MAX_MB = 256
 DEFAULT_OPTEQ_EXAMPLES = 100
@@ -178,6 +191,31 @@ def trace_path() -> str:
     return _raw(ENV_TRACE_PATH) or DEFAULT_TRACE_PATH
 
 
+def trace_max_events() -> int:
+    """Trace-event retention cap (``REPRO_TRACE_MAX_EVENTS``, default
+    200000; 0 disables rotation).  Applies per tracer and to the total the
+    process trace file keeps across runs."""
+    v = _raw(ENV_TRACE_MAX_EVENTS)
+    n = int(v) if v is not None else DEFAULT_TRACE_MAX_EVENTS
+    return max(0, n)
+
+
+def serve_strict_watermark() -> bool:
+    """Serving watermark contract: strict (default — a tick whose watermark
+    regresses below the session high-water mark raises) or clamping
+    (``REPRO_SERVE_STRICT_WATERMARK=0`` — regressions are lifted to the
+    high-water mark)."""
+    return _raw(ENV_SERVE_STRICT_WATERMARK) != "0"
+
+
+def serve_history() -> int:
+    """Per-tick wall-time samples a ServeSession retains for its closing
+    p50/p99 summary (``REPRO_SERVE_HISTORY``, default 4096)."""
+    v = _raw(ENV_SERVE_HISTORY)
+    n = int(v) if v is not None else DEFAULT_SERVE_HISTORY
+    return max(1, n)
+
+
 def snapshot() -> Dict[str, object]:
     """Every setting's effective value — recorded in benchmark JSON so a
     run's configuration is reconstructable."""
@@ -194,4 +232,7 @@ def snapshot() -> Dict[str, object]:
         "flow_style": flow_style(),
         "trace": trace_enabled(),
         "trace_path": trace_path(),
+        "trace_max_events": trace_max_events(),
+        "serve_strict_watermark": serve_strict_watermark(),
+        "serve_history": serve_history(),
     }

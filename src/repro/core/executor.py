@@ -601,19 +601,34 @@ class StreamingExecutor:
             entries.sort(key=lambda e: (e[0], e[1]))
             state = root.new_state()
             extras: List[Delivery] = []
-            for (src, idx, dst, cache) in entries:
-                if dst == tree.root:
-                    root.accumulate(state, cache)
-                else:
-                    extras.append((src, idx, dst, cache))
-            out = root.finish(state)
-            for (src, idx, dst, cache) in extras:
-                cache.split_index = idx
-                tp.consume_at(dst, cache)
-                cache.recycle()
-            self._run_pipeline(tp, iter(out.split(opts.num_splits)),
-                               process_root=False)
-            out.recycle()    # its splits (views) have all been consumed
+            out: Optional[SharedCache] = None
+            try:
+                for (src, idx, dst, cache) in entries:
+                    if dst == tree.root:
+                        root.accumulate(state, cache)
+                    else:
+                        extras.append((src, idx, dst, cache))
+                out = root.finish(state)
+                state = None           # finish consumed (and recycled) it
+                for (src, idx, dst, cache) in extras:
+                    cache.split_index = idx
+                    tp.consume_at(dst, cache)
+                    cache.recycle()
+                extras = []
+                self._run_pipeline(tp, iter(out.split(opts.num_splits)),
+                                   process_root=False)
+            finally:
+                # an abort between accumulate and the last consumed split
+                # must not strand arena buffers: recycle whatever was not
+                # handed downstream (recycle() is idempotent, so the success
+                # path — where finish/consume already recycled — is a no-op)
+                if state:
+                    for cache in state:
+                        cache.recycle()
+                for (_, _, _, cache) in extras:
+                    cache.recycle()
+                if out is not None:
+                    out.recycle()    # its splits (views) were consumed
         else:
             # row-synchronized root — an explicit stage boundary
             if tree.tree_id in self._streamed_trees and group is not None:

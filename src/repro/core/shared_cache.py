@@ -402,6 +402,9 @@ class CacheStats:
         self.arena_hits = 0
         self.arena_misses = 0
         self.arena_bytes_reused = 0
+        self.dim_h2d_transfers = 0
+        self.dim_h2d_bytes = 0
+        self.segment_compiles = 0
 
     def record(self, cache: SharedCache) -> None:
         with self._lock:
@@ -427,6 +430,22 @@ class CacheStats:
             else:
                 self.arena_misses += 1
 
+    def record_dim_upload(self, nbytes: int) -> None:
+        """A dimension-table device upload (keys/payload/hash build).  Also
+        recorded as a plain h2d transfer by the backend's ``asarray`` — this
+        counter isolates the dim-table share so a resident serving session
+        can assert warm ticks re-upload nothing."""
+        with self._lock:
+            self.dim_h2d_transfers += 1
+            self.dim_h2d_bytes += int(nbytes)
+
+    def record_segment_compile(self) -> None:
+        """A fused-segment kernel compile: composing the host runner, or a
+        jit trace of a new (bucket, column-layout) shape on an accelerated
+        backend.  Warm serving ticks must record zero of these."""
+        with self._lock:
+            self.segment_compiles += 1
+
     def reset(self) -> None:
         with self._lock:
             self.copies = 0
@@ -438,6 +457,9 @@ class CacheStats:
             self.arena_hits = 0
             self.arena_misses = 0
             self.arena_bytes_reused = 0
+            self.dim_h2d_transfers = 0
+            self.dim_h2d_bytes = 0
+            self.segment_compiles = 0
 
     def snapshot(self):
         with self._lock:
@@ -448,7 +470,10 @@ class CacheStats:
                     "d2h_bytes": self.d2h_bytes,
                     "arena_hits": self.arena_hits,
                     "arena_misses": self.arena_misses,
-                    "arena_bytes_reused": self.arena_bytes_reused}
+                    "arena_bytes_reused": self.arena_bytes_reused,
+                    "dim_h2d_transfers": self.dim_h2d_transfers,
+                    "dim_h2d_bytes": self.dim_h2d_bytes,
+                    "segment_compiles": self.segment_compiles}
 
 
 GLOBAL_CACHE_STATS = CacheStats()
@@ -508,6 +533,19 @@ def _record_arena(hit: bool, nbytes: int) -> None:
         s.record_arena(hit, nbytes)
     if obs_trace.ACTIVE.get():
         obs_trace.on_arena(hit, nbytes)
+
+
+def record_dim_upload(nbytes: int) -> None:
+    """Record one dimension-table device upload (in ADDITION to the h2d
+    transfer the backend's ``asarray`` records for the same bytes)."""
+    for s in _all_stats():
+        s.record_dim_upload(nbytes)
+
+
+def record_segment_compile() -> None:
+    """Record one fused-segment kernel compile / new-layout jit trace."""
+    for s in _all_stats():
+        s.record_segment_compile()
 
 
 # ---------------------------------------------------------------------------
@@ -600,8 +638,6 @@ class CacheArena:
         if not (isinstance(root, np.ndarray) and root.dtype == np.uint8
                 and root.ndim == 1 and root.flags["OWNDATA"]):
             return
-        if obs_trace.ACTIVE.get():
-            obs_trace.on_arena_release(root.nbytes)
         bucket = root.nbytes
         if bucket < _ARENA_MIN_BUCKET or bucket & (bucket - 1):
             return                       # not one of our pow2 buckets
@@ -619,6 +655,11 @@ class CacheArena:
             self._pools.setdefault(bucket, []).append(root)
             self._pooled_bytes += bucket
             self._pooled_ids.add(id(root))
+        # the trace event only AFTER the buffer is actually accepted into the
+        # pool: a rejected release (double release, over budget, foreign
+        # buffer) must not inflate another run's arena-release accounting
+        if obs_trace.ACTIVE.get():
+            obs_trace.on_arena_release(bucket)
 
     # -------------------------------------------------------------- observe
     @property

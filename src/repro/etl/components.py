@@ -116,6 +116,23 @@ class ArraySource(SourceComponent):
         canonicalized to 32-bit jax arrays)."""
         return self.get_backend().est_nbytes(self.columns)
 
+    def set_data(self, columns: Dict[str, np.ndarray]) -> None:
+        """Swap the table this source emits — the serving loop's feed point.
+        The column SET must match the original schema (runtime plans and
+        compiled segment kernels are built against it); the row count may
+        change freely between ticks."""
+        if set(columns) != set(self.columns):
+            missing = sorted(set(self.columns) - set(columns))
+            extra = sorted(set(columns) - set(self.columns))
+            raise ValueError(
+                f"source {self.name!r}: tick columns do not match the "
+                f"declared schema (missing {missing}, unexpected {extra})")
+        lens = {len(v) for v in columns.values()}
+        if len(lens) > 1:
+            raise ValueError("ragged source columns")
+        self.columns = dict(columns)
+        self._n = lens.pop() if lens else 0
+
     def chunks(self, chunk_rows: int) -> Iterator[SharedCache]:
         i = 0
         idx = 0
@@ -609,9 +626,35 @@ class Splitter(Component):
 # ---------------------------------------------------------------------------
 #  Block components
 # ---------------------------------------------------------------------------
+class _AggServeState:
+    """Cross-tick partial store for a serving-mode ``Aggregate``: per-group
+    MERGEABLE partials (sum/min/max/count — ``avg`` is decomposed into a sum
+    and a count and divided only at emit) kept as host scalars in their
+    backend dtype, so merging a tick is the same dtype-preserving arithmetic
+    the backend's one-shot reduce performs."""
+
+    __slots__ = ("index", "keys", "partials")
+
+    def __init__(self, partial_names: Sequence[str]):
+        self.index: Dict[tuple, int] = {}      # group key tuple -> position
+        self.keys: List[tuple] = []            # group key tuples, insertion order
+        self.partials: Dict[str, list] = {p: [] for p in partial_names}
+
+
+#: internal partial-name separator — ``\x00`` cannot appear in a user column
+_PARTIAL_SEP = "\x00"
+
+
 class Aggregate(BlockComponent):
     """Group-by aggregation — the paper's canonical block component
-    (sum/avg/min/max).  Accumulates all input caches, then reduces."""
+    (sum/avg/min/max).  Accumulates all input caches, then reduces.
+
+    Serving mode (``begin_serving``/``end_serving``): ``finish`` becomes an
+    incremental upsert instead of a one-shot block reduce — the tick's rows
+    are reduced with the normal backend kernel, merged into a persistent
+    per-group partial store, and the emitted cache is the DELTA: every group
+    touched this tick with its current merged value (an upsert row retracts
+    the group's previously emitted value)."""
 
     #: segment fusion may extend a row-sync chain through this component:
     #: the fused segment defers its keep-mask (no per-chunk d2h) and finish()
@@ -629,6 +672,7 @@ class Aggregate(BlockComponent):
                 raise ValueError(f"unknown agg op {op!r}")
         self.aggs = {out: (_col_name(col), op)
                      for out, (col, op) in aggs.items()}
+        self._serving: Optional[_AggServeState] = None
 
     def produced_columns(self) -> frozenset:
         return frozenset(self.group_by) | frozenset(self.aggs)
@@ -641,6 +685,91 @@ class Aggregate(BlockComponent):
         # aggregation REPLACES the schema: group keys + aggregate outputs
         return self.produced_columns()
 
+    # ------------------------------------------------------------ serving
+    def _partial_plan(self) -> Dict[str, Tuple[str, str]]:
+        """Mergeable-partial spec for the serving tick reduce: partial name
+        -> (input column, op).  ``avg`` is not mergeable and decomposes into
+        a sum partial and a count partial (divided at emit); every other op
+        merges with itself."""
+        plan: Dict[str, Tuple[str, str]] = {}
+        for out, (col, op) in self.aggs.items():
+            if op == "avg":
+                plan[out + _PARTIAL_SEP + "sum"] = (col, "sum")
+                plan[out + _PARTIAL_SEP + "count"] = (col, "count")
+            else:
+                plan[out] = (col, op)
+        return plan
+
+    def begin_serving(self) -> None:
+        """Enter serving mode with a fresh cross-tick partial store."""
+        self._serving = _AggServeState(list(self._partial_plan()))
+
+    def end_serving(self) -> None:
+        """Leave serving mode and drop the partial store — the component is
+        immediately reusable for ordinary batch runs."""
+        self._serving = None
+
+    def _serving_finish(self, merged: SharedCache) -> SharedCache:
+        st = self._serving
+        plan = self._partial_plan()
+        n = merged.n
+        if n == 0:
+            # empty tick: nothing merges, the delta is empty (same dtype
+            # conventions as the batch empty path)
+            cols = {g: np.array([], dtype=np.int64) for g in self.group_by}
+            for out in self.aggs:
+                cols[out] = np.array([], dtype=np.float64)
+            return SharedCache(cols, 0)
+        bk = self.get_backend()
+        group_cols, part_cols = bk.groupby_reduce(
+            [merged.col(g) for g in self.group_by],
+            {p: (merged.col(col), op) for p, (col, op) in plan.items()},
+            n)
+        group_h = [np.asarray(bk.to_host(c)) for c in group_cols]
+        part_h = {p: np.asarray(bk.to_host(c)) for p, c in part_cols.items()}
+        merged.recycle()            # tick-loop steady state: buffers pool
+        n_groups = len(group_h[0]) if group_h else 1
+        # upsert the tick's reduced groups into the persistent store — the
+        # merge arithmetic stays in each partial's own dtype (numpy scalar
+        # ops of one dtype never promote), so merged partials are the same
+        # values the one-shot reduce computes on exactly-representable data
+        for r in range(n_groups):
+            key = tuple(c[r] for c in group_h)
+            pos = st.index.get(key)
+            if pos is None:
+                st.index[key] = len(st.keys)
+                st.keys.append(key)
+                for p in plan:
+                    st.partials[p].append(part_h[p][r])
+            else:
+                for p, (_, op) in plan.items():
+                    cur, new = st.partials[p][pos], part_h[p][r]
+                    if op == "min":
+                        st.partials[p][pos] = np.minimum(cur, new)
+                    elif op == "max":
+                        st.partials[p][pos] = np.maximum(cur, new)
+                    else:            # sum / count partials merge additively
+                        st.partials[p][pos] = cur + new
+        # the delta: every group touched this tick (already in the backend's
+        # lexicographic group order) with its current MERGED value — an
+        # upsert row supersedes the group's previously emitted value
+        cols = dict(zip(self.group_by, group_h))
+        rows = [st.index[tuple(c[r] for c in group_h)]
+                for r in range(n_groups)]
+        for out, (col, op) in self.aggs.items():
+            if op == "avg":
+                s = st.partials[out + _PARTIAL_SEP + "sum"]
+                cnt = st.partials[out + _PARTIAL_SEP + "count"]
+                # divide in the sum's dtype — the same single-rounding
+                # division the one-shot kernel performs
+                vals = [s[i] / s[i].dtype.type(cnt[i]) for i in rows]
+            else:
+                vals = [st.partials[out][i] for i in rows]
+            cols[out] = np.array(vals, dtype=vals[0].dtype)
+        self.rows_out += n_groups
+        return SharedCache(cols, n_groups)
+
+    # ------------------------------------------------------------ batch
     def finish(self, state: List[SharedCache]) -> SharedCache:
         merged = concat_caches(state, ordered=True, recycle_inputs=True)
         if SEGMENT_KEEP_MASK in merged.names:
@@ -651,6 +780,8 @@ class Aggregate(BlockComponent):
             merged.keep_columns(
                 [c for c in merged.names if c != SEGMENT_KEEP_MASK])
             merged.compact(mask)
+        if self._serving is not None:
+            return self._serving_finish(merged)
         n = merged.n
         if n == 0:
             cols = {g: np.array([], dtype=np.int64) for g in self.group_by}
@@ -755,7 +886,13 @@ class CollectSink(SinkComponent):
     def result(self) -> Dict[str, np.ndarray]:
         with self._lock:
             caches = sorted(self._buf, key=lambda c: c.split_index)
-            return concat_caches(caches, ordered=False).to_dict()
+            out = concat_caches(caches, ordered=False)
+            table = out.to_dict()        # to_dict copies: recycling is safe
+            # return the concat's arena buffers instead of dropping them —
+            # a per-tick result() in a resident serving session would
+            # otherwise miss-allocate fresh buffers on every single tick
+            out.recycle()
+            return table
 
     def clear(self) -> None:
         with self._lock:

@@ -104,9 +104,17 @@ class Tracer:
     the tracer is in scope): the engines flip it on exactly where they open
     their per-run ``cache_stats_scope``, so ``metrics`` counters cover the
     identical window as the run's ``CacheStats`` — exact reconciliation.
+
+    Event retention is capped (``max_events``, default
+    ``REPRO_TRACE_MAX_EVENTS``): once the buffer exceeds the cap the OLDEST
+    half rotates out (``dropped_events`` counts the loss).  A finite batch
+    run never comes near the cap; a resident serving session emitting spans
+    for thousands of ticks stays bounded instead of growing for the life of
+    the process.  Metric counters are monotonic scalars and never rotate.
     """
 
-    def __init__(self, name: str = "trace", measuring: bool = True):
+    def __init__(self, name: str = "trace", measuring: bool = True,
+                 max_events: Optional[int] = None):
         self.name = name
         self.measuring = measuring
         self.metrics = MetricsRegistry()
@@ -114,6 +122,9 @@ class Tracer:
         self.meta: Dict[str, object] = {}
         self._lock = threading.Lock()
         self.thread_names: Dict[int, str] = {}
+        self.max_events = (config.trace_max_events()
+                           if max_events is None else max(0, int(max_events)))
+        self.dropped_events = 0
 
     def emit(self, ph: str, cat: str, name: str, ts_us: float,
              dur_us: Optional[float] = None,
@@ -129,6 +140,12 @@ class Tracer:
             if tid not in self.thread_names:
                 self.thread_names[tid] = threading.current_thread().name
             self.events.append(ev)
+            if self.max_events and len(self.events) > self.max_events:
+                # rotate the oldest half out in one bulk delete (amortized
+                # O(1) per emit) rather than trimming one event per call
+                drop = len(self.events) - self.max_events // 2
+                del self.events[:drop]
+                self.dropped_events += drop
 
     # ------------------------------------------------------------- exports
     def to_chrome(self, pid: int = 0) -> List[dict]:
@@ -400,23 +417,40 @@ def on_wait(kind: str, t0: float, t1: float, **args) -> None:
 class _TraceFile:
     """Process-wide accumulator: each exported run becomes its own Perfetto
     process in one JSON file, so a whole benchmark session lands in a single
-    artifact."""
+    artifact.
+
+    Size-capped rotation: the file retains at most ``REPRO_TRACE_MAX_EVENTS``
+    events ACROSS runs — once a new export pushes the total past the cap,
+    the oldest retained runs rotate out (the newest run always stays, even
+    oversized).  Historically ``_runs`` grew for the life of the process,
+    which a per-run CLI never noticed but a resident serving session turns
+    into an unbounded leak."""
 
     def __init__(self) -> None:
         self._lock = threading.Lock()
         self._runs: List[Tracer] = []
+        self.rotated_runs = 0
 
     def add_and_flush(self, tracer: Tracer, path: str) -> str:
+        cap = config.trace_max_events()
         with self._lock:
             self._runs.append(tracer)
+            if cap:
+                while (len(self._runs) > 1
+                       and sum(len(tr.events) for tr in self._runs) > cap):
+                    self._runs.pop(0)
+                    self.rotated_runs += 1
             events: List[dict] = []
             for pid, tr in enumerate(self._runs, start=1):
                 events.extend(tr.to_chrome(pid=pid))
-            runs_meta = [dict(tr.meta) for tr in self._runs]
+            runs_meta = [dict(tr.meta, dropped_events=tr.dropped_events)
+                         for tr in self._runs]
+            rotated = self.rotated_runs
         payload = {
             "traceEvents": events,
             "displayTimeUnit": "ms",
-            "otherData": {"producer": "repro.obs", "runs": runs_meta},
+            "otherData": {"producer": "repro.obs", "runs": runs_meta,
+                          "rotated_runs": rotated},
         }
         with open(path, "w") as f:
             json.dump(payload, f)

@@ -32,13 +32,16 @@ registry, ``OptimizeOptions``, calibration and the metadata store:
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, replace
-from typing import Dict, Optional, Sequence, Tuple
+import time
+from dataclasses import dataclass, field, replace
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from .core import (Dataflow, EngineRun, MetadataStore, OptimizedEngine,
-                   OptimizeOptions, OrdinaryEngine, StreamingEngine)
+                   OptimizeOptions, OrdinaryEngine, ServingEngine,
+                   StreamingEngine)
+from .core import config as _config
 from .core.component import StageBoundary
 from .core.optimizer import FlowStatistics, run_calibration
 from .core.planner import infer_schema
@@ -47,7 +50,8 @@ from .etl.components import (Aggregate, ArraySource, CollectSink, Converter,
                              Sort)
 from .etl.kettle import KettleEngine
 
-__all__ = ["Flow", "FlowBuilder", "Session", "SessionRun", "flow"]
+__all__ = ["Flow", "FlowBuilder", "ServeSession", "Session", "SessionRun",
+           "TickResult", "flow", "replay_deltas"]
 
 
 @dataclass
@@ -298,6 +302,47 @@ class Session:
         table = sink.result() if sink is not None else {}
         return SessionRun(run=run, table=table)
 
+    def serve(self, f, *, optimize: Optional[int] = None,
+              fuse: Optional[bool] = None, backend: Optional[str] = None,
+              **opts) -> "ServeSession":
+        """Open a resident serving session over a flow: the worker pool,
+        compiled segment kernels, device-resident dimension tables and arena
+        buffers stay warm while micro-batches stream in through
+        ``ServeSession.tick``.
+
+        The flow's ``ArraySource`` defines the tick schema (every tick must
+        supply exactly those columns); a terminal ``Aggregate`` switches to
+        incremental upsert deltas (see ``replay_deltas``).  Options mirror
+        ``run(engine="streaming", ...)`` except ``optimize >= 2`` (the
+        adaptive rewrite path re-plans per run and is rejected for resident
+        serving)."""
+        df, sink = self._flow_pair(f)
+        if sink is None or not hasattr(sink, "clear"):
+            raise ValueError("serve() needs a flow with a collecting sink "
+                             "(build with repro.flow(...)....sink())")
+        o = replace(self.defaults, **opts)
+        if backend is None:
+            backend = (self.backend if self.backend is not None
+                       else self.defaults.backend)
+        if backend is not None:
+            o = replace(o, backend=backend)
+        if optimize is not None:
+            o = replace(o, optimize_level=int(optimize))
+        if fuse is not None:
+            o = replace(o, fuse_segments=bool(fuse))
+        if o.optimize_level >= 2:
+            raise ValueError(
+                "serve() does not take optimize>=2: the cost-based adaptive "
+                "path re-plans per run, which defeats resident serving")
+        srcs = [c for c in df.vertices.values() if isinstance(c, ArraySource)]
+        if len(srcs) != 1:
+            raise ValueError(
+                f"serve() needs exactly one ArraySource to feed ticks into; "
+                f"flow {df.name!r} has {len(srcs)}")
+        sink.clear()
+        engine = ServingEngine(df, o, metadata=self.metadata)
+        return ServeSession(df, engine, srcs[0], sink)
+
     def calibrate(self, f, *, sample_rows: int = 4096,
                   backend: Optional[str] = None) -> FlowStatistics:
         """Run the cost-based optimizer's calibration pass (source prefix,
@@ -311,3 +356,164 @@ class Session:
         if self.metadata is not None:
             self.metadata.register_statistics(df, stats)
         return stats
+
+
+# ---------------------------------------------------------------------------
+#  Resident serving
+# ---------------------------------------------------------------------------
+@dataclass
+class TickResult:
+    """One micro-batch through a resident serving session."""
+    #: 0-based tick index
+    tick: int
+    #: rows ingested this tick
+    rows_in: int
+    #: emitted delta table — appended rows for row-sync flows, upserted
+    #: groups (current merged values) for terminal-Aggregate flows
+    delta: Dict[str, np.ndarray]
+    #: the session's high-water mark after this tick (None if never given)
+    watermark: Optional[float]
+    #: wall-clock seconds for the tick
+    wall_s: float
+    #: per-tick cache-stats snapshot (copies / transfers / arena / compiles)
+    cache_stats: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def rows_out(self) -> int:
+        if not self.delta:
+            return 0
+        return len(next(iter(self.delta.values())))
+
+
+class ServeSession:
+    """A resident serving loop: one warm worker pool + compiled kernels +
+    device caches, fed by ``tick(columns, watermark=...)``.
+
+    Watermarks are monotone: a tick whose watermark regresses below the
+    session high-water mark raises (``REPRO_SERVE_STRICT_WATERMARK=1``,
+    the default) or is clamped up to it (``=0``).  ``close()`` drains the
+    pool and returns the session summary; the flow itself stays reusable
+    (``Session.run`` / a fresh ``serve()`` both work afterwards).
+
+    Usable as a context manager:
+
+        with session.serve(f, fuse=True) as srv:
+            for batch, wm in source_feed:
+                delta = srv.tick(batch, watermark=wm).delta
+    """
+
+    def __init__(self, flow: Dataflow, engine: ServingEngine,
+                 source: ArraySource, sink: CollectSink):
+        self.flow = flow
+        self.engine = engine
+        self.source = source
+        self.sink = sink
+        self.watermark: Optional[float] = None
+        self._closed = False
+        self._summary: Dict[str, object] = {}
+        #: bounded record of recent TickResults (REPRO_SERVE_HISTORY)
+        self.history: List[TickResult] = []
+
+    # ------------------------------------------------------------------ api
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    @property
+    def ticks(self) -> int:
+        return self.engine.ticks
+
+    def tick(self, columns: Dict[str, np.ndarray], *,
+             watermark: Optional[float] = None) -> TickResult:
+        """Ingest one micro-batch and return the emitted delta."""
+        if self._closed:
+            raise RuntimeError(
+                f"serving session for flow {self.flow.name!r} is closed")
+        lag: Optional[float] = None
+        if watermark is not None:
+            watermark = float(watermark)
+            if self.watermark is not None and watermark < self.watermark:
+                if _config.serve_strict_watermark():
+                    raise ValueError(
+                        f"watermark regressed: {watermark} < high-water mark "
+                        f"{self.watermark} (set "
+                        f"{_config.ENV_SERVE_STRICT_WATERMARK}=0 to clamp "
+                        f"instead)")
+                watermark = self.watermark
+            self.watermark = watermark
+            lag = max(0.0, time.time() - watermark)
+        # an aborted previous tick may have left partial per-split rows
+        # buffered in the sink — they belong to a tick that FAILED, so they
+        # must never leak into this tick's delta
+        self.sink.clear()
+        self.source.set_data(columns)
+        rows_in = self.source.columns and len(
+            next(iter(self.source.columns.values()))) or 0
+        info = self.engine.tick(watermark_lag=lag)
+        delta = self.sink.result()
+        self.sink.clear()
+        result = TickResult(tick=info["tick"], rows_in=int(rows_in),
+                            delta=delta, watermark=self.watermark,
+                            wall_s=info["wall_s"],
+                            cache_stats=info["cache_stats"])
+        self.history.append(result)
+        cap = _config.serve_history()
+        if len(self.history) > cap:
+            del self.history[:len(self.history) - cap]
+        return result
+
+    def close(self) -> Dict[str, object]:
+        """Stop serving: drain the pool, export the session trace (if
+        tracing), and leave the flow reusable.  Idempotent."""
+        if self._closed:
+            return dict(self._summary)
+        self._summary = self.engine.close()
+        self._closed = True
+        return dict(self._summary)
+
+    # -------------------------------------------------------- context mgmt
+    def __enter__(self) -> "ServeSession":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def replay_deltas(deltas: Iterable[Union[TickResult, Dict[str, np.ndarray]]],
+                  group_by: Optional[Sequence[str]] = None
+                  ) -> Dict[str, np.ndarray]:
+    """Reassemble the per-tick deltas of a serving session into the table
+    the equivalent one-shot batch run would produce.
+
+    For row-sync flows (no terminal Aggregate) pass ``group_by=None``: the
+    deltas are append-only and simply concatenate in tick order.  For a
+    terminal-Aggregate flow pass its group columns: each delta upserts the
+    groups it touches (last write wins) and the result is sorted into the
+    batch engines' lexicographic-ascending group order."""
+    tables = [d.delta if isinstance(d, TickResult) else d for d in deltas]
+    tables = [t for t in tables
+              if t and len(next(iter(t.values()))) > 0]
+    if not tables:
+        return {}
+    cols = list(tables[0])
+    for t in tables[1:]:
+        if set(t) != set(cols):
+            raise ValueError(
+                f"delta column sets differ: {sorted(cols)} vs {sorted(t)}")
+    cat = {c: np.concatenate([t[c] for t in tables]) for c in cols}
+    if group_by is None:
+        return cat
+    missing = [c for c in group_by if c not in cat]
+    if missing:
+        raise KeyError(f"group_by columns {missing} not in the deltas "
+                       f"(have {sorted(cols)})")
+    keys = [cat[c] for c in group_by]
+    last: Dict[tuple, int] = {}
+    for i in range(len(cat[cols[0]])):
+        last[tuple(k[i].item() for k in keys)] = i
+    idx = np.fromiter(last.values(), dtype=np.int64, count=len(last))
+    sel = {c: cat[c][idx] for c in cols}
+    if group_by:
+        order = np.lexsort(tuple(sel[c] for c in group_by)[::-1])
+        sel = {c: sel[c][order] for c in cols}
+    return sel

@@ -257,9 +257,9 @@ def test_streaming_preserves_order_on_pure_rowsync_staged_flow():
     rows = 20_000
     flow = Dataflow("staged")
     src = flow.add(ArraySource("src", {"x": np.arange(rows, dtype=np.int64)}))
-    f1 = flow.add(Filter("keep_even", lambda c, r: c.col("x")[r] % 2 == 0))
+    f1 = flow.add(Filter("keep_even", lambda c, r: c.col("x")[r] % 2 == 0, reads=["x"]))
     cut = flow.add(StageBoundary("cut"))
-    f2 = flow.add(Filter("keep_div4", lambda c, r: c.col("x")[r] % 4 == 0))
+    f2 = flow.add(Filter("keep_div4", lambda c, r: c.col("x")[r] % 4 == 0, reads=["x"]))
     sink = flow.add(CollectSink("sink"))
     flow.connect(src, f1)
     flow.connect(f1, cut)

@@ -23,7 +23,8 @@ def _cache(**cols):
 def test_filter_compacts_in_place():
     c = _cache(x=np.arange(10, dtype=np.int64))
     buf = c.columns["x"]
-    Filter("f", lambda ca, r: ca.col("x")[r] % 2 == 0).process(c)
+    Filter("f", lambda ca, r: ca.col("x")[r] % 2 == 0,
+           reads=["x"]).process(c)
     assert c.n == 5
     np.testing.assert_array_equal(c.col("x"), [0, 2, 4, 6, 8])
     assert c.columns["x"] is buf           # same buffer: shared caching
@@ -32,7 +33,7 @@ def test_filter_compacts_in_place():
 def test_filter_multithreaded_ranges_equal_single():
     rng = np.random.default_rng(0)
     x = rng.integers(0, 100, 1000)
-    f = Filter("f", lambda ca, r: ca.col("x")[r] > 50)
+    f = Filter("f", lambda ca, r: ca.col("x")[r] > 50, reads=["x"])
     c1 = _cache(x=x.copy())
     f.process(c1)
     c2 = _cache(x=x.copy())
@@ -59,8 +60,8 @@ def test_lookup_row_filter_marks_unqualified():
 
 def test_expression_and_project_and_converter():
     c = _cache(a=np.array([1, 2]), b=np.array([10, 20]))
-    Expression("e", "s", lambda ca, r: ca.col("a")[r] + ca.col("b")[r]
-               ).process(c)
+    Expression("e", "s", lambda ca, r: ca.col("a")[r] + ca.col("b")[r],
+               reads=["a", "b"]).process(c)
     np.testing.assert_array_equal(c.col("s"), [11, 22])
     Converter("cv", {"s": np.float32}).process(c)
     assert c.col("s").dtype == np.float32

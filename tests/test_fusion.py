@@ -176,8 +176,9 @@ def test_fused_segment_provenance_and_spec():
     assert seg.kernel_input_columns() == frozenset({"k"})
     assert not seg.row_preserving          # contains a row-dropper
     assert seg.spec()["members"] == "lk,ex,fl"
-    # undeclared reads poison the declared sets
-    ex2 = Expression("ex2", "z", lambda c, r: c.col("y")[r])
+    # undeclared reads poison the declared sets (and warn by contract)
+    with pytest.warns(DeprecationWarning, match="reads="):
+        ex2 = Expression("ex2", "z", lambda c, r: c.col("y")[r])
     seg2 = FusedSegment.from_components([lk, ex, ex2])
     assert seg2.consumed_columns() is None
     assert seg2.kernel_input_columns() is None

@@ -252,3 +252,64 @@ def test_results_identical_traced_vs_untraced(data):
     for field in ("copies", "bytes_copied", "h2d_transfers", "d2h_transfers",
                   "dispatch_calls"):
         assert getattr(run1, field) == getattr(run2, field), field
+
+
+# ---------------------------------------------------------------------------
+#  Bounded retention (resident serving must not leak trace memory)
+# ---------------------------------------------------------------------------
+def test_tracer_event_cap_rotates_oldest_half():
+    tr = obs_trace.Tracer(max_events=100)
+    for i in range(1000):
+        tr.emit("X", "t", f"ev{i}", ts_us=float(i), dur_us=1.0)
+    assert len(tr.events) <= 100
+    assert tr.dropped_events == 1000 - len(tr.events)
+    # the SURVIVORS are the newest events, in order
+    names = [e["name"] for e in tr.events]
+    assert names == [f"ev{i}" for i in range(1000 - len(names), 1000)]
+
+
+def test_tracer_cap_zero_disables_rotation():
+    tr = obs_trace.Tracer(max_events=0)
+    for i in range(500):
+        tr.emit("X", "t", "e", ts_us=float(i))
+    assert len(tr.events) == 500 and tr.dropped_events == 0
+
+
+def test_tracer_cap_defaults_from_env(monkeypatch):
+    monkeypatch.setenv("REPRO_TRACE_MAX_EVENTS", "7")
+    assert obs_trace.Tracer().max_events == 7
+
+
+def test_trace_file_rotates_oldest_runs(tmp_path, monkeypatch):
+    """The process trace file keeps at most REPRO_TRACE_MAX_EVENTS events
+    across runs: old runs rotate out, the newest run always survives."""
+    monkeypatch.setenv("REPRO_TRACE_MAX_EVENTS", "50")
+    path = tmp_path / "rot.json"
+    tf = obs_trace._TraceFile()
+    for r in range(10):
+        tr = obs_trace.Tracer(name=f"run{r}", max_events=0)
+        tr.meta = {"flow": f"run{r}"}
+        for i in range(20):
+            tr.emit("X", "t", "e", ts_us=float(i), dur_us=1.0)
+        tf.add_and_flush(tr, str(path))
+    assert tf.rotated_runs == 8              # 10 runs of 20 events, cap 50
+    payload = json.loads(path.read_text())
+    kept = [m["flow"] for m in payload["otherData"]["runs"]]
+    assert kept == ["run8", "run9"]          # newest runs retained, in order
+    assert payload["otherData"]["rotated_runs"] == 8
+
+
+def test_trace_file_keeps_oversized_newest_run(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_TRACE_MAX_EVENTS", "10")
+    path = tmp_path / "big.json"
+    tf = obs_trace._TraceFile()
+    small = obs_trace.Tracer(name="small", max_events=0)
+    small.emit("X", "t", "e", ts_us=0.0)
+    tf.add_and_flush(small, str(path))
+    big = obs_trace.Tracer(name="big", max_events=0)
+    big.meta = {"flow": "big"}
+    for i in range(100):                     # alone it already exceeds the cap
+        big.emit("X", "t", "e", ts_us=float(i))
+    tf.add_and_flush(big, str(path))
+    payload = json.loads(path.read_text())
+    assert [m["flow"] for m in payload["otherData"]["runs"]] == ["big"]

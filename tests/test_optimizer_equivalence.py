@@ -13,6 +13,8 @@ under both ``numpy`` and ``jax``), so every rewrite is exercised against
 both operator backends.  ``REPRO_OPTEQ_EXAMPLES`` scales the example count
 (default 100 per engine property, per the acceptance bar).
 """
+import warnings
+
 import numpy as np
 import pytest
 
@@ -59,11 +61,18 @@ def build_flow(spec):
             col_i, thresh, declared = op[1:]
             col = avail[col_i % len(avail)]
             reads = [col] if declared else None
-            comps.append(Filter(
-                f"filter{i}",
-                # default-arg binding: each lambda captures ITS column
-                lambda c, rows, col=col, t=thresh: c.col(col)[rows] % 97 < t,
-                reads=reads))
+            with warnings.catch_warnings():
+                if not declared:
+                    # the undeclared-reads path is deliberately part of the
+                    # property space (rewrites must REFUSE on it) — silence
+                    # the contract DeprecationWarning for these specs only
+                    warnings.simplefilter("ignore", DeprecationWarning)
+                comps.append(Filter(
+                    f"filter{i}",
+                    # default-arg binding: each lambda captures ITS column
+                    lambda c, rows, col=col, t=thresh:
+                        c.col(col)[rows] % 97 < t,
+                    reads=reads))
         elif kind == "lookup":
             dim_seed, key_i, drop = op[1:]
             keyish = [c for c in avail if c.startswith("k")] or avail

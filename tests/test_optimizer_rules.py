@@ -164,7 +164,8 @@ def test_filter_commute_refuses_dependent_reads():
 
 
 def test_filter_commute_refuses_undeclared_reads():
-    flow, _ = _commute_flow(reads=None)
+    with pytest.warns(DeprecationWarning, match="reads="):
+        flow, _ = _commute_flow(reads=None)
     opt = CostBasedOptimizer(flow, _stats(flow))
     ok, reason = opt.can_commute("lk", "filt")
     assert not ok and "undeclared read set" in reason

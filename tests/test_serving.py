@@ -1,0 +1,575 @@
+"""Resident serving: ``Session.serve`` micro-batch ingestion with
+incremental aggregates, plus the long-lived-session bug sweep.
+
+The core property: feeding a table through ``serve()`` tick by tick and
+replaying the emitted deltas (``replay_deltas``) is BYTE-IDENTICAL to the
+one-shot streaming batch run of the same flow — on the active backend
+(the CI matrix runs this file under both ``numpy`` and ``jax``), fused and
+unfused, for hypothesis-generated flows and deterministic regressions.
+
+The long-lived-session sweep pins the bugs a per-run CLI never surfaces:
+unbounded tracer growth, sink pollution after an aborted tick, stale
+split-gate state across ticks, arena buffers acquired in one run and
+released in another.
+"""
+import numpy as np
+import pytest
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:        # pragma: no cover — env without the `test` extra
+    from _hypothesis_compat import given, settings, st
+
+import repro
+from repro.core import GLOBAL_ARENA, config
+from repro.core.shared_cache import CacheStats, cache_stats_scope
+from repro.session import replay_deltas
+
+ROWS = 400
+KEYSPACE = 30
+N_EXAMPLES = max(config.opteq_examples() // 5, 10)
+
+
+# ---------------------------------------------------------------------------
+#  spec -> (serve flow, batch flow) builders
+# ---------------------------------------------------------------------------
+def _make_data(seed, rows=ROWS):
+    r = np.random.RandomState(seed)
+    # bounded integer values: every partial sum a serving tick can merge
+    # stays exactly representable in float32 (< 2^24), so incremental
+    # tick-by-tick accumulation is bit-identical to the one-shot reduction
+    return {
+        "k0": r.randint(1, KEYSPACE + 1, rows).astype(np.int64),
+        "g": r.randint(0, 5, rows).astype(np.int64),
+        "v0": r.randint(0, 100, rows).astype(np.int64),
+        "v1": r.randint(-50, 50, rows).astype(np.int64),
+    }
+
+
+def _dim(dim_seed, drop):
+    rd = np.random.RandomState(dim_seed)
+    nk = KEYSPACE if not drop else KEYSPACE // 2    # some unmatched keys
+    return (np.arange(1, nk + 1, dtype=np.int64),
+            {"pay": rd.randint(0, 9, nk).astype(np.int64)})
+
+
+def build_serving_flow(spec, data, empty_source):
+    """Construct a fresh Flow from a drawn spec.  Deterministic: the same
+    spec always builds the same flow; ``empty_source=True`` builds the
+    serving variant (schema-only source, fed via ticks)."""
+    seed, ops, agg = spec
+    src = ({c: a[:0] for c, a in data.items()} if empty_source else data)
+    b = repro.flow(f"serve-{seed}").source(src)
+    avail = list(data.keys())
+    for i, op in enumerate(ops):
+        kind = op[0]
+        if kind == "filter":
+            col_i, thresh = op[1:]
+            col = avail[col_i % len(avail)]
+            b = b.filter(repro.col(col) % 97 < thresh)
+        elif kind == "lookup":
+            dim_seed, key_i, drop = op[1:]
+            key = avail[key_i % len(avail)]
+            out = f"l{i}"
+            b = b.lookup(_dim(dim_seed, drop), key, {out: "pay"})
+            avail.append(out)
+        elif kind == "derive":
+            a_i, b_i, mul = op[1:]
+            a, c = avail[a_i % len(avail)], avail[b_i % len(avail)]
+            out = f"e{i}"
+            # factor capped at 3: chained multiplying derives must keep every
+            # per-group partial sum < 2^24 so float32 accumulation (jax) is
+            # exact and tick-by-tick merging stays byte-identical
+            expr = (repro.col(a) * (repro.col(c) % 3 + 1) if mul
+                    else repro.col(a) + repro.col(c))
+            b = b.derive(out, expr)
+            avail.append(out)
+    group_by = None
+    if agg is not None:
+        g_i, v_i, agg_op = agg
+        group = avail[g_i % len(avail)]
+        val = avail[v_i % len(avail)]
+        aggs = {"out": (val, agg_op), "cnt": (val, "count")}
+        b = b.aggregate([group], aggs)
+        group_by = [group]
+    return b.sink(), group_by
+
+
+@st.composite
+def serve_spec(draw):
+    seed = draw(st.integers(0, 10_000))
+    n_ops = draw(st.integers(0, 4))
+    ops = []
+    for _ in range(n_ops):
+        kind = draw(st.sampled_from(["filter", "lookup", "derive", "derive"]))
+        if kind == "filter":
+            ops.append(("filter", draw(st.integers(0, 9)),
+                        draw(st.integers(10, 90))))
+        elif kind == "lookup":
+            ops.append(("lookup", draw(st.integers(0, 1000)),
+                        draw(st.integers(0, 3)),
+                        draw(st.sampled_from([True, False]))))
+        else:
+            ops.append(("derive", draw(st.integers(0, 9)),
+                        draw(st.integers(0, 9)),
+                        draw(st.sampled_from([True, False]))))
+    agg = None
+    if draw(st.sampled_from([True, False])):
+        agg = (draw(st.integers(0, 9)), draw(st.integers(0, 9)),
+               draw(st.sampled_from(["sum", "avg", "min", "max", "count"])))
+    return (seed, ops, agg)
+
+
+def _serve_vs_batch(spec, ticks=3, fuse=None, **serve_opts):
+    seed, _, _ = spec
+    data = _make_data(seed)
+
+    batch, group_by = build_serving_flow(spec, data, empty_source=False)
+    session = repro.Session(metadata=None)
+    ref = session.run(batch, engine="streaming", fuse=fuse).table
+
+    serve_f, _ = build_serving_flow(spec, data, empty_source=True)
+    splits = np.array_split(np.arange(ROWS), ticks)
+    deltas = []
+    with session.serve(serve_f, fuse=fuse, **serve_opts) as srv:
+        for idx in splits:
+            deltas.append(srv.tick({c: a[idx] for c, a in data.items()}))
+        srv.close()
+
+    rep = replay_deltas(deltas, group_by=group_by)
+    if not ref or not len(next(iter(ref.values()))):
+        total = sum(r.rows_out for r in deltas)
+        assert total == 0, f"batch empty but serve emitted {total} rows"
+        return
+    assert set(rep) == set(ref), f"column sets differ (spec={spec})"
+    for k in ref:
+        assert rep[k].dtype == ref[k].dtype, \
+            f"dtype of {k}: {rep[k].dtype} != {ref[k].dtype} (spec={spec})"
+        assert rep[k].tobytes() == ref[k].tobytes(), \
+            f"column {k} differs from the batch run (spec={spec})"
+
+
+# ---------------------------------------------------------------------------
+#  the property: serve == batch, byte for byte
+# ---------------------------------------------------------------------------
+@given(serve_spec())
+@settings(max_examples=N_EXAMPLES, deadline=None)
+def test_serve_replay_byte_identical_to_batch(spec):
+    """Replaying a serving session's per-tick deltas reproduces the one-shot
+    batch run byte-for-byte, for every generated flow (active backend via
+    REPRO_BACKEND; fusion follows REPRO_FUSION)."""
+    _serve_vs_batch(spec)
+
+
+@given(serve_spec())
+@settings(max_examples=max(N_EXAMPLES // 2, 5), deadline=None)
+def test_serve_replay_byte_identical_fused(spec):
+    """Same property with segment fusion forced ON (compiled segment
+    kernels resident across ticks)."""
+    _serve_vs_batch(spec, fuse=True)
+
+
+# -------------------------------------------------- deterministic regressions
+def test_serve_all_agg_ops_single_and_many_ticks():
+    """Every aggregate op through serving upserts, one tick and many."""
+    for agg_op in ("sum", "avg", "min", "max", "count"):
+        for ticks in (1, 4):
+            _serve_vs_batch((17, [("lookup", 3, 0, True),
+                                  ("derive", 2, 4, True)],
+                             (1, 5, agg_op)), ticks=ticks)
+
+
+def test_serve_row_sync_flow_appends_in_tick_order():
+    """No terminal aggregate: deltas are pure appends; concatenating them in
+    tick order IS the batch output."""
+    _serve_vs_batch((23, [("filter", 2, 55), ("derive", 0, 2, False)], None),
+                    ticks=4)
+
+
+def test_serve_empty_ticks_and_filter_drops_everything():
+    data = _make_data(31)
+    spec = (31, [("filter", 2, 1)], (1, 2, "sum"))   # ~1% survive
+    serve_f, group_by = build_serving_flow(spec, data, empty_source=True)
+    session = repro.Session(metadata=None)
+    deltas = []
+    with session.serve(serve_f) as srv:
+        r = srv.tick({c: a[:0] for c, a in data.items()})   # fully empty tick
+        assert r.rows_in == 0 and r.rows_out == 0
+        deltas.append(r)
+        for idx in np.array_split(np.arange(ROWS), 3):
+            deltas.append(srv.tick({c: a[idx] for c, a in data.items()}))
+    batch, _ = build_serving_flow(spec, data, empty_source=False)
+    ref = session.run(batch, engine="streaming").table
+    rep = replay_deltas(deltas, group_by=group_by)
+    if len(next(iter(ref.values()))):
+        for k in ref:
+            assert rep[k].tobytes() == ref[k].tobytes(), k
+    else:
+        assert sum(r.rows_out for r in deltas) == 0
+
+
+def test_serve_varying_tick_sizes():
+    """Ragged micro-batches (every tick a different row count) stay
+    byte-identical — the pow2 layout bucketing keeps the jitted shapes
+    bounded but must not change results."""
+    data = _make_data(41)
+    spec = (41, [("derive", 2, 3, True)], (0, 4, "sum"))
+    serve_f, group_by = build_serving_flow(spec, data, empty_source=True)
+    session = repro.Session(metadata=None)
+    sizes = [7, 130, 1, 90, 172]
+    assert sum(sizes) == ROWS
+    bounds = np.cumsum([0] + sizes)
+    deltas = []
+    with session.serve(serve_f) as srv:
+        for lo, hi in zip(bounds, bounds[1:]):
+            deltas.append(srv.tick({c: a[lo:hi] for c, a in data.items()}))
+    batch, _ = build_serving_flow(spec, data, empty_source=False)
+    ref = session.run(batch, engine="streaming").table
+    rep = replay_deltas(deltas, group_by=group_by)
+    for k in ref:
+        assert rep[k].dtype == ref[k].dtype, k
+        assert rep[k].tobytes() == ref[k].tobytes(), k
+
+
+# ---------------------------------------------------------------------------
+#  resident-state contract: warm ticks recompile and re-upload nothing
+# ---------------------------------------------------------------------------
+def test_warm_ticks_zero_recompiles_and_dim_uploads():
+    from repro.core import available_backends
+    if "jax" not in available_backends():      # pragma: no cover
+        pytest.skip("jax backend unavailable")
+    data = _make_data(7)
+    spec = (7, [("lookup", 3, 0, False), ("derive", 0, 4, True)],
+            (1, 5, "sum"))
+    serve_f, _ = build_serving_flow(spec, data, empty_source=True)
+    session = repro.Session(backend="jax", metadata=None)
+    with session.serve(serve_f, fuse=True) as srv:
+        ticks = [srv.tick({c: a[idx] for c, a in data.items()})
+                 for idx in np.array_split(np.arange(ROWS), 5)]
+    cold, warm = ticks[0], ticks[1:]
+    assert cold.cache_stats["segment_compiles"] >= 1
+    assert cold.cache_stats["dim_h2d_transfers"] >= 1
+    for t in warm:
+        assert t.cache_stats["segment_compiles"] == 0, \
+            f"tick {t.tick} recompiled a segment kernel"
+        assert t.cache_stats["dim_h2d_transfers"] == 0, \
+            f"tick {t.tick} re-uploaded a dim table"
+
+
+# ---------------------------------------------------------------------------
+#  watermark semantics
+# ---------------------------------------------------------------------------
+def _tiny_session(**opts):
+    data = _make_data(3, rows=40)
+    f, _ = build_serving_flow((3, [], None), data, empty_source=True)
+    return repro.Session(metadata=None).serve(f, **opts), data
+
+
+def test_watermark_regression_raises_by_default(monkeypatch):
+    monkeypatch.delenv(config.ENV_SERVE_STRICT_WATERMARK, raising=False)
+    srv, data = _tiny_session()
+    batch = {c: a[:5] for c, a in data.items()}
+    try:
+        srv.tick(batch, watermark=100.0)
+        with pytest.raises(ValueError, match="watermark regressed"):
+            srv.tick(batch, watermark=99.0)
+        assert srv.watermark == 100.0
+        # equal and advancing watermarks are fine
+        srv.tick(batch, watermark=100.0)
+        srv.tick(batch, watermark=101.5)
+        assert srv.watermark == 101.5
+    finally:
+        srv.close()
+
+
+def test_watermark_regression_clamps_when_lenient(monkeypatch):
+    monkeypatch.setenv(config.ENV_SERVE_STRICT_WATERMARK, "0")
+    srv, data = _tiny_session()
+    batch = {c: a[:5] for c, a in data.items()}
+    try:
+        srv.tick(batch, watermark=100.0)
+        r = srv.tick(batch, watermark=42.0)     # clamped, not raised
+        assert r.watermark == 100.0
+        assert srv.watermark == 100.0
+    finally:
+        srv.close()
+
+
+def test_untimed_ticks_leave_watermark_none():
+    srv, data = _tiny_session()
+    try:
+        r = srv.tick({c: a[:5] for c, a in data.items()})
+        assert r.watermark is None and srv.watermark is None
+    finally:
+        srv.close()
+
+
+# ---------------------------------------------------------------------------
+#  lifecycle: validation, close, reuse
+# ---------------------------------------------------------------------------
+def test_serve_rejects_adaptive_optimizer():
+    data = _make_data(3, rows=40)
+    f, _ = build_serving_flow((3, [], None), data, empty_source=True)
+    with pytest.raises(ValueError, match="optimize"):
+        repro.Session(metadata=None).serve(f, optimize=2)
+
+
+def test_serve_rejects_mid_flow_blocking_component():
+    data = _make_data(3, rows=40)
+    f = (repro.flow("bad").source({c: a[:0] for c, a in data.items()})
+         .sort(["k0"]).derive("d", repro.col("v0") + 1).sink())
+    srv = repro.Session(metadata=None).serve(f)
+    with pytest.raises(ValueError, match="Sort"):
+        srv.tick({c: a[:5] for c, a in data.items()})
+    srv.close()
+
+
+def test_serve_rejects_non_terminal_aggregate():
+    data = _make_data(3, rows=40)
+    f = (repro.flow("bad-agg").source({c: a[:0] for c, a in data.items()})
+         .aggregate(["g"], {"s": ("v0", "sum")})
+         .derive("d", repro.col("s") + 1).sink())
+    srv = repro.Session(metadata=None).serve(f)
+    with pytest.raises(ValueError, match="sinks only"):
+        srv.tick({c: a[:5] for c, a in data.items()})
+    srv.close()
+
+
+def test_tick_schema_mismatch_names_columns():
+    srv, data = _tiny_session()
+    try:
+        bad = {c: a[:5] for c, a in data.items() if c != "v1"}
+        bad["zz"] = np.arange(5)
+        with pytest.raises(ValueError) as ei:
+            srv.tick(bad)
+        assert "v1" in str(ei.value) and "zz" in str(ei.value)
+    finally:
+        srv.close()
+
+
+def test_close_is_idempotent_and_tick_after_close_raises():
+    srv, data = _tiny_session()
+    srv.tick({c: a[:5] for c, a in data.items()})
+    s1 = srv.close()
+    s2 = srv.close()
+    assert s1["ticks"] == s2["ticks"] == 1
+    assert s1["engine"] == "serving"
+    with pytest.raises(RuntimeError, match="closed"):
+        srv.tick({c: a[:5] for c, a in data.items()})
+
+
+def test_flow_reusable_after_serving_session():
+    """close() ends serving mode: the SAME flow then batch-runs correctly,
+    and a fresh serve() on it works too."""
+    data = _make_data(29)
+    spec = (29, [("derive", 0, 2, False)], (1, 4, "sum"))
+    f, group_by = build_serving_flow(spec, data, empty_source=True)
+    session = repro.Session(metadata=None)
+
+    with session.serve(f) as srv:
+        deltas = [srv.tick({c: a[idx] for c, a in data.items()})
+                  for idx in np.array_split(np.arange(ROWS), 2)]
+    first = replay_deltas(deltas, group_by=group_by)
+
+    # batch-run the same (serving) flow object with the full table
+    src = next(c for c in f.flow.vertices.values()
+               if type(c).__name__ == "ArraySource")
+    src.set_data(data)
+    batch = session.run(f, engine="streaming").table
+    for k in batch:
+        assert first[k].tobytes() == batch[k].tobytes(), k
+
+    # and a fresh serving session over the same flow
+    src.set_data({c: a[:0] for c, a in data.items()})
+    with session.serve(f) as srv2:
+        deltas2 = [srv2.tick({c: a[idx] for c, a in data.items()})
+                   for idx in np.array_split(np.arange(ROWS), 3)]
+    second = replay_deltas(deltas2, group_by=group_by)
+    for k in batch:
+        assert second[k].tobytes() == batch[k].tobytes(), k
+
+
+# ---------------------------------------------------------------------------
+#  abort mid-tick: the session survives and stays correct (bug sweep)
+# ---------------------------------------------------------------------------
+class _Exploding:
+    """Filter predicate that raises when armed (reads declared: no
+    DeprecationWarning, provenance stays visible)."""
+
+    def __init__(self):
+        self.armed = False
+
+    def __call__(self, cache, rows):
+        if self.armed:
+            raise RuntimeError("mid-tick failure injected")
+        return cache.col("v0")[rows] >= 0
+
+
+def test_abort_mid_tick_session_reusable(monkeypatch):
+    """A tick that dies mid-flight propagates the error, releases its
+    buffers guard-clean, and leaves the session fully usable: subsequent
+    ticks produce exactly the deltas they would have without the abort."""
+    monkeypatch.setenv("REPRO_CACHE_GUARD", "1")    # poisoned releases + guard
+    data = _make_data(37)
+    from repro.etl.components import Filter
+    bomb = _Exploding()
+    b = repro.flow("abortable").source({c: a[:0] for c, a in data.items()})
+    b._append(Filter("boom", bomb, reads=["v0"]))
+    f = (b.derive("d", repro.col("v0") + repro.col("v1"))
+          .aggregate(["g"], {"s": ("d", "sum"), "n": ("d", "count")})
+          .sink())
+    session = repro.Session(metadata=None)
+    splits = np.array_split(np.arange(ROWS), 3)
+    deltas = []
+    # fuse=False: a fused segment traces callables into the compiled kernel
+    # (pure row-local contract) — a STATEFUL raising predicate only fires
+    # unfused, which is exactly the executor abort path under test
+    with session.serve(f, fuse=False) as srv:
+        deltas.append(srv.tick({c: a[splits[0]] for c, a in data.items()}))
+        bomb.armed = True
+        with pytest.raises(RuntimeError, match="mid-tick failure"):
+            srv.tick({c: a[splits[1]] for c, a in data.items()})
+        bomb.armed = False
+        # the session keeps serving; the failed tick contributed nothing
+        deltas.append(srv.tick({c: a[splits[1]] for c, a in data.items()}))
+        deltas.append(srv.tick({c: a[splits[2]] for c, a in data.items()}))
+        srv.close()
+
+    ref_b = repro.flow("ref").source(data)
+    ref_b._append(Filter("boom-ref", _Exploding(), reads=["v0"]))
+    ref_f = (ref_b.derive("d", repro.col("v0") + repro.col("v1"))
+             .aggregate(["g"], {"s": ("d", "sum"), "n": ("d", "count")})
+             .sink())
+    ref = session.run(ref_f, engine="streaming").table
+    rep = replay_deltas(deltas, group_by=["g"])
+    for k in ref:
+        assert rep[k].tobytes() == ref[k].tobytes(), k
+
+
+def test_abort_mid_tick_row_sync_sink_not_polluted(monkeypatch):
+    """In a row-sync flow the sink receives per-split writes BEFORE the
+    abort fires — those partial rows must not leak into the next tick's
+    delta."""
+    monkeypatch.setenv("REPRO_CACHE_GUARD", "1")
+    data = _make_data(43)
+    from repro.etl.components import Filter
+
+    calls = {"n": 0}
+
+    def late_bomb(cache, rows, _c=calls):
+        _c["n"] += 1
+        if _c["n"] == 999:                      # re-armed via calls["n"]
+            raise RuntimeError("late failure")
+        return cache.col("v0")[rows] % 2 == 0
+
+    b = repro.flow("rowsync").source({c: a[:0] for c, a in data.items()})
+    b._append(Filter("maybe", late_bomb, reads=["v0"]))
+    f = b.derive("d", repro.col("v0") * 2).sink()
+    session = repro.Session(metadata=None)
+    splits = np.array_split(np.arange(ROWS), 2)
+    with session.serve(f, fuse=False) as srv:    # see abort test above
+        r1 = srv.tick({c: a[splits[0]] for c, a in data.items()})
+        # arm so the NEXT filter call fails: splits already flowed for tick 1
+        calls["n"] = 998
+        with pytest.raises(RuntimeError, match="late failure"):
+            srv.tick({c: a[splits[1]] for c, a in data.items()})
+        calls["n"] = 0
+        r2 = srv.tick({c: a[splits[1]] for c, a in data.items()})
+    # tick outputs must chain to exactly the batch result — no duplicated
+    # rows from the aborted attempt
+    got = replay_deltas([r1, r2])
+    rb = repro.flow("rowsync-ref").source(data)
+    rb._append(Filter("maybe-ref",
+                      lambda c, r: c.col("v0")[r] % 2 == 0, reads=["v0"]))
+    ref = session.run(rb.derive("d", repro.col("v0") * 2).sink(),
+                      engine="streaming").table
+    assert got["d"].tobytes() == ref["d"].tobytes()
+
+
+# ---------------------------------------------------------------------------
+#  arena + scoped stats across runs (bug sweep: cross-run lifetimes)
+# ---------------------------------------------------------------------------
+def test_arena_acquire_in_one_scope_release_in_another(monkeypatch):
+    """A buffer acquired under run A's stats scope and released under run
+    B's must not corrupt pool accounting or double-count in either scope —
+    and under REPRO_CACHE_GUARD=1 the release path must stay clean."""
+    monkeypatch.setenv("REPRO_CACHE_GUARD", "1")
+    with cache_stats_scope() as stats_a:
+        arr, root = GLOBAL_ARENA.acquire(np.int64, 4096)
+        arr[:] = 7
+    before = GLOBAL_ARENA.pooled_bytes
+    with cache_stats_scope() as stats_b:
+        GLOBAL_ARENA.release(root)
+    # release is not an acquire: neither scope gains hits/misses from it
+    assert stats_b.arena_hits == 0 and stats_b.arena_misses == 0
+    assert stats_a.arena_hits + stats_a.arena_misses >= 1
+    assert GLOBAL_ARENA.pooled_bytes >= before
+    # double release across yet another scope trips the guard loudly
+    with pytest.raises(RuntimeError, match="double release"):
+        GLOBAL_ARENA.release(root)
+
+
+def test_arena_double_release_ignored_without_guard(monkeypatch):
+    monkeypatch.delenv("REPRO_CACHE_GUARD", raising=False)
+    arr, root = GLOBAL_ARENA.acquire(np.float64, 512)
+    if root is None:                     # pragma: no cover — arena disabled
+        pytest.skip("arena disabled")
+    GLOBAL_ARENA.release(root)
+    pooled = GLOBAL_ARENA.pooled_bytes
+    GLOBAL_ARENA.release(root)           # silently ignored
+    assert GLOBAL_ARENA.pooled_bytes == pooled
+
+
+def test_arena_release_foreign_buffer_is_noop():
+    foreign = np.zeros(1024, np.uint8)[10:]      # view: not OWNDATA
+    pooled = GLOBAL_ARENA.pooled_bytes
+    GLOBAL_ARENA.release(foreign)
+    GLOBAL_ARENA.release(np.zeros(1000, np.uint8))   # not a pow2 bucket
+    assert GLOBAL_ARENA.pooled_bytes == pooled
+
+
+def test_scoped_stats_capture_serving_ticks_exactly():
+    """A cache_stats_scope opened AROUND a serving session sees the sum of
+    what the per-tick scopes see — scope nesting holds across the resident
+    pool's threads."""
+    data = _make_data(11, rows=200)
+    f, _ = build_serving_flow((11, [("derive", 0, 2, False)], None),
+                              data, empty_source=True)
+    session = repro.Session(metadata=None)
+    outer = CacheStats()
+    with cache_stats_scope(outer):
+        with session.serve(f) as srv:
+            ticks = [srv.tick({c: a[idx] for c, a in data.items()})
+                     for idx in np.array_split(np.arange(200), 4)]
+    summed = sum(t.cache_stats["copies"] for t in ticks)
+    assert outer.copies >= summed        # outer also saw source set_data etc.
+    t_h2d = sum(t.cache_stats["h2d_transfers"] for t in ticks)
+    assert outer.h2d_transfers >= t_h2d
+
+
+# ---------------------------------------------------------------------------
+#  trace growth stays bounded over a long session (bug sweep)
+# ---------------------------------------------------------------------------
+def test_thousand_tick_traced_session_stays_bounded(monkeypatch):
+    """A traced 1000-tick serving session must not grow its event buffer
+    without bound: the tracer rotates at REPRO_TRACE_MAX_EVENTS."""
+    monkeypatch.setenv(config.ENV_TRACE_MAX_EVENTS, "2000")
+    from repro.obs import trace as obs_trace
+    data = _make_data(13, rows=1000)
+    f, _ = build_serving_flow((13, [], None), data, empty_source=True)
+    session = repro.Session(metadata=None)
+    with obs_trace.trace_scope():
+        with session.serve(f) as srv:
+            engine = srv.engine
+            for t in range(1000):
+                srv.tick({c: a[t % 1000: t % 1000 + 1]
+                          for c, a in data.items()})
+            assert engine.tracer is not None
+            assert len(engine.tracer.events) <= 2000, \
+                "serving tracer grew past REPRO_TRACE_MAX_EVENTS"
+            assert engine.tracer.dropped_events > 0
+            summary = srv.close()
+    assert summary["metrics"]["counters"]["ticks"] == 1000
+    hist = summary["metrics"]["histograms"]["tick_s"]
+    assert hist["count"] == 1000         # metrics never rotate
