@@ -15,6 +15,9 @@ from .engine import (EngineRun, OptimizedEngine, OptimizeOptions,
 from .executor import (ChannelGroup, ExecutionAborted, RunAbort,
                        SharedWorkerPool, StreamingExecutor, TaskFuture)
 from .expr import Col, ColumnsView, Expr, Lit, col, expr_reads, lit, where
+from .faults import (Degradation, FaultError, FaultPlan, PermanentFault,
+                     PoisonFault, TransientFault, fault_recorder, fault_scope,
+                     retry_call, with_retries)
 from .graph import Dataflow
 from .metadata import MetadataStore
 from .optimizer import (ComponentStats, CostBasedOptimizer, FlowStatistics,
@@ -46,6 +49,9 @@ __all__ = [
     "ChannelGroup", "ExecutionAborted", "RunAbort", "SharedWorkerPool",
     "StreamingExecutor", "TaskFuture",
     "Col", "ColumnsView", "Expr", "Lit", "col", "expr_reads", "lit", "where",
+    "Degradation", "FaultError", "FaultPlan", "PermanentFault", "PoisonFault",
+    "TransientFault", "fault_recorder", "fault_scope", "retry_call",
+    "with_retries",
     "Dataflow", "MetadataStore",
     "ComponentStats", "CostBasedOptimizer", "FlowStatistics", "Refusal",
     "Rewrite", "fuse_segments_flow", "measured_edge_bytes", "run_calibration",

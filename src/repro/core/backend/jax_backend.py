@@ -35,12 +35,12 @@ from __future__ import annotations
 import threading
 import time
 import weakref
-from typing import Callable, Dict, List, Mapping, Sequence, Tuple
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
 from ...obs import trace as obs_trace
-from .. import config
+from .. import config, faults
 from ..expr import ColumnsView, Expr
 from ..shared_cache import (GLOBAL_ARENA, is_host_column, record_dim_upload,
                             record_segment_compile, record_transfer)
@@ -104,6 +104,12 @@ class JaxBackend(Backend):
     #: group-id space the radix kernel partitions)
     _DENSE_MAX_ROWS = 1 << 24
     _DENSE_MAX_CELLS = 1 << 20
+    #: kernel degradation ladders (left = fastest, right = safest): on a
+    #: non-transient kernel failure the route walks ONE rung right and stays
+    #: there for this backend instance's lifetime.  Every rung is
+    #: bit-identical to its neighbours by the kernels' own equivalence tests.
+    _JOIN_LADDER = ("pallas", "interpret", "reference", "searchsorted")
+    _GROUPBY_LADDER = ("pallas", "interpret", "reference", "sort")
 
     def __init__(self) -> None:
         import jax                       # deferred: registry creates lazily
@@ -137,6 +143,34 @@ class JaxBackend(Backend):
         self._views: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
         self._views_lock = threading.Lock()
         self._dims_lock = threading.Lock()
+        # sticky degradation-ladder routes; None => follow the env config
+        self._join_route: Optional[str] = None
+        self._groupby_route: Optional[str] = None
+
+    def _degraded_impl(self, kind: str, impl: str, exc: BaseException):
+        """Next rung of the ``kind`` kernel ladder after ``impl`` failed with
+        ``exc``, or ``None`` when the failure must propagate instead:
+        transient faults escalate so chunk-level replay retries the SAME
+        route; explicitly injected permanent/poison faults abort promptly;
+        ``REPRO_DEGRADE=0`` disables ladders; the ladder floor has no next
+        rung.  A chosen rung is recorded as a ``Degradation`` and sticks on
+        this backend instance — later chunks skip the broken kernel."""
+        if (faults.classify(exc) == "transient"
+                or isinstance(exc, (faults.PermanentFault, faults.PoisonFault))
+                or not config.degrade_enabled()):
+            return None
+        ladder = self._JOIN_LADDER if kind == "join" else self._GROUPBY_LADDER
+        i = ladder.index(impl) if impl in ladder else 0   # "auto" => rung 0
+        if i + 1 >= len(ladder):
+            return None
+        nxt = ladder[i + 1]
+        faults.record_degradation("kernel", src=f"{kind}[{impl}]", dst=nxt,
+                                  component=kind, error=repr(exc))
+        if kind == "join":
+            self._join_route = nxt
+        else:
+            self._groupby_route = nxt
+        return nxt
 
     def _view(self, cache) -> _DeviceCacheView:
         with self._views_lock:
@@ -314,14 +348,26 @@ class JaxBackend(Backend):
         if pad:
             v = self._jnp.concatenate([v, self._jnp.full((pad,), dim.keys[0],
                                                          dtype=v.dtype)])
-        impl = config.join_impl()
-        if impl == "searchsorted":
-            idx, matched = self._probe_jit(dev["keys"], dev["qualifies"], v)
-        else:
-            ht = self._dim_hash(dim)
-            idx, found = self._hash_probe(ht["slot_keys"], ht["slot_idx"],
-                                          (v,), ht["max_probes"], impl=impl)
-            matched = found & dev["qualifies"][idx]
+        impl = self._join_route or config.join_impl()
+        while True:
+            try:
+                if faults.active():
+                    faults.inject("kernel", component=f"join[{impl}]")
+                if impl == "searchsorted":
+                    idx, matched = self._probe_jit(dev["keys"],
+                                                   dev["qualifies"], v)
+                else:
+                    ht = self._dim_hash(dim)
+                    idx, found = self._hash_probe(
+                        ht["slot_keys"], ht["slot_idx"], (v,),
+                        ht["max_probes"], impl=impl)
+                    matched = found & dev["qualifies"][idx]
+                break
+            except BaseException as e:
+                nxt = self._degraded_impl("join", impl, e)
+                if nxt is None:
+                    raise
+                impl = nxt
         return idx[:n], matched[:n]
 
     def lookup_gather(self, dim, dim_col: str, idx, matched, default):
@@ -354,11 +400,21 @@ class JaxBackend(Backend):
                     aggs[out] = jnp.max(vals)[None]
             return [], aggs
         keys_d = [self.asarray(k) for k in keys]
-        impl = config.groupby_impl()
-        if impl != "sort":
-            dense = self._groupby_dense(keys_d, values, n, impl)
+        impl = self._groupby_route or config.groupby_impl()
+        while impl != "sort":
+            try:
+                if faults.active():
+                    faults.inject("kernel", component=f"groupby[{impl}]")
+                dense = self._groupby_dense(keys_d, values, n, impl)
+            except BaseException as e:
+                nxt = self._degraded_impl("groupby", impl, e)
+                if nxt is None:
+                    raise
+                impl = nxt
+                continue
             if dense is not None:
                 return dense
+            break          # key space disqualified: legacy sort route
         order = jnp.lexsort(tuple(keys_d[::-1]))
         sk = [k[order] for k in keys_d]
         boundary = jnp.zeros((n,), dtype=bool).at[0].set(True)

@@ -19,6 +19,7 @@ from typing import Callable, Dict, Iterable, Iterator, List, Optional, Sequence
 import numpy as np
 
 from ..obs import trace as obs_trace
+from . import faults
 from .shared_cache import SharedCache, concat_caches
 
 
@@ -65,6 +66,15 @@ class Component:
     #: (Filter), row-reordering (Sort) and accumulate components must keep
     #: False.
     row_preserving: bool = False
+    #: True when a failed per-chunk dispatch may be replayed in place after
+    #: rewinding the cache to its pre-dispatch snapshot (the fault-tolerance
+    #: replay contract).  Row-synchronized components qualify: they only
+    #: mutate the cache handed to them.  Components with side effects beyond
+    #: the cache — sinks (external writes), block/semi-block accumulators
+    #: (state consumed by ``finish``), sources (chunk generation is re-driven
+    #: by run-level replay) — must keep False; their transient failures
+    #: escalate to run-level retry instead.
+    replay_safe: bool = True
 
     def __init__(self, name: str):
         self.name = name
@@ -97,6 +107,7 @@ class Component:
         t0 = time.perf_counter()
         n_in = cache.n
         split = cache.split_index
+        faults.inject("chunk", component=self.name, split=split)
         out = self._run(cache)
         t1 = time.perf_counter()
         self.busy_time += t1 - t0
@@ -128,6 +139,7 @@ class Component:
 
     def accumulate(self, state, cache: SharedCache) -> None:
         t0 = time.perf_counter()
+        faults.inject("chunk", component=self.name, split=cache.split_index)
         state.append(cache)
         t1 = time.perf_counter()
         self.busy_time += t1 - t0
@@ -183,6 +195,9 @@ class Component:
         self.busy_time = 0.0
         self.calls = 0
         self.next_split = 0
+        # an aborted run may leave the flag set; clearing it here keeps the
+        # flow reusable after a permanent fault
+        self.busy = False
 
     def spec(self) -> Dict[str, str]:
         """Metadata-store component specification."""
@@ -197,6 +212,7 @@ class SourceComponent(Component):
     """Emits the input row set as a stream of caches (chunks)."""
 
     ctype = ComponentType.SOURCE
+    replay_safe = False          # chunk draws re-run at run level
 
     #: True when the DATA this source emits depends on chunk boundaries
     #: (e.g. an RNG-per-chunk synthetic source).  The executor then never
@@ -216,6 +232,7 @@ class SinkComponent(Component):
     """Consumes caches (writes results).  Row-synchronized semantics."""
 
     ctype = ComponentType.SINK
+    replay_safe = False          # external writes are side effects
 
     def output_schema(self, incols: frozenset) -> frozenset:
         return incols            # a sink writes exactly what it receives
@@ -232,6 +249,7 @@ class BlockComponent(Component):
     """Accumulate-all-then-emit (single upstream)."""
 
     ctype = ComponentType.BLOCK
+    replay_safe = False          # accumulated state is consumed by finish()
 
     def finish(self, state) -> SharedCache:
         raise NotImplementedError
@@ -241,6 +259,7 @@ class SemiBlockComponent(Component):
     """Accumulate from multiple upstreams, then emit."""
 
     ctype = ComponentType.SEMI_BLOCK
+    replay_safe = False          # accumulated state is consumed by finish()
 
     def finish(self, state) -> SharedCache:
         raise NotImplementedError

@@ -27,6 +27,10 @@ Every setting also has a first-class API equivalent (see the README table):
     REPRO_FLOW_STYLE     etl.queries builders' use_dsl= argument
     REPRO_TRACE          repro.obs.trace.trace_scope() (explicit scoping)
     REPRO_TRACE_PATH     repro.obs.trace.export_run() target path
+    REPRO_FAULTS         core.faults.fault_scope(FaultPlan.parse(...))
+    REPRO_RETRY_MAX      core.faults.retry_call(max_retries=...)
+    REPRO_RETRY_BACKOFF  core.faults.retry_call(backoff=...)
+    REPRO_DEGRADE        debug only (disables the degradation ladders)
 """
 from __future__ import annotations
 
@@ -79,10 +83,27 @@ ENV_SERVE_STRICT_WATERMARK = "REPRO_SERVE_STRICT_WATERMARK"
 #: number of recent per-tick wall times a ServeSession retains for its
 #: closing p50/p99 summary
 ENV_SERVE_HISTORY = "REPRO_SERVE_HISTORY"
+#: deterministic fault-injection plan for the whole process, in the
+#: ``core.faults`` rule grammar (e.g. "seed=7;chunk:count=2;kernel:count=1");
+#: unset => no injection
+ENV_FAULTS = "REPRO_FAULTS"
+#: max retries for a transient failure (chunk replay, run re-execution,
+#: serve-tick retry) before it escalates; 0 disables retrying
+ENV_RETRY_MAX = "REPRO_RETRY_MAX"
+#: initial retry backoff in seconds (doubles per attempt, capped at
+#: ``core.faults.RETRY_BACKOFF_CAP_S``)
+ENV_RETRY_BACKOFF = "REPRO_RETRY_BACKOFF"
+#: "0" disables the graceful-degradation ladders (failing kernels/segments
+#: then abort instead of falling back to slower routes)
+ENV_DEGRADE = "REPRO_DEGRADE"
 
 DEFAULT_TRACE_PATH = "repro_trace.json"
 DEFAULT_TRACE_MAX_EVENTS = 200_000
 DEFAULT_SERVE_HISTORY = 4096
+DEFAULT_RETRY_MAX = 3
+DEFAULT_RETRY_BACKOFF_S = 0.05
+#: bound on a ServeSession's dead-letter buffer (oldest entries drop)
+DEAD_LETTER_MAX = 256
 
 DEFAULT_ARENA_MAX_MB = 256
 DEFAULT_OPTEQ_EXAMPLES = 100
@@ -216,6 +237,34 @@ def serve_history() -> int:
     return max(1, n)
 
 
+def faults_spec() -> Optional[str]:
+    """The process-wide fault-injection plan spec (``REPRO_FAULTS``), or
+    ``None`` when no injection is configured."""
+    return _raw(ENV_FAULTS)
+
+
+def retry_max() -> int:
+    """Max transient-failure retries per recovery site
+    (``REPRO_RETRY_MAX``, default 3; 0 disables retrying)."""
+    v = _raw(ENV_RETRY_MAX)
+    n = int(v) if v is not None else DEFAULT_RETRY_MAX
+    return max(0, n)
+
+
+def retry_backoff() -> float:
+    """Initial retry backoff seconds (``REPRO_RETRY_BACKOFF``, default
+    0.05; doubles per attempt up to the cap)."""
+    v = _raw(ENV_RETRY_BACKOFF)
+    s = float(v) if v is not None else DEFAULT_RETRY_BACKOFF_S
+    return max(0.0, s)
+
+
+def degrade_enabled() -> bool:
+    """Graceful-degradation ladders switch (``REPRO_DEGRADE=0`` => off:
+    failing kernel routes abort instead of falling back)."""
+    return _raw(ENV_DEGRADE) != "0"
+
+
 def snapshot() -> Dict[str, object]:
     """Every setting's effective value — recorded in benchmark JSON so a
     run's configuration is reconstructable."""
@@ -235,4 +284,8 @@ def snapshot() -> Dict[str, object]:
         "trace_max_events": trace_max_events(),
         "serve_strict_watermark": serve_strict_watermark(),
         "serve_history": serve_history(),
+        "faults": faults_spec(),
+        "retry_max": retry_max(),
+        "retry_backoff": retry_backoff(),
+        "degrade": degrade_enabled(),
     }

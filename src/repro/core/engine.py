@@ -26,7 +26,7 @@ from dataclasses import dataclass, field, replace
 from typing import Dict, List, Optional, Tuple
 
 from ..obs import trace as obs_trace
-from . import config
+from . import config, faults
 from .backend import Backend, resolve_backend
 from .component import ComponentType, SourceComponent
 from .executor import SharedWorkerPool, StreamingExecutor
@@ -67,6 +67,13 @@ class EngineRun:
     runtime_plan: Optional[RuntimePlan] = None
     streamed_edges: List[Tuple[int, int]] = field(default_factory=list)
     pool_stats: Dict[str, int] = field(default_factory=dict)
+    # fault tolerance: transient retries taken, degradation-ladder fallbacks
+    # and injected faults attributed to this run (all zero on a no-fault run)
+    retries: int = 0
+    degradations: int = 0
+    faults_injected: int = 0
+    #: per-fallback detail (core.faults.Degradation.spec() dicts)
+    degradation_events: List[Dict[str, object]] = field(default_factory=list)
     # adaptive path (optimize_level=2): graph rewrites applied before the run
     rewrites: List[Dict[str, str]] = field(default_factory=list)
     # rewrites the optimizer REFUSED for safety (with reasons) — refusals
@@ -98,6 +105,9 @@ class EngineRun:
             s += f" rewrites={len(self.rewrites)}"
         if self.refusals:
             s += f" refusals={len(self.refusals)}"
+        if self.retries or self.degradations or self.faults_injected:
+            s += (f" faults={self.faults_injected} retries={self.retries} "
+                  f"degradations={self.degradations}")
         return s
 
     def spec(self) -> dict:
@@ -114,6 +124,10 @@ class EngineRun:
                 "arena_hits": self.arena_hits,
                 "arena_misses": self.arena_misses,
                 "arena_bytes_reused": self.arena_bytes_reused,
+                "retries": self.retries,
+                "degradations": self.degradations,
+                "faults_injected": self.faults_injected,
+                "degradation_events": list(self.degradation_events),
                 "rewrites": list(self.rewrites),
                 "refusals": list(self.refusals),
                 "run_id": self.run_id, "created": self.created,
@@ -144,6 +158,9 @@ def _run_counters(run: EngineRun, snap: Dict[str, int]) -> None:
     run.arena_hits = snap["arena_hits"]
     run.arena_misses = snap["arena_misses"]
     run.arena_bytes_reused = snap["arena_bytes_reused"]
+    run.retries = snap["retries"]
+    run.degradations = snap["degradations"]
+    run.faults_injected = snap["faults_injected"]
 
 
 def _finish_obs(tracer, run: EngineRun,
@@ -322,9 +339,14 @@ class OptimizedEngine:
             streaming=streaming, backend=bk)
         with obs_trace.span("phase", "calibrate",
                             sample_rows=opts.calibration_rows):
-            stats = run_calibration(self.flow,
-                                    sample_rows=opts.calibration_rows,
-                                    backend=bk)
+            # calibration is idempotent (stats reset before/after, sinks
+            # never written), so a transient mid-calibration failure just
+            # re-runs the whole sample pass
+            stats = faults.retry_call(
+                lambda: run_calibration(self.flow,
+                                        sample_rows=opts.calibration_rows,
+                                        backend=bk),
+                where=f"calibrate.{self.flow.name}")
         optimizer = CostBasedOptimizer(self.flow, stats, streaming=streaming,
                                        fuse_segments=opts.fusion_enabled())
         with obs_trace.span("phase", "optimize"):
@@ -354,6 +376,20 @@ class OptimizedEngine:
         # the caller's options object is never mutated
         return (replace(opts, pipeline_degree=m_prime), rewrites,
                 optimizer.refusals)
+
+    # ----------------------------------------------------------- fault replay
+    def _reset_for_retry(self) -> None:
+        """Return the flow to a runnable state between run-level retry
+        attempts: clear the pipeline's order/busy bookkeeping on every
+        component and drop any partial output a sink collected during the
+        failed attempt (replaying into a half-filled sink would duplicate
+        rows).  Accumulator state is per-executor (``new_state`` per run),
+        so it needs no reset here."""
+        for comp in self.flow.vertices.values():
+            comp.next_split = 0
+            comp.busy = False
+            if comp.ctype is ComponentType.SINK and hasattr(comp, "clear"):
+                comp.clear()
 
     # ---------------------------------------------------------------- run
     def run(self) -> EngineRun:
@@ -389,16 +425,38 @@ class OptimizedEngine:
                 self.metadata.register_runtime_plan(self.flow,
                                                     self.runtime_plan)
 
-            executor = StreamingExecutor(self.flow, self.g_tau, opts,
-                                         self.runtime_plan)
             t_start = time.perf_counter()
+            # Run-level retry: a transient failure that escalated past
+            # chunk-level replay (source draw, accumulate, sink write, edge
+            # transfer) aborts the executor; the whole run replays on a
+            # fresh executor after the flow's transient state is reset.
+            # The stats scope / tracer / span stay OUTSIDE the loop so
+            # retry counters and failed-attempt work attribute to this run.
+            attempt, delay = 0, config.retry_backoff()
             with cache_stats_scope() as stats, obs_trace.measured(tracer), \
-                    obs_trace.span("phase", "execute"):
-                try:
-                    executor.execute()
-                finally:
-                    pool_stats = executor.pool.stats()
-                    executor.shutdown()
+                    obs_trace.span("phase", "execute"), \
+                    faults.fault_recorder() as frec:
+                while True:
+                    executor = StreamingExecutor(self.flow, self.g_tau, opts,
+                                                 self.runtime_plan)
+                    try:
+                        executor.execute()
+                        break
+                    except BaseException as e:
+                        if (faults.classify(e) != "transient"
+                                or attempt >= config.retry_max()):
+                            raise
+                        faults.record_retry(f"run.{self.flow.name}",
+                                            attempt, delay)
+                        self._reset_for_retry()
+                        if delay > 0.0:
+                            time.sleep(delay)
+                        delay = min(delay * 2.0 if delay else 0.0,
+                                    faults.RETRY_BACKOFF_CAP_S)
+                        attempt += 1
+                    finally:
+                        pool_stats = executor.pool.stats()
+                        executor.shutdown()
             wall = time.perf_counter() - t_start
             run = EngineRun(
                 wall_time=wall, copies=0, bytes_copied=0,
@@ -411,6 +469,7 @@ class OptimizedEngine:
                 runtime_plan=self.runtime_plan,
                 streamed_edges=list(executor.streamed_edges),
                 pool_stats=pool_stats,
+                degradation_events=[d.spec() for d in frec.degradations],
                 rewrites=[r.spec() for r in rewrites],
                 refusals=[r.spec() for r in refusals])
             _run_counters(run, stats.snapshot())

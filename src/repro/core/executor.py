@@ -39,12 +39,14 @@ from __future__ import annotations
 import contextvars
 import threading
 import time
+import warnings
 from collections import deque
 from contextlib import contextmanager, nullcontext
 from typing import (TYPE_CHECKING, Callable, Dict, Iterator, List, Optional,
                     Tuple)
 
 from ..obs import trace as obs_trace
+from . import faults
 from .component import SourceComponent
 from .graph import Dataflow
 from .partitioner import ExecutionTreeGraph, streamable_tree_ids
@@ -149,9 +151,17 @@ class SharedWorkerPool:
     rather than by thread-per-tree/thread-per-split as before.
     """
 
-    def __init__(self, width: int, name: str = "repro-pool"):
+    #: default seconds ``shutdown`` waits for each worker to join before
+    #: declaring it leaked
+    DEFAULT_JOIN_TIMEOUT_S = 10.0
+
+    def __init__(self, width: int, name: str = "repro-pool",
+                 join_timeout: Optional[float] = None):
         self.width = max(1, int(width))
         self.name = name
+        self.join_timeout = (self.DEFAULT_JOIN_TIMEOUT_S
+                             if join_timeout is None else float(join_timeout))
+        self.leaked_threads = 0         # workers that outlived shutdown joins
         self._cond = threading.Condition()
         self._work: deque = deque()
         self._threads: set = set()
@@ -248,16 +258,38 @@ class SharedWorkerPool:
                     "blocked": self._blocked, "spawned_total": self.spawned_total,
                     "tasks_run": self.tasks_run,
                     "threads_hwm": self.threads_hwm,
-                    "runnable_hwm": self.runnable_hwm}
+                    "runnable_hwm": self.runnable_hwm,
+                    "leaked_threads": self.leaked_threads}
 
-    def shutdown(self, wait: bool = True) -> None:
+    def shutdown(self, wait: bool = True,
+                 join_timeout: Optional[float] = None) -> None:
+        """Stop the pool.  With ``wait=True`` joins each worker for up to
+        ``join_timeout`` seconds (default: the pool's configured timeout);
+        stragglers that fail to join are counted in ``leaked_threads``,
+        reported as a ``pool_leaked_threads`` gauge on active tracers, and
+        warned about — never again discarded silently."""
         with self._cond:
             self._shutdown = True
             self._cond.notify_all()
             threads = list(self._threads)
-        if wait:
-            for t in threads:
-                t.join(timeout=10.0)
+        if not wait:
+            return
+        timeout = (self.join_timeout if join_timeout is None
+                   else float(join_timeout))
+        leaked = []
+        for t in threads:
+            t.join(timeout=timeout)
+            if t.is_alive():
+                leaked.append(t.name)
+        if leaked:
+            self.leaked_threads += len(leaked)
+            for tr in obs_trace.ACTIVE.get():
+                tr.metrics.gauge_set("pool_leaked_threads",
+                                     self.leaked_threads)
+            warnings.warn(
+                f"SharedWorkerPool {self.name!r}: {len(leaked)} worker "
+                f"thread(s) did not join within {timeout:.1f}s: "
+                f"{', '.join(leaked)}", RuntimeWarning, stacklevel=2)
 
 
 # ---------------------------------------------------------------------------
@@ -366,6 +398,10 @@ class ChannelGroup:
 
     # -------------------------------------------------------------- producer
     def put(self, key: Tuple[int, int], item: Delivery) -> None:
+        # edge-site injection: delay rules sleep here (simulated slow edge);
+        # raise rules fail the producing task, which escalates through
+        # RunAbort to a run-level retry
+        faults.inject("edge", component=item[2], split=item[1])
         buf = self._buffers[key]
         with self._cond:                       # fast path: space available
             self._check_abort()
@@ -552,6 +588,11 @@ class StreamingExecutor:
                  or max(1, -(-total // max(opts.num_splits, 1))))
         for i, c in enumerate(root.chunks(chunk)):
             c.split_index = i
+            try:
+                faults.inject("chunk", component=root.name, split=i)
+            except BaseException:
+                c.recycle()          # the drawn chunk must not strand buffers
+                raise
             yield c
 
     @staticmethod

@@ -28,6 +28,7 @@ from contextlib import nullcontext
 from typing import Callable, Dict, List, Optional
 
 from ..obs import trace as obs_trace
+from . import config, faults
 from .component import Component
 from .executor import AdmissionGate, RunAbort, SharedWorkerPool, TaskFuture
 from .graph import Dataflow
@@ -125,8 +126,11 @@ class ActivityRunner:
         comp = self.comp
         self._acquire(cache)
         try:
-            if (self.mt_threads > 1 and comp.supports_multithreading
-                    and self.pool is not None and cache.n > self.mt_threads):
+            mt = (self.mt_threads > 1 and comp.supports_multithreading
+                  and self.pool is not None and cache.n > self.mt_threads)
+            if comp.replay_safe and faults.active():
+                out = self._process_replayed(cache, shared, mt)
+            elif mt:
                 out = self._process_multithreaded(cache)
             else:
                 out = comp.process(cache, shared=shared)    # paper line 9
@@ -137,13 +141,52 @@ class ActivityRunner:
                 comp.cond.notify_all()          # paper line 11
         return out
 
+    def _process_replayed(self, cache: SharedCache, shared: bool,
+                          mt: bool) -> List[SharedCache]:
+        """Chunk-granular replay: transient dispatch failures rewind the
+        cache to its pre-dispatch snapshot and retry in place.  Must run
+        INSIDE the acquire window — the finally above advances
+        ``next_split`` even on failure, so a retry at any outer level would
+        deadlock order-sensitive successors.  Only entered when a fault plan
+        is installed (``faults.active()``), so no-fault runs never pay for
+        the snapshot."""
+        comp = self.comp
+        snap = faults.snapshot_cache(cache)
+        retries = config.retry_max()
+        delay = config.retry_backoff()
+        attempt = 0
+        while True:
+            try:
+                if mt:
+                    return self._process_multithreaded(cache)
+                return comp.process(cache, shared=shared)
+            except BaseException as e:
+                if faults.classify(e) != "transient" or attempt >= retries:
+                    raise
+                if self.abort is not None and self.abort.aborted:
+                    raise                # the run already failed elsewhere
+                faults.restore_cache(cache, snap)
+                faults.record_retry(f"chunk.{comp.name}", attempt, delay)
+                time.sleep(delay)
+                delay = min(delay * 2.0, faults.RETRY_BACKOFF_CAP_S)
+                attempt += 1
+
     # -------------------------------------------------- §4.3 multithreading
     def _process_multithreaded(self, cache: SharedCache) -> List[SharedCache]:
         comp = self.comp
         t0 = time.perf_counter()
+        faults.inject("chunk", component=comp.name, split=cache.split_index)
         ranges = cache.row_ranges(self.mt_threads)
-        futures = [self.pool.submit(comp.process_range, cache, r)
-                   for r in ranges]
+        fn = comp.process_range
+        if config.retry_max() > 0:
+            # §4.3 row-range tasks are read-only over their range, so a
+            # transient task failure retries in place without a snapshot
+            fn = faults.with_retries(
+                fn, max_retries=config.retry_max(),
+                backoff=config.retry_backoff(),
+                retry_on=(faults.TransientFault,) + (ConnectionError,
+                                                     TimeoutError, OSError))
+        futures = [self.pool.submit(fn, cache, r) for r in ranges]
         parts = [f.result() for f in futures]       # row-order synchronizer:
         out = comp.merge_ranges(cache, ranges, parts)   # merge in input order
         t1 = time.perf_counter()
@@ -251,6 +294,11 @@ class TreePipeline:
             cache.recycle()
         except BaseException as e:
             self.errors.append(e)
+            # failure path: the split's arena buffers still go back exactly
+            # once (recycle is idempotent — the owned-root swap hands them
+            # over on the first call only), so an aborted run leaks nothing
+            # and REPRO_CACHE_GUARD=1 sees no double release
+            cache.recycle()
             if self.abort is not None:
                 self.abort.trip(e)
 

@@ -39,6 +39,7 @@ wrong answer.
 from __future__ import annotations
 
 import contextvars
+import sys
 import threading
 import time
 from contextlib import contextmanager
@@ -405,6 +406,9 @@ class CacheStats:
         self.dim_h2d_transfers = 0
         self.dim_h2d_bytes = 0
         self.segment_compiles = 0
+        self.retries = 0
+        self.degradations = 0
+        self.faults_injected = 0
 
     def record(self, cache: SharedCache) -> None:
         with self._lock:
@@ -446,6 +450,23 @@ class CacheStats:
         with self._lock:
             self.segment_compiles += 1
 
+    def record_retry(self) -> None:
+        """A transient failure retried (chunk replay, run re-execution, or
+        serve-tick retry).  No-fault runs must record zero of these."""
+        with self._lock:
+            self.retries += 1
+
+    def record_degradation(self) -> None:
+        """A degradation ladder fell back one rung (segment/join/groupby
+        route, or arena over-budget to direct allocation)."""
+        with self._lock:
+            self.degradations += 1
+
+    def record_fault(self) -> None:
+        """An injected fault fired (``core.faults``)."""
+        with self._lock:
+            self.faults_injected += 1
+
     def reset(self) -> None:
         with self._lock:
             self.copies = 0
@@ -460,6 +481,9 @@ class CacheStats:
             self.dim_h2d_transfers = 0
             self.dim_h2d_bytes = 0
             self.segment_compiles = 0
+            self.retries = 0
+            self.degradations = 0
+            self.faults_injected = 0
 
     def snapshot(self):
         with self._lock:
@@ -473,7 +497,10 @@ class CacheStats:
                     "arena_bytes_reused": self.arena_bytes_reused,
                     "dim_h2d_transfers": self.dim_h2d_transfers,
                     "dim_h2d_bytes": self.dim_h2d_bytes,
-                    "segment_compiles": self.segment_compiles}
+                    "segment_compiles": self.segment_compiles,
+                    "retries": self.retries,
+                    "degradations": self.degradations,
+                    "faults_injected": self.faults_injected}
 
 
 GLOBAL_CACHE_STATS = CacheStats()
@@ -555,6 +582,16 @@ def record_segment_compile() -> None:
 _ARENA_MIN_BUCKET = 256
 
 
+def _faults_active() -> bool:
+    """True when any fault plan is installed.  Import-cycle-safe: the faults
+    module imports us, so scope-installed plans are only checked when it is
+    already loaded (a plan cannot exist otherwise)."""
+    if config.faults_spec() is not None:
+        return True
+    mod = sys.modules.get(__package__ + ".faults")
+    return mod is not None and bool(mod._SCOPES.get())
+
+
 class CacheArena:
     """Size-bucketed, thread-safe pool of recycled host column buffers.
 
@@ -601,6 +638,16 @@ class CacheArena:
         shape = tuple(int(s) for s in shape)
         if not self.enabled:
             return np.empty(shape, dtype), None
+        if _faults_active():
+            # injected over-budget condition: degrade to direct allocation
+            # (root=None => the release path is a no-op) instead of raising
+            from . import faults as _faults       # lazy: faults imports us
+            try:
+                _faults.inject("arena", component="acquire")
+            except _faults.FaultError as e:
+                _faults.record_degradation("arena", src="pooled",
+                                           dst="direct", error=repr(e))
+                return np.empty(shape, dtype), None
         nbytes = int(np.prod(shape, dtype=np.int64)) * dtype.itemsize \
             if shape else dtype.itemsize
         bucket = self._bucket(nbytes)

@@ -33,6 +33,7 @@ from typing import (Callable, Dict, FrozenSet, Iterator, List, Optional,
 
 import numpy as np
 
+from ..core import config, faults
 from ..core.backend import AGG_OPS, SEGMENT_KEEP_MASK
 from ..core.component import (BlockComponent, Component, ComponentType,
                               SemiBlockComponent, SinkComponent,
@@ -529,19 +530,57 @@ class FusedSegment(Component):
             out["defer_mask_to"] = self.defer_to
         return out
 
-    def _run(self, cache: SharedCache) -> List[SharedCache]:
-        bk = self.get_backend()
+    def _dispatch(self, bk, cache: SharedCache) -> None:
+        """One compiled-segment dispatch with the kernel degradation ladder:
+        a non-transient, non-injected failure of the compiled runner falls
+        back to the backend-agnostic host reference pass
+        (``Backend.compile_segment`` base implementation, bit-identical to
+        the unfused chain) and the fallback sticks for the rest of the
+        component's life — later chunks skip the broken kernel.  Transient
+        faults escalate unchanged (chunk-level replay retries them);
+        explicitly injected permanent/poison faults abort promptly.
+
+        The pre-dispatch snapshot is taken only under active fault
+        injection: real kernel failures surface at compile/trace/dispatch
+        time, before the runner's write-back mutates the cache."""
         runner = self._compiled.get(bk.name)
         if runner is None:
             runner = self._compiled[bk.name] = bk.compile_segment(self)
+        snap = faults.snapshot_cache(cache) if faults.active() else None
+        try:
+            if snap is not None:
+                faults.inject("kernel", component=self.name,
+                              split=cache.split_index)
+            runner(cache)
+            return
+        except BaseException as e:
+            if (faults.classify(e) == "transient"
+                    or isinstance(e, (faults.PermanentFault,
+                                      faults.PoisonFault))
+                    or not config.degrade_enabled()
+                    or getattr(runner, "_is_reference", False)):
+                raise
+            from ..core.backend.base import Backend as _Base
+            faults.record_degradation(
+                "kernel", src=f"segment[{bk.name}]", dst="reference",
+                component=self.name, error=repr(e))
+            ref = _Base.compile_segment(bk, self)
+            ref._is_reference = True
+            self._compiled[bk.name] = ref
+            if snap is not None:
+                faults.restore_cache(cache, snap)
+            ref(cache)
+
+    def _run(self, cache: SharedCache) -> List[SharedCache]:
+        bk = self.get_backend()
         if obs_trace.ACTIVE.get():
             n_in = cache.n
             t0 = time.perf_counter()
-            runner(cache)
+            self._dispatch(bk, cache)
             obs_trace.on_kernel(self.name, bk.name, t0, time.perf_counter(),
                                 n_in)
         else:
-            runner(cache)
+            self._dispatch(bk, cache)
         return [cache]
 
 
@@ -708,6 +747,27 @@ class Aggregate(BlockComponent):
         """Leave serving mode and drop the partial store — the component is
         immediately reusable for ordinary batch runs."""
         self._serving = None
+
+    def serving_snapshot(self):
+        """Copy of the cross-tick partial store, taken before a tick
+        attempt so a retried tick merges its rows exactly once (replaying
+        into already-merged partials would double-count).  ``None`` outside
+        serving mode."""
+        st = self._serving
+        if st is None:
+            return None
+        return (dict(st.index), list(st.keys),
+                {p: list(v) for p, v in st.partials.items()})
+
+    def serving_restore(self, snap) -> None:
+        """Rewind the partial store to a ``serving_snapshot`` (no-op for
+        ``None`` / outside serving mode)."""
+        if self._serving is None or snap is None:
+            return
+        st = self._serving
+        st.index = dict(snap[0])
+        st.keys = list(snap[1])
+        st.partials = {p: list(v) for p, v in snap[2].items()}
 
     def _serving_finish(self, merged: SharedCache) -> SharedCache:
         st = self._serving

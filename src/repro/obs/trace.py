@@ -398,6 +398,49 @@ def on_arena_release(nbytes: int) -> None:
             tr.metrics.inc("arena_releases")
 
 
+def on_fault(site: str, kind: str, component=None) -> None:
+    """One injected fault fired (from ``core.faults.record_fault``)."""
+    scopes = ACTIVE.get()
+    if not scopes:
+        return
+    ts = time.perf_counter() * 1e6
+    for tr in scopes:
+        tr.emit("i", "fault", f"inject:{site}", ts,
+                args={"kind": kind, "component": component})
+        if tr.measuring:
+            tr.metrics.inc("faults_injected")
+
+
+def on_retry(where: str, attempt: int, delay_s: float) -> None:
+    """One transient-failure retry about to back off (from
+    ``core.faults.record_retry``); feeds the retry-latency histogram."""
+    scopes = ACTIVE.get()
+    if not scopes:
+        return
+    ts = time.perf_counter() * 1e6
+    for tr in scopes:
+        tr.emit("i", "fault", "retry", ts,
+                args={"where": where, "attempt": attempt,
+                      "delay_s": delay_s})
+        if tr.measuring:
+            tr.metrics.inc("retries")
+            tr.metrics.observe("retry_backoff_s", delay_s)
+
+
+def on_degrade(kind: str, src: str, dst: str, component=None) -> None:
+    """One degradation-ladder fallback (from
+    ``core.faults.record_degradation``)."""
+    scopes = ACTIVE.get()
+    if not scopes:
+        return
+    ts = time.perf_counter() * 1e6
+    for tr in scopes:
+        tr.emit("i", "fault", f"degrade:{kind}", ts,
+                args={"src": src, "dst": dst, "component": component})
+        if tr.measuring:
+            tr.metrics.inc("degradations")
+
+
 def on_wait(kind: str, t0: float, t1: float, **args) -> None:
     """One blocking wait (channel put/get/drain, admission gate, activity
     busy-wait).  ``kind`` names the wait site, e.g. ``channel.put``."""

@@ -33,6 +33,7 @@ registry, ``OptimizeOptions``, calibration and the metadata store:
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field, replace
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
 
@@ -42,6 +43,7 @@ from .core import (Dataflow, EngineRun, MetadataStore, OptimizedEngine,
                    OptimizeOptions, OrdinaryEngine, ServingEngine,
                    StreamingEngine)
 from .core import config as _config
+from .core import faults as _faults
 from .core.component import StageBoundary
 from .core.optimizer import FlowStatistics, run_calibration
 from .core.planner import infer_schema
@@ -377,6 +379,13 @@ class TickResult:
     wall_s: float
     #: per-tick cache-stats snapshot (copies / transfers / arena / compiles)
     cache_stats: Dict[str, int] = field(default_factory=dict)
+    #: transient-failure retries this tick took before succeeding (0 on a
+    #: clean tick)
+    retries: int = 0
+    #: True when the micro-batch was dropped into the session's dead-letter
+    #: buffer (poison fault, or transient retries exhausted) — the delta is
+    #: empty and the session stays alive
+    dead_lettered: bool = False
 
     @property
     def rows_out(self) -> int:
@@ -413,6 +422,10 @@ class ServeSession:
         self._summary: Dict[str, object] = {}
         #: bounded record of recent TickResults (REPRO_SERVE_HISTORY)
         self.history: List[TickResult] = []
+        #: bounded dead-letter buffer: micro-batches dropped after a poison
+        #: fault or exhausted transient retries, oldest evicted first —
+        #: each entry keeps the batch columns so an operator can re-tick it
+        self.dead_letters: "deque" = deque(maxlen=_config.DEAD_LETTER_MAX)
 
     # ------------------------------------------------------------------ api
     @property
@@ -442,20 +455,74 @@ class ServeSession:
                 watermark = self.watermark
             self.watermark = watermark
             lag = max(0.0, time.time() - watermark)
-        # an aborted previous tick may have left partial per-split rows
-        # buffered in the sink — they belong to a tick that FAILED, so they
-        # must never leak into this tick's delta
-        self.sink.clear()
         self.source.set_data(columns)
         rows_in = self.source.columns and len(
             next(iter(self.source.columns.values()))) or 0
-        info = self.engine.tick(watermark_lag=lag)
+        aggs = [c for c in self.flow.vertices.values()
+                if hasattr(c, "serving_snapshot")]
+        attempt, delay = 0, _config.retry_backoff()
+        while True:
+            # an aborted attempt (or previous tick) may have left partial
+            # per-split rows buffered in the sink — they belong to an
+            # execution that FAILED, so they must never leak into this
+            # tick's delta
+            self.sink.clear()
+            # snapshot the cross-tick aggregate partials: a retried tick
+            # must merge its rows exactly once
+            snaps = [(c, c.serving_snapshot()) for c in aggs]
+            try:
+                _faults.inject("tick", component=self.flow.name,
+                               split=self.engine.ticks)
+                info = self.engine.tick(watermark_lag=lag)
+                break
+            except BaseException as e:
+                for c, s in snaps:
+                    if s is None and c._serving is not None:
+                        # the failed attempt was the session's FIRST tick
+                        # (serving mode began mid-attempt): a fresh store IS
+                        # the pre-attempt state
+                        c.begin_serving()
+                    else:
+                        c.serving_restore(s)
+                kind = _faults.classify(e)
+                if kind == "transient" and attempt < _config.retry_max():
+                    _faults.record_retry(f"tick.{self.flow.name}", attempt,
+                                         delay)
+                    if delay > 0.0:
+                        time.sleep(delay)
+                    delay = min(delay * 2.0, _faults.RETRY_BACKOFF_CAP_S)
+                    attempt += 1
+                    continue
+                if kind == "permanent":
+                    # abort promptly with the original exception; the
+                    # restores above leave the session consistent, so a
+                    # later tick still works
+                    raise
+                # poison batch (or transient retries exhausted): drop it
+                # into the bounded dead-letter buffer and stay alive
+                self.sink.clear()
+                self.dead_letters.append({
+                    "tick": self.engine.ticks, "columns": columns,
+                    "watermark": self.watermark, "attempts": attempt + 1,
+                    "error": repr(e)})
+                if self.engine.tracer is not None:
+                    self.engine.tracer.metrics.inc("dead_letters")
+                result = TickResult(tick=self.engine.ticks,
+                                    rows_in=int(rows_in), delta={},
+                                    watermark=self.watermark, wall_s=0.0,
+                                    retries=attempt, dead_lettered=True)
+                self.history.append(result)
+                cap = _config.serve_history()
+                if len(self.history) > cap:
+                    del self.history[:len(self.history) - cap]
+                return result
         delta = self.sink.result()
         self.sink.clear()
         result = TickResult(tick=info["tick"], rows_in=int(rows_in),
                             delta=delta, watermark=self.watermark,
                             wall_s=info["wall_s"],
-                            cache_stats=info["cache_stats"])
+                            cache_stats=info["cache_stats"],
+                            retries=attempt)
         self.history.append(result)
         cap = _config.serve_history()
         if len(self.history) > cap:

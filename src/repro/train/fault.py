@@ -17,32 +17,23 @@ Three mechanisms (composable with the CheckpointManager):
 from __future__ import annotations
 
 import collections
-import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
 
 import numpy as np
 
+from ..core.faults import with_retries as _core_with_retries
+
 
 def with_retries(fn: Callable, max_retries: int = 3, backoff: float = 0.1,
                  retry_on=(RuntimeError, OSError), on_retry=None):
-    """Wrap fn with retry + exponential backoff."""
+    """Wrap fn with retry + exponential backoff.
 
-    def wrapped(*args, **kwargs):
-        delay = backoff
-        for attempt in range(max_retries + 1):
-            try:
-                return fn(*args, **kwargs)
-            except retry_on as e:  # noqa: PERF203
-                if attempt == max_retries:
-                    raise
-                if on_retry is not None:
-                    on_retry(attempt, e)
-                time.sleep(delay)
-                delay *= 2
-        raise AssertionError("unreachable")
-
-    return wrapped
+    Thin shim over the generalized ``core.faults.with_retries`` (the
+    dataflow engines' retry primitive), keeping this module's historical
+    defaults (``retry_on=(RuntimeError, OSError)``)."""
+    return _core_with_retries(fn, max_retries=max_retries, backoff=backoff,
+                              retry_on=retry_on, on_retry=on_retry)
 
 
 @dataclass

@@ -16,6 +16,7 @@ from repro.core import (GLOBAL_ARENA, GLOBAL_CACHE_STATS, CacheArena,
                         OptimizedEngine, SharedCache, StreamingEngine,
                         cache_stats_scope, discover_segments,
                         fuse_segments_flow, get_default_backend, partition)
+from repro.core import faults
 from repro.core.component import StageBoundary
 from repro.core.shared_cache import assert_views_disjoint
 from repro.etl import BUILDERS
@@ -249,11 +250,14 @@ def test_fusion_env_var_and_metadata_run_record(monkeypatch):
     assert MetadataStore.from_json(md.to_json()).runs["ssb-q4.1"] == rec
 
 
-def test_fused_segment_lying_read_declaration():
+def test_fused_segment_lying_read_declaration(monkeypatch):
     """A declared read set that misses a column the lambda touches: the host
     reference runner pulls the column lazily from the cache and stays
-    correct; the jax kernel (which uploads exactly the declared set) fails
-    LOUDLY instead of computing silently wrong rows."""
+    correct; the jax kernel (which uploads exactly the declared set) fails —
+    the degradation ladder falls back to the reference runner and records a
+    VISIBLE kernel Degradation (never silently wrong rows), and with
+    ``REPRO_DEGRADE=0`` the failure raises loudly as before."""
+    monkeypatch.delenv("REPRO_FAULTS", raising=False)
     def build():
         ex = Expression("ex", "y",
                         lambda c, r: c.col("v")[r] + c.col("k")[r],
@@ -261,10 +265,26 @@ def test_fused_segment_lying_read_declaration():
         return _chain_flow(_src(), ex, _filt("fl"), CollectSink("sink"))
 
     if get_default_backend().name == "jax":
+        monkeypatch.setenv("REPRO_DEGRADE", "0")
         flow = build()
         fuse_segments_flow(flow)
         with pytest.raises(Exception, match="not visible|k"):
             StreamingEngine(flow, OptimizeOptions(num_splits=2)).run()
+
+        monkeypatch.delenv("REPRO_DEGRADE")
+        flow_s = build()
+        sink_s = flow_s.component("sink")
+        StreamingEngine(flow_s, OptimizeOptions(
+            num_splits=2, fuse_segments=False)).run()
+        flow_d = build()
+        sink_d = flow_d.component("sink")
+        assert fuse_segments_flow(flow_d)
+        run = StreamingEngine(flow_d, OptimizeOptions(num_splits=2)).run()
+        assert run.degradations >= 1
+        assert any(d["kind"] == "kernel" and d["dst"] == "reference"
+                   for d in run.degradation_events)
+        for k, v in sink_s.result().items():
+            np.testing.assert_array_equal(sink_d.result()[k], v, err_msg=k)
     else:
         flow_s = build()
         sink_s = flow_s.component("sink")
@@ -369,6 +389,66 @@ def test_engine_equality_under_guard(monkeypatch):
     guarded = qf2.sink.result()
     for k in baseline:
         np.testing.assert_array_equal(guarded[k], baseline[k], err_msg=k)
+
+
+def test_fault_retry_under_guard_no_poisoned_reuse(monkeypatch):
+    """Mid-segment transient faults abort chunks that already wrote into
+    arena-pooled buffers; the retry must not see those poisoned bytes.
+    With REPRO_CACHE_GUARD=1 recycled buffers are 0xAB-filled and double
+    releases raise, so byte equality against the fault-free baseline is
+    the use-after-recycle / double-release detector for the replay path."""
+    monkeypatch.delenv("REPRO_FAULTS", raising=False)   # exact counts below
+    data = _data()
+    qf = BUILDERS["Q4.1"](data)
+    StreamingEngine(qf.flow, OptimizeOptions(
+        num_splits=4, fuse_segments=True)).run()
+    baseline = qf.sink.result()
+
+    monkeypatch.setenv("REPRO_CACHE_GUARD", "1")
+    monkeypatch.setenv("REPRO_RETRY_BACKOFF", "0.001")
+    plan = faults.FaultPlan.parse(
+        "seed=3; kernel:kind=transient,count=1,after=1; "
+        "chunk:kind=transient,count=1")
+    qf2 = BUILDERS["Q4.1"](data)
+    with faults.fault_scope(plan):
+        run = StreamingEngine(qf2.flow, OptimizeOptions(
+            num_splits=4, fuse_segments=True)).run()
+    faulty = qf2.sink.result()
+
+    assert run.faults_injected == plan.injected >= 1
+    assert run.retries >= 1
+    for k in baseline:
+        np.testing.assert_array_equal(faulty[k], baseline[k], err_msg=k)
+
+
+def test_permanent_fault_aborts_and_releases_buffers(monkeypatch):
+    """A permanent mid-segment fault must abort promptly (no retries), hand
+    every in-flight buffer back to the arena exactly once (guard raises on
+    double release), and leave the flow rerunnable byte-identically."""
+    monkeypatch.delenv("REPRO_FAULTS", raising=False)   # exact counts below
+    monkeypatch.setenv("REPRO_CACHE_GUARD", "1")
+    data = _data()
+    qf = BUILDERS["Q4.1"](data)
+    plan = faults.FaultPlan.parse("kernel:kind=permanent,after=1")
+    with faults.fault_scope(plan):
+        with pytest.raises(faults.PermanentFault):
+            StreamingEngine(qf.flow, OptimizeOptions(
+                num_splits=4, fuse_segments=True)).run()
+    assert plan.injected == 1
+
+    # same flow objects, no plan: the rerun must match a fresh baseline —
+    # stranded or double-released buffers from the abort would corrupt it
+    run = StreamingEngine(qf.flow, OptimizeOptions(
+        num_splits=4, fuse_segments=True)).run()
+    rerun = qf.sink.result()
+    assert run.retries == 0 and run.faults_injected == 0
+
+    qf_ref = BUILDERS["Q4.1"](data)
+    StreamingEngine(qf_ref.flow, OptimizeOptions(
+        num_splits=4, fuse_segments=True)).run()
+    ref = qf_ref.sink.result()
+    for k in ref:
+        np.testing.assert_array_equal(rerun[k], ref[k], err_msg=k)
 
 
 # ---------------------------------------------------------------------------

@@ -429,6 +429,96 @@ def test_kernel_impl_interpret_route_fused():
     _assert_tables_equal(got, legacy, "interpret-routes+fusion")
 
 
+# ---------------------------------------------------------------------------
+#  fault tolerance: under any seeded plan of TRANSIENT faults the retried
+#  run produces byte-identical sink output to the fault-free run — chunk
+#  replay, run-level replay, edge faults and arena degradation all covered,
+#  fused and unfused, both backends via REPRO_BACKEND
+# ---------------------------------------------------------------------------
+@st.composite
+def fault_rules(draw):
+    """1-3 transient single-fire rules.  Component is left None (fusion
+    renames components, and the property must hold wherever the fault
+    lands); per-rule count=1 keeps the worst-case failures at one dispatch
+    (all rules hitting the same chunk) within the default REPRO_RETRY_MAX."""
+    n = draw(st.integers(1, 3))
+    rules = []
+    for _ in range(n):
+        rules.append(dict(
+            site=draw(st.sampled_from(["chunk", "chunk", "kernel", "edge",
+                                       "arena"])),
+            kind="transient", count=1,
+            after=draw(st.integers(0, 4)),
+            split=draw(st.sampled_from([None, None, 0, 1]))))
+    return rules
+
+
+def _assert_fault_tolerant(spec, rule_kws, fuse):
+    import os
+
+    from repro.core import faults
+    _, num_splits, _ = spec
+    flow_b, sink_b = build_flow(spec)
+    StreamingEngine(flow_b, OptimizeOptions(num_splits=num_splits,
+                                            fuse_segments=fuse)).run()
+    baseline = sink_b.result()
+
+    saved = os.environ.get(config.ENV_RETRY_BACKOFF)
+    os.environ[config.ENV_RETRY_BACKOFF] = "0.001"
+    # the exact-attribution assertion below needs OUR plan to be the only
+    # fault source — drop any ambient plan (the CI chaos leg exports one)
+    saved_faults = os.environ.pop(config.ENV_FAULTS, None)
+    try:
+        plan = faults.FaultPlan([faults.FaultRule(**kw) for kw in rule_kws],
+                                seed=1)
+        flow_f, sink_f = build_flow(spec)
+        with faults.fault_scope(plan):
+            run = StreamingEngine(flow_f, OptimizeOptions(
+                num_splits=num_splits, fuse_segments=fuse)).run()
+        faulty = sink_f.result()
+    finally:
+        if saved is None:
+            os.environ.pop(config.ENV_RETRY_BACKOFF, None)
+        else:
+            os.environ[config.ENV_RETRY_BACKOFF] = saved
+        if saved_faults is not None:
+            os.environ[config.ENV_FAULTS] = saved_faults
+    label = f"spec={spec} rules={rule_kws} fuse={fuse}"
+    assert set(faulty) == set(baseline), f"{label}: column sets differ"
+    for k in baseline:
+        assert faulty[k].dtype == baseline[k].dtype, \
+            f"{label}: dtype of {k} differs"
+        np.testing.assert_array_equal(
+            faulty[k], baseline[k],
+            err_msg=f"{label}: column {k} differs under fault plan")
+    # every fired rule is attributed to the run's counters
+    assert run.faults_injected == plan.injected, label
+
+
+@given(flow_spec(), fault_rules(), st.sampled_from([True, False]))
+@settings(max_examples=max(N_EXAMPLES // 4, 10), deadline=None)
+def test_transient_fault_plans_byte_identical(spec, rule_kws, fuse):
+    """For every generated DAG and every seeded transient fault plan, the
+    retried/degraded run's sink output is byte-identical to fault-free."""
+    _assert_fault_tolerant(spec, rule_kws, fuse)
+
+
+def test_fault_plan_run_level_replay_deterministic():
+    """Source + accumulate + edge faults all escalate to run-level replay
+    (none is replay_safe); the rerun is byte-identical — a deterministic
+    shape the generator rarely lands on exactly."""
+    spec = (7, 4, [("lookup", 3, 0, True),
+                   ("expr", 3, 4, False),
+                   ("boundary",),
+                   ("filter", 4, 30, True),
+                   ("agg", 2, 5, "sum"),
+                   ("sort", 0)])
+    rules = [dict(site="chunk", kind="transient", count=1, after=0),
+             dict(site="edge", kind="transient", count=1),
+             dict(site="chunk", kind="transient", count=1, after=7)]
+    _assert_fault_tolerant(spec, rules, fuse=True)
+
+
 def test_dsl_flows_report_no_undeclared_refusals(ssb_dsl_data):
     """On DSL-built SSB flows the cost-based optimizer never refuses a
     rewrite for an undeclared read/write set (provenance is derived from
