@@ -42,7 +42,7 @@ import traceback
 from . import (backend_compare, dsl_compare, fig12_pipeline_speedup,
                fig13_cpu_usage, fig14_multithreading, fig15_optimization,
                fig16_fig17_vs_kettle, fusion, kernel_bench, optimizer,
-               roofline, serving, streaming, theorem1_accuracy)
+               roofline, serving, sharding, streaming, theorem1_accuracy)
 
 SECTIONS = {
     "fig12": fig12_pipeline_speedup.run,
@@ -58,12 +58,13 @@ SECTIONS = {
     "optimizer": optimizer.run,
     "fusion": fusion.run,
     "dsl": dsl_compare.run,
+    "sharding": sharding.run,
     "roofline": lambda: roofline.run("16x16") + roofline.run("2x16x16"),
 }
 
 SMOKE_FLOWS = ("Q1.1", "Q2.1", "Q4.1", "Q4.1s")
 SMOKE_PARTS = ("engines", "backend", "optimizer", "fusion", "dsl", "kernels",
-               "serving")
+               "serving", "sharding")
 
 
 # ---------------------------------------------------------------------------
@@ -247,6 +248,9 @@ def smoke(parts=None) -> int:
         # and zero dim-table h2d re-uploads; replayed deltas byte-identical
         # to the one-shot batch run
         "serving": lambda: serving.smoke(data),
+        # sharded execution: byte-identity at shards 1/2/4 on the
+        # configured route, merge-span presence, scatter-not-broadcast
+        "sharding": lambda: sharding.smoke(data),
     }
     failures = 0
     records = {}

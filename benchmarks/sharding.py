@@ -1,0 +1,189 @@
+"""Sharded execution benchmark + CI smoke part.
+
+    PYTHONPATH=src python -m benchmarks.sharding          # shards sweep
+    PYTHONPATH=src python -m benchmarks.run --smoke sharding
+
+Sweeps Q4.1 over shard counts on the configured route (``REPRO_SHARD_IMPL``
+— the CI sharding leg pins ``process``) and reports rows/s per shard count.
+The smoke part enforces:
+
+  * byte-identity: every sharded run's sink table equals the serial run's,
+    column for column, dtype for dtype, row for row;
+  * the merge phase actually ran (a ``shard-merge`` span plus one
+    ``shard-k`` span per shard in the trace);
+  * scatter, not broadcast: no worker is ever shipped the full source
+    table (``scatter_bytes`` strictly below ``source_bytes``), and the
+    shuffle volume (stashed partials) stays below the source volume.
+
+Per-shard-count throughput and row layout go into the bench JSON under the
+section's ``shards`` field — bench_diff gates only ``status`` /
+``cache_stats`` / ``counters``, so these timing-dependent extras ride along
+ungated, tracking the trajectory without flaking CI.
+"""
+from __future__ import annotations
+
+import time
+import traceback
+
+import numpy as np
+
+SHARD_COUNTS = (1, 2, 4)
+
+
+def _serial(qname, data, num_splits=4):
+    from repro.core import OptimizeOptions, StreamingEngine
+    from repro.etl import BUILDERS
+    qf = BUILDERS[qname](data)
+    run = StreamingEngine(qf.flow,
+                          OptimizeOptions(num_splits=num_splits,
+                                          shards=1)).run()
+    return run, qf.sink.result()
+
+
+def _sharded(qname, data, shards, num_splits=4, tracer=None):
+    from repro.core import OptimizeOptions, StreamingEngine
+    from repro.etl import BUILDERS
+    from repro.obs import trace as obs_trace
+    qf = BUILDERS[qname](data)
+    scope = (obs_trace.trace_scope(tracer) if tracer is not None
+             else _null())
+    with scope:
+        run = StreamingEngine(qf.flow, OptimizeOptions(
+            num_splits=num_splits, shards=shards)).run()
+    return run, qf.sink.result()
+
+
+def _null():
+    from contextlib import nullcontext
+    return nullcontext()
+
+
+def _assert_identical(got, want, label):
+    assert set(got) == set(want), f"{label}: column sets differ"
+    for k in want:
+        assert got[k].dtype == want[k].dtype, f"{label}: dtype of {k}"
+        np.testing.assert_array_equal(got[k], want[k],
+                                      err_msg=f"{label}: column {k}")
+
+
+def _shard_result(qname, data, shards, num_splits=4):
+    """Run the ShardRunner directly to surface the ShardResult the engine
+    folds away — the scatter/shuffle byte accounting under test."""
+    from repro.core import (OptimizeOptions, partition, plan_runtime,
+                            plan_shards, resolve_backend)
+    from repro.core.engine import _assign_backend
+    from repro.core.shard import ShardRunner
+    from repro.etl import BUILDERS
+    qf = BUILDERS[qname](data)
+    opts = OptimizeOptions(num_splits=num_splits, shards=shards)
+    bk = resolve_backend(opts.backend)
+    _assign_backend(qf.flow, bk)
+    g_tau = partition(qf.flow)
+    rplan = plan_runtime(qf.flow, g_tau, num_splits=num_splits,
+                         m_prime=num_splits, backend=bk)
+    plan = plan_shards(qf.flow, g_tau, shards, "inline", opts, bk)
+    assert plan is not None, f"{qname}: plan_shards degraded to serial"
+    res = ShardRunner(qf.flow, g_tau, opts, rplan, plan).execute()
+    return res, qf.sink.result()
+
+
+# ---------------------------------------------------------------------------
+#  CI smoke part
+# ---------------------------------------------------------------------------
+def smoke(data):
+    """CI part: sharded Q4.1 byte-identity at shards in {1,2,4} on the
+    configured route, merge-span presence, and the no-broadcast guarantee.
+    Returns ``(failures, extras)``; extras carries per-shard-count rows/s
+    (the gate-ignored ``shards`` field of the bench record)."""
+    from repro.obs import trace as obs_trace
+
+    failures = 0
+    extras = {"shards": {}}
+    rows = len(next(iter(data.lineorder.values())))
+    try:
+        _, baseline = _serial("Q4.1", data)
+    except Exception:
+        traceback.print_exc()
+        print("smoke.sharding,serial,FAIL")
+        return 1, extras
+
+    for s in SHARD_COUNTS:
+        tracer = obs_trace.Tracer(name=f"sharding-{s}", measuring=False)
+        t0 = time.time()
+        try:
+            run, got = _sharded("Q4.1", data, s, tracer=tracer)
+            wall = time.time() - t0
+            _assert_identical(got, baseline, f"Q4.1 shards={s}")
+            assert run.shards == s, \
+                f"shards={s}: run degraded to {run.shards}"
+            names = [e.get("name") for e in tracer.events]
+            if s > 1:
+                assert sum(run.shard_rows) == rows, \
+                    f"shards={s}: shard_rows {run.shard_rows} != {rows}"
+                assert "shard-merge" in names, \
+                    f"shards={s}: no shard-merge span in trace"
+                for k in range(s):
+                    assert f"shard-{k}" in names, \
+                        f"shards={s}: no shard-{k} span in trace"
+        except Exception:
+            traceback.print_exc()
+            failures += 1
+            print(f"smoke.sharding,shards={s},FAIL")
+            continue
+        extras["shards"][str(s)] = {
+            "wall_s": round(wall, 4),
+            "rows_per_s": round(rows / wall) if wall > 0 else None,
+            "shard_rows": list(run.shard_rows),
+        }
+        print(f"smoke.sharding,shards={s},rows_ok,"
+              f"rows_per_s={extras['shards'][str(s)]['rows_per_s']}")
+
+    # scatter-not-broadcast: each worker receives only its partition and
+    # the coordinator receives partials, never the full table
+    try:
+        res, got = _shard_result("Q4.1", data, 2)
+        _assert_identical(got, baseline, "Q4.1 runner shards=2")
+        assert res.scatter_bytes < res.source_bytes, \
+            (f"full-table broadcast: scatter {res.scatter_bytes} !< "
+             f"source {res.source_bytes}")
+        assert res.shuffle_bytes < res.source_bytes, \
+            (f"shuffle {res.shuffle_bytes} !< source {res.source_bytes}")
+        extras["shards"]["scatter_bytes"] = res.scatter_bytes
+        extras["shards"]["source_bytes"] = res.source_bytes
+        extras["shards"]["shuffle_bytes"] = res.shuffle_bytes
+        print(f"smoke.sharding,scatter_ok,scatter={res.scatter_bytes},"
+              f"source={res.source_bytes},shuffle={res.shuffle_bytes}")
+    except Exception:
+        traceback.print_exc()
+        failures += 1
+        print("smoke.sharding,scatter,FAIL")
+    return failures, extras
+
+
+# ---------------------------------------------------------------------------
+#  Full bench: shards sweep at BENCH_ROWS
+# ---------------------------------------------------------------------------
+def run() -> list:
+    from .common import BENCH_REPEATS, emit, ssb_data
+
+    data = ssb_data()
+    rows = len(next(iter(data.lineorder.values())))
+    out = ["# sharding: Q4.1 rows/s by shard count "
+           "(route per REPRO_SHARD_IMPL)",
+           "query,shards,wall_s,rows_per_s"]
+    _, baseline = _serial("Q4.1", data)
+    for s in SHARD_COUNTS + (8,):
+        best = None
+        for _ in range(BENCH_REPEATS):
+            t0 = time.time()
+            run_, got = _sharded("Q4.1", data, s)
+            wall = time.time() - t0
+            _assert_identical(got, baseline, f"Q4.1 shards={s}")
+            best = wall if best is None else min(best, wall)
+        out.append(f"Q4.1,{s},{best:.4f},{rows / best:.0f}")
+    emit(out)
+    return out
+
+
+if __name__ == "__main__":
+    raise SystemExit(0 if isinstance(run(), list) else 1)

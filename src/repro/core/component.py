@@ -75,6 +75,13 @@ class Component:
     #: by run-level replay) — must keep False; their transient failures
     #: escalate to run-level retry instead.
     replay_safe: bool = True
+    #: sharded-execution role, set by the shard runtime for the duration of a
+    #: sharded run on first-layer block/semi-block cut components only:
+    #: ``"partial"`` — finish() is intercepted to stash a per-shard partial
+    #: and emit an empty schema-shaped cache; ``"merge"`` — finish() combines
+    #: the stashed partials into the exact serial result.  ``None`` (the
+    #: default) leaves finish() untouched.
+    shard_role: Optional[str] = None
 
     def __init__(self, name: str):
         self.name = name
@@ -203,6 +210,23 @@ class Component:
         """Metadata-store component specification."""
         return {"name": self.name, "type": self.ctype.value,
                 "class": type(self).__name__}
+
+    # --------------------------------------------------------------- pickling
+    # The process shard route ships whole flows to spawned workers.  Locks
+    # and backends don't pickle; both are reconstructed on load (the worker
+    # re-resolves the backend from its own environment).
+    _UNPICKLABLE = ("cond", "backend", "_shard_ctx")
+
+    def __getstate__(self):
+        state = dict(self.__dict__)
+        for k in self._UNPICKLABLE:
+            state.pop(k, None)
+        return state
+
+    def __setstate__(self, state):
+        self.__dict__.update(state)
+        self.cond = threading.Condition()
+        self.backend = None
 
     def __repr__(self) -> str:
         return f"{type(self).__name__}({self.name!r})"

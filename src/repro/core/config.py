@@ -31,6 +31,8 @@ Every setting also has a first-class API equivalent (see the README table):
     REPRO_RETRY_MAX      core.faults.retry_call(max_retries=...)
     REPRO_RETRY_BACKOFF  core.faults.retry_call(backoff=...)
     REPRO_DEGRADE        debug only (disables the degradation ladders)
+    REPRO_SHARDS         OptimizeOptions(shards=...) / Session.run(shards=...)
+    REPRO_SHARD_IMPL     OptimizeOptions(shard_impl=...)
 """
 from __future__ import annotations
 
@@ -96,6 +98,17 @@ ENV_RETRY_BACKOFF = "REPRO_RETRY_BACKOFF"
 #: "0" disables the graceful-degradation ladders (failing kernels/segments
 #: then abort instead of falling back to slower routes)
 ENV_DEGRADE = "REPRO_DEGRADE"
+#: shard count for the OptimizedEngine/StreamingEngine sharded-execution
+#: route when ``OptimizeOptions.shards`` is unset: 1 (default) runs the
+#: serial path, N>1 hash/range-partitions sources across N shards, 0 lets
+#: the ShardPlanner choose from calibration stats
+ENV_SHARDS = "REPRO_SHARDS"
+#: sharded-execution implementation route: "auto" (mesh when the backend is
+#: jax, else inline), "process" (spawned worker processes running pickled
+#: per-shard flows), "mesh" (jax ``shard_map`` partial merge over a
+#: data-axis host mesh), or "inline" (sequential in-process shard passes —
+#: the always-available correctness route)
+ENV_SHARD_IMPL = "REPRO_SHARD_IMPL"
 
 DEFAULT_TRACE_PATH = "repro_trace.json"
 DEFAULT_TRACE_MAX_EVENTS = 200_000
@@ -110,6 +123,7 @@ DEFAULT_OPTEQ_EXAMPLES = 100
 FLOW_STYLES = ("dsl", "lambda")
 JOIN_IMPLS = ("auto", "pallas", "interpret", "reference", "searchsorted")
 GROUPBY_IMPLS = ("auto", "pallas", "interpret", "reference", "sort")
+SHARD_IMPLS = ("auto", "process", "mesh", "inline")
 
 
 def _raw(name: str) -> Optional[str]:
@@ -265,6 +279,27 @@ def degrade_enabled() -> bool:
     return _raw(ENV_DEGRADE) != "0"
 
 
+def shards() -> int:
+    """Shard count when ``OptimizeOptions.shards`` is unset
+    (``REPRO_SHARDS``, default 1 = serial; 0 = planner-chosen)."""
+    v = _raw(ENV_SHARDS)
+    n = int(v) if v is not None else 1
+    if n < 0:
+        raise ValueError(f"{ENV_SHARDS}={v!r} must be >= 0")
+    return n
+
+
+def shard_impl() -> str:
+    """Sharded-execution route when ``OptimizeOptions.shard_impl`` is unset
+    (``REPRO_SHARD_IMPL``, default "auto")."""
+    v = _raw(ENV_SHARD_IMPL) or "auto"
+    if v not in SHARD_IMPLS:
+        raise ValueError(
+            f"{ENV_SHARD_IMPL}={v!r} is not a valid shard impl; "
+            f"expected one of {SHARD_IMPLS}")
+    return v
+
+
 def snapshot() -> Dict[str, object]:
     """Every setting's effective value — recorded in benchmark JSON so a
     run's configuration is reconstructable."""
@@ -288,4 +323,6 @@ def snapshot() -> Dict[str, object]:
         "retry_max": retry_max(),
         "retry_backoff": retry_backoff(),
         "degrade": degrade_enabled(),
+        "shards": shards(),
+        "shard_impl": shard_impl(),
     }

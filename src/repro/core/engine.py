@@ -74,6 +74,10 @@ class EngineRun:
     faults_injected: int = 0
     #: per-fallback detail (core.faults.Degradation.spec() dicts)
     degradation_events: List[Dict[str, object]] = field(default_factory=list)
+    #: sharded execution (core/shard): shard count the run actually used
+    #: (1 = serial) and the source rows each shard processed
+    shards: int = 1
+    shard_rows: List[int] = field(default_factory=list)
     # adaptive path (optimize_level=2): graph rewrites applied before the run
     rewrites: List[Dict[str, str]] = field(default_factory=list)
     # rewrites the optimizer REFUSED for safety (with reasons) — refusals
@@ -108,6 +112,8 @@ class EngineRun:
         if self.retries or self.degradations or self.faults_injected:
             s += (f" faults={self.faults_injected} retries={self.retries} "
                   f"degradations={self.degradations}")
+        if self.shards > 1:
+            s += f" shards={self.shards}"
         return s
 
     def spec(self) -> dict:
@@ -127,6 +133,8 @@ class EngineRun:
                 "retries": self.retries,
                 "degradations": self.degradations,
                 "faults_injected": self.faults_injected,
+                "shards": self.shards,
+                "shard_rows": list(self.shard_rows),
                 "degradation_events": list(self.degradation_events),
                 "rewrites": list(self.rewrites),
                 "refusals": list(self.refusals),
@@ -299,6 +307,15 @@ class OptimizeOptions:
     #: compiled-kernel activities (optimizer.fuse_segments_flow).  None =>
     #: follow the REPRO_FUSION env var; applies at every optimize level.
     fuse_segments: Optional[bool] = None
+    #: sharded execution (core/shard): partition the source rows over N
+    #: shards, run the full per-shard flow, merge partials once at the
+    #: coordinator — sinks stay byte-identical to serial.  None => follow
+    #: REPRO_SHARDS (default 1 = serial); 0 = auto-pick from calibration
+    #: signals (planner.choose_shards).
+    shards: Optional[int] = None
+    #: shard worker route: "auto" | "process" | "mesh" | "inline".  None =>
+    #: follow REPRO_SHARD_IMPL (default "auto").
+    shard_impl: Optional[str] = None
 
     def fusion_enabled(self) -> bool:
         if self.fuse_segments is not None:
@@ -432,31 +449,56 @@ class OptimizedEngine:
             # fresh executor after the flow's transient state is reset.
             # The stats scope / tracer / span stay OUTSIDE the loop so
             # retry counters and failed-attempt work attribute to this run.
+            sres = None
             attempt, delay = 0, config.retry_backoff()
             with cache_stats_scope() as stats, obs_trace.measured(tracer), \
                     obs_trace.span("phase", "execute"), \
                     faults.fault_recorder() as frec:
-                while True:
-                    executor = StreamingExecutor(self.flow, self.g_tau, opts,
-                                                 self.runtime_plan)
-                    try:
-                        executor.execute()
-                        break
-                    except BaseException as e:
-                        if (faults.classify(e) != "transient"
-                                or attempt >= config.retry_max()):
-                            raise
-                        faults.record_retry(f"run.{self.flow.name}",
-                                            attempt, delay)
-                        self._reset_for_retry()
-                        if delay > 0.0:
-                            time.sleep(delay)
-                        delay = min(delay * 2.0 if delay else 0.0,
-                                    faults.RETRY_BACKOFF_CAP_S)
-                        attempt += 1
-                    finally:
-                        pool_stats = executor.pool.stats()
-                        executor.shutdown()
+                n_shards = (opts.shards if opts.shards is not None
+                            else config.shards())
+                if n_shards != 1:
+                    # planned inside the run's scopes so a shard_plan
+                    # degradation (unshardable flow) attributes to this run
+                    from .shard import plan_shards
+                    shard_plan = plan_shards(
+                        self.flow, self.g_tau, n_shards,
+                        opts.shard_impl or config.shard_impl(), opts, bk)
+                else:
+                    shard_plan = None
+                if shard_plan is not None:
+                    # sharded path: per-shard transient replay (inside the
+                    # runner) supersedes run-level retry
+                    from .shard import ShardRunner
+                    sres = ShardRunner(self.flow, self.g_tau, opts,
+                                       self.runtime_plan, shard_plan,
+                                       tracer=tracer).execute()
+                    pool_stats = sres.pool_stats
+                    streamed_edges = sres.streamed_edges
+                    channel_hwm = sres.channel_hwm
+                else:
+                    while True:
+                        executor = StreamingExecutor(self.flow, self.g_tau,
+                                                     opts, self.runtime_plan)
+                        try:
+                            executor.execute()
+                            break
+                        except BaseException as e:
+                            if (faults.classify(e) != "transient"
+                                    or attempt >= config.retry_max()):
+                                raise
+                            faults.record_retry(f"run.{self.flow.name}",
+                                                attempt, delay)
+                            self._reset_for_retry()
+                            if delay > 0.0:
+                                time.sleep(delay)
+                            delay = min(delay * 2.0 if delay else 0.0,
+                                        faults.RETRY_BACKOFF_CAP_S)
+                            attempt += 1
+                        finally:
+                            pool_stats = executor.pool.stats()
+                            executor.shutdown()
+                    streamed_edges = list(executor.streamed_edges)
+                    channel_hwm = executor.channel_hwm()
             wall = time.perf_counter() - t_start
             run = EngineRun(
                 wall_time=wall, copies=0, bytes_copied=0,
@@ -467,14 +509,25 @@ class OptimizedEngine:
                                 for n, c in self.flow.vertices.items()},
                 trees=[list(t.members) for t in self.g_tau.trees],
                 runtime_plan=self.runtime_plan,
-                streamed_edges=list(executor.streamed_edges),
+                streamed_edges=streamed_edges,
                 pool_stats=pool_stats,
                 degradation_events=[d.spec() for d in frec.degradations],
                 rewrites=[r.spec() for r in rewrites],
                 refusals=[r.spec() for r in refusals])
-            _run_counters(run, stats.snapshot())
+            snap = stats.snapshot()
+            if sres is not None:
+                # process-route worker counters were already absorbed into
+                # this scope (shared_cache.absorb_external), so snap equals
+                # the exact sum over all shards on every route
+                run.shards = sres.shards
+                run.shard_rows = list(sres.shard_rows)
+                # dispatch counts live on Component.calls; process-route
+                # shard passes ran on worker flow copies, so fold their
+                # shipped totals in — inline passes already hit self.flow
+                run.dispatch_calls += sres.worker_dispatch
+            _run_counters(run, snap)
             _finish_obs(tracer, run, pool_stats=pool_stats,
-                        channel_hwm=executor.channel_hwm())
+                        channel_hwm=channel_hwm)
             if self.metadata is not None:
                 self.metadata.register_run(self.flow, run)
         return run
@@ -556,6 +609,12 @@ class ServingEngine:
                 "serve() supports optimize_level<=1: the adaptive optimizer "
                 "calibrates on a bounded source prefix, which an unbounded "
                 "ticking source does not have")
+        if opts.shards is not None and opts.shards > 1:
+            # explicit request only — ambient REPRO_SHARDS is ignored here,
+            # since the resident tick loop is already incremental and the
+            # multi-pass shard protocol assumes a bounded batch input
+            raise ValueError("serve() does not support sharded execution; "
+                             "drop shards= for serving sessions")
         self.flow.validate()
         self.flow.reset_stats()
         bk = self.backend = resolve_backend(opts.backend)

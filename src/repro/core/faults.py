@@ -35,6 +35,8 @@ The fault-tolerance layer has three moving parts, all defined here:
    ``arena``  ``CacheArena.acquire`` — a fired rule simulates over-budget:
               the arena degrades to direct allocation instead of raising
    ``tick``   one ``ServeSession.tick`` micro-batch
+   ``shard``  one whole shard pass of a sharded run — the coordinator
+              replays the lost shard from its source snapshot
    =========  ==============================================================
 
    Spec grammar (``REPRO_FAULTS`` or ``FaultPlan.parse``)::
@@ -90,7 +92,7 @@ __all__ = [
 RETRY_BACKOFF_CAP_S = 2.0
 
 #: valid injection sites (see module docstring table)
-SITES = ("chunk", "kernel", "edge", "arena", "tick")
+SITES = ("chunk", "kernel", "edge", "arena", "tick", "shard")
 
 KINDS = ("transient", "permanent", "poison")
 

@@ -14,7 +14,8 @@ from .partitioner import ExecutionTreeGraph
 #: coercion applied on import (everything is a string in XML)
 _RUN_INT_FIELDS = ("copies", "bytes_copied", "h2d_transfers", "h2d_bytes",
                    "d2h_transfers", "d2h_bytes", "dispatch_calls",
-                   "arena_hits", "arena_misses", "arena_bytes_reused")
+                   "arena_hits", "arena_misses", "arena_bytes_reused",
+                   "shards")
 _RUN_FLOAT_FIELDS = ("wall_time",)
 _RUN_STR_FIELDS = ("engine", "backend", "run_id", "created", "git_sha",
                    "trace_file")
@@ -127,6 +128,10 @@ class MetadataStore:
                 v = spec.get(k)
                 if v is not None:       # None (e.g. no git repo) => omitted
                     attrib[k] = str(v)
+            if spec.get("shard_rows"):
+                # per-shard source row counts of a sharded run
+                attrib["shard_rows"] = ",".join(
+                    str(n) for n in spec["shard_rows"])
             r = ET.SubElement(runs, "run", attrib=attrib)
             for rw in spec.get("rewrites", []):
                 ET.SubElement(r, "rewrite",
@@ -172,6 +177,9 @@ class MetadataStore:
             for k in _RUN_FLOAT_FIELDS:
                 if k in r.attrib:
                     spec[k] = float(r.attrib[k])
+            if "shard_rows" in r.attrib:
+                spec["shard_rows"] = [int(n) for n in
+                                      r.attrib["shard_rows"].split(",")]
             spec.setdefault("git_sha", None)
             spec.setdefault("trace_file", None)
             spec["rewrites"] = [dict(ch.attrib) for ch in r

@@ -534,6 +534,18 @@ def _all_stats():
     return (GLOBAL_CACHE_STATS,) + _STATS_SCOPES.get()
 
 
+def absorb_external(snap: dict) -> None:
+    """Fold a ``CacheStats.snapshot()`` measured in another process (a
+    process-route shard worker) into the global collector and every active
+    scope, so child-process copies/transfers stay visible to run- and
+    benchmark-level attribution exactly as in-process work does."""
+    for s in _all_stats():
+        with s._lock:
+            for k, v in snap.items():
+                if v:
+                    setattr(s, k, getattr(s, k) + int(v))
+
+
 def record_copy(cache: SharedCache) -> None:
     """Record one physical cache copy in the global and scoped collectors
     (and, under an active trace scope, as an ``obs`` event + metric)."""

@@ -246,6 +246,14 @@ class DimTable:
             if len(self.keys) else np.zeros(len(vals), dtype=bool)
         return idx, matched
 
+    def __getstate__(self):
+        # the jax backend caches device arrays on the instance; they don't
+        # pickle (process shard route) and rebuild lazily in the worker
+        state = dict(self.__dict__)
+        state.pop("_jax_device_cache", None)
+        state.pop("_jax_hash_cache", None)
+        return state
+
 
 class Lookup(RowSyncMT):
     """Join with a dimension table; unmatched rows get ``default`` (-1) in
@@ -445,6 +453,13 @@ class FusedSegment(Component):
         #: compact and emit the keep-mask as a SEGMENT_KEEP_MASK column.
         self.defer_cols: Optional[frozenset] = None
         self.defer_to: Optional[str] = None
+
+    # compiled runners are per-process (process shard route); rebuilt lazily
+    _UNPICKLABLE = Component._UNPICKLABLE + ("_compiled",)
+
+    def __setstate__(self, state):
+        super().__setstate__(state)
+        self._compiled = {}
 
     @classmethod
     def from_components(cls, comps: Sequence[Component]) -> "FusedSegment":
@@ -861,6 +876,91 @@ class Aggregate(BlockComponent):
         self.rows_out += n_groups
         return SharedCache(cols, n_groups)
 
+    # ------------------------------------------------------------ sharded
+    # The shard runtime's partial→shuffle→merge decomposition reuses the
+    # serving partial plan: each shard reduces its rows to per-group
+    # MERGEABLE partials (avg → sum+count), the coordinator second-stage
+    # reduces the stashed partial tables (value partials with their own op,
+    # count partials by summing) in each partial's stage-1 dtype, and avg
+    # divides once at emit — the identical single-rounding arithmetic the
+    # serial one-shot reduce performs on exactly-representable data.
+
+    def shard_partial(self, state: List[SharedCache]) -> Optional[dict]:
+        """Reduce one shard pass's accumulated input to a host partial
+        table ``{group col / partial name: np.ndarray}``; ``None`` when the
+        shard delivered no rows (nothing to merge)."""
+        merged = concat_caches(state, ordered=True, recycle_inputs=True)
+        if SEGMENT_KEEP_MASK in merged.names:
+            # same deferred-keep-mask compaction as finish(): one d2h sync
+            mask = merged.col(SEGMENT_KEEP_MASK)
+            merged.keep_columns(
+                [c for c in merged.names if c != SEGMENT_KEEP_MASK])
+            merged.compact(mask)
+        n = merged.n
+        if n == 0:
+            merged.recycle()
+            return None
+        plan = self._partial_plan()
+        bk = self.get_backend()
+        group_cols, part_cols = bk.groupby_reduce(
+            [merged.col(g) for g in self.group_by],
+            {p: (merged.col(col), op) for p, (col, op) in plan.items()},
+            n)
+        table = {g: np.asarray(bk.to_host(c))
+                 for g, c in zip(self.group_by, group_cols)}
+        for p, c in part_cols.items():
+            table[p] = np.asarray(bk.to_host(c))
+        merged.recycle()
+        return table
+
+    def shard_empty(self) -> SharedCache:
+        """Schema-shaped empty output a shard pass emits downstream — the
+        same dtype conventions as the batch empty path."""
+        cols = {g: np.array([], dtype=np.int64) for g in self.group_by}
+        for out in self.aggs:
+            cols[out] = np.array([], dtype=np.float64)
+        return SharedCache(cols, 0)
+
+    def shard_merge(self, state: List[SharedCache], partials: Sequence[dict],
+                    combiner=None) -> SharedCache:
+        """Coordinator merge: second-stage reduce the stashed per-shard
+        partial tables (plus a partial of any rows the merge pass itself
+        delivered — a cut-ancestored aggregate's real input arrives then)
+        into the exact serial result.  ``combiner`` is the optional mesh
+        route reducer; the host ``reduce_partials`` is the reference."""
+        from ..core.shard.merge import reduce_partials
+        own = self.shard_partial(state)
+        tables = list(partials)
+        if own is not None:
+            tables.append(own)
+        if not tables:
+            return self.shard_empty()
+        plan = self._partial_plan()
+        second = {p: ("sum" if op == "count" else op)
+                  for p, (_, op) in plan.items()}
+        cat = {c: np.concatenate([np.asarray(t[c]) for t in tables])
+               for c in (*self.group_by, *plan)}
+        merged = combiner(cat, self.group_by, second) \
+            if combiner is not None else None
+        if merged is None:
+            merged = reduce_partials(cat, self.group_by, second)
+        group_cols, part_cols = merged
+        cols = dict(zip(self.group_by, group_cols))
+        for out, (col, op) in self.aggs.items():
+            if op == "avg":
+                s = part_cols[out + _PARTIAL_SEP + "sum"]
+                cnt = part_cols[out + _PARTIAL_SEP + "count"]
+                # divide in the sum's dtype — same single rounding as the
+                # one-shot kernel (and as _serving_finish's emit)
+                vals = [s[i] / s[i].dtype.type(cnt[i]) for i in range(len(s))]
+                cols[out] = (np.array(vals, dtype=vals[0].dtype) if vals
+                             else np.array([], dtype=np.float64))
+            else:
+                cols[out] = part_cols[out]
+        n_groups = len(next(iter(cols.values()))) if cols else 1
+        self.rows_out += n_groups
+        return SharedCache(cols, n_groups)
+
 
 class Sort(BlockComponent):
     """Total sort — block component (needs all rows)."""
@@ -957,6 +1057,25 @@ class CollectSink(SinkComponent):
     def clear(self) -> None:
         with self._lock:
             self._buf.clear()
+
+    # ------------------------------------------------------------ sharded
+    def drain(self) -> List[SharedCache]:
+        """Take the buffered caches (the shard runtime harvests each shard
+        pass's writes, then reassembles the serial buffer via reinject)."""
+        with self._lock:
+            buf, self._buf = self._buf, []
+            return buf
+
+    def reinject(self, caches: List[SharedCache]) -> None:
+        with self._lock:
+            self._buf.extend(caches)
+
+    # locks don't pickle (process shard route); rebuilt on load
+    _UNPICKLABLE = SinkComponent._UNPICKLABLE + ("_lock",)
+
+    def __setstate__(self, state):
+        super().__setstate__(state)
+        self._lock = threading.Lock()
 
 
 class FileSink(CollectSink):

@@ -31,15 +31,23 @@ def make_production_mesh(*, multi_pod: bool = False):
                          **axis_types_kwargs(len(axes)))
 
 
-def make_host_mesh(data: int = 1, model: int = 1):
-    """Small mesh over however many local devices exist (tests/examples)."""
-    n = len(jax.devices())
-    if data * model > n:
-        raise ValueError(f"need {data*model} devices, have {n}")
-    from .jax_compat import axis_types_kwargs
-    return jax.make_mesh((data, model), ("data", "model"),
-                         devices=jax.devices()[: data * model],
-                         **axis_types_kwargs(2))
+def make_host_mesh(data: int = 1, model: Optional[int] = 1):
+    """Small mesh over however many local devices exist (tests/examples).
+
+    ``model=None`` builds a data-only 1-axis ``(data,)`` mesh — the shape the
+    sharded-execution mesh route needs on single-device CPU CI, where asking
+    for a phantom model axis would double the device requirement."""
+    from .jax_compat import make_mesh
+    if model is None:
+        shape, axes = (data,), ("data",)
+    else:
+        shape, axes = (data, model), ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    if n > len(jax.devices()):
+        raise ValueError(f"need {n} devices, have {len(jax.devices())}")
+    return make_mesh(shape, axes, devices=jax.devices()[:n])
 
 
 # TPU v5e hardware constants (roofline denominators)

@@ -125,6 +125,9 @@ class Tracer:
         self.max_events = (config.trace_max_events()
                            if max_events is None else max(0, int(max_events)))
         self.dropped_events = 0
+        #: per-shard sub-tracers of a sharded run (core/shard): each exports
+        #: as its own shard-tagged Perfetto process next to the parent run
+        self.shard_tracers: List["Tracer"] = []
 
     def emit(self, ph: str, cat: str, name: str, ts_us: float,
              dur_us: Optional[float] = None,
@@ -483,11 +486,23 @@ class _TraceFile:
                        and sum(len(tr.events) for tr in self._runs) > cap):
                     self._runs.pop(0)
                     self.rotated_runs += 1
+            # flatten per-shard sub-tracers next to their run so each shard
+            # renders as its own Perfetto process
+            flat: List[Tracer] = []
+            for tr in self._runs:
+                flat.append(tr)
+                for sub in tr.shard_tracers:
+                    # run-level meta (run_id, git_sha, ...) is attached to
+                    # the parent at export time — after the sub-tracers
+                    # copied it — so inherit whatever they are missing
+                    for mk, mv in tr.meta.items():
+                        sub.meta.setdefault(mk, mv)
+                    flat.append(sub)
             events: List[dict] = []
-            for pid, tr in enumerate(self._runs, start=1):
+            for pid, tr in enumerate(flat, start=1):
                 events.extend(tr.to_chrome(pid=pid))
             runs_meta = [dict(tr.meta, dropped_events=tr.dropped_events)
-                         for tr in self._runs]
+                         for tr in flat]
             rotated = self.rotated_runs
         payload = {
             "traceEvents": events,

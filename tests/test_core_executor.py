@@ -295,7 +295,9 @@ def test_order_sensitive_member_disables_streaming_not_correctness():
     flow.connect(src, cut)
     flow.connect(cut, probe)
     flow.connect(probe, sink)
-    r = StreamingEngine(flow, OptimizeOptions(num_splits=8)).run()
+    # shards=1: split indices renumber per pass in a sharded run, so the
+    # cross-pass monotonicity asserted below is a single-pass property
+    r = StreamingEngine(flow, OptimizeOptions(num_splits=8, shards=1)).run()
     assert r.streamed_edges == []               # fell back to ordered drain
     assert probe.seen == sorted(probe.seen)
     np.testing.assert_array_equal(sink.result()["x"], np.arange(rows))

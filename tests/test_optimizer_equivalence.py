@@ -430,6 +430,68 @@ def test_kernel_impl_interpret_route_fused():
 
 
 # ---------------------------------------------------------------------------
+#  sharded execution: hash/range-partitioned N-shard runs (partial →
+#  shuffle → merge, core/shard) must be byte-identical to the serial run
+#  for every generated DAG — the backend follows REPRO_BACKEND, so the CI
+#  matrix exercises this under both numpy and jax
+# ---------------------------------------------------------------------------
+def _assert_sharded_identical(spec, shards, fuse=False):
+    _, num_splits, _ = spec
+    flow_s, sink_s = build_flow(spec)
+    StreamingEngine(flow_s, OptimizeOptions(num_splits=num_splits,
+                                            fuse_segments=fuse)).run()
+    serial = sink_s.result()
+
+    flow_n, sink_n = build_flow(spec)
+    run = StreamingEngine(flow_n, OptimizeOptions(
+        num_splits=num_splits, fuse_segments=fuse,
+        shards=shards, shard_impl="inline")).run()
+    sharded = sink_n.result()
+
+    label = f"spec={spec} shards={shards} fuse={fuse}"
+    assert set(sharded) == set(serial), f"{label}: column sets differ"
+    for k in serial:
+        assert sharded[k].dtype == serial[k].dtype, \
+            f"{label}: dtype of {k} differs"
+        np.testing.assert_array_equal(
+            sharded[k], serial[k], err_msg=f"{label}: column {k} differs")
+    if run.shards > 1:
+        # every source row lands in exactly one shard
+        assert sum(run.shard_rows) == ROWS, label
+
+
+@given(flow_spec(), st.sampled_from([1, 2, 3]),
+       st.sampled_from([False, True]))
+@settings(max_examples=max(N_EXAMPLES // 4, 10), deadline=None)
+def test_sharded_flow_equivalence(spec, shards, fuse):
+    """For every generated DAG, running partitioned over N shards (N=1 is
+    the serial fast path) produces byte-identical sink output to serial,
+    with and without segment fusion stacked on top."""
+    _assert_sharded_identical(spec, shards, fuse)
+
+
+def test_sharded_equivalence_all_rules_fire_together():
+    """Deterministic shape where lookup/expr/filter/agg/sort all appear —
+    the aggregate is keyed on a source column, so this exercises the HASH
+    partitioning mode (group-disjoint shards)."""
+    spec = (7, 4, [("lookup", 3, 0, True),
+                   ("expr", 3, 4, False),
+                   ("filter", 4, 30, True),
+                   ("agg", 2, 5, "sum"),
+                   ("sort", 0)])
+    _assert_sharded_identical(spec, 3)
+
+
+def test_sharded_equivalence_boundary_and_empty():
+    spec = (11, 2, [("boundary",), ("expr", 0, 3, True), ("boundary",)])
+    _assert_sharded_identical(spec, 2)
+    # two stacked filters can drop every row of a shard
+    spec = (3, 2, [("filter", 3, 10, True), ("filter", 4, 10, True),
+                   ("agg", 1, 2, "count")])
+    _assert_sharded_identical(spec, 3)
+
+
+# ---------------------------------------------------------------------------
 #  fault tolerance: under any seeded plan of TRANSIENT faults the retried
 #  run produces byte-identical sink output to the fault-free run — chunk
 #  replay, run-level replay, edge faults and arena degradation all covered,
